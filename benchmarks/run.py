@@ -1,0 +1,42 @@
+"""Benchmark aggregator: one module per paper table / deliverable.
+
+Prints ``name,us_per_call,derived`` CSV.  Modules:
+  table1_mnv1_resources — paper Table I (MNv1 ours vs [11])
+  table2_mnv2_rates     — paper Table II (MNv2 across 7 data rates)
+  rate_aware_serving    — the technique applied to LM serving (DESIGN §3)
+  kernel_bench          — Pallas kernels vs oracles + tile stats
+  roofline              — 40-cell roofline summary (needs dry-run JSONs)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (kernel_bench, rate_aware_serving,
+                            table1_mnv1_resources, table2_mnv2_rates)
+    from benchmarks import roofline as roofline_mod
+
+    modules = [
+        ("table1", table1_mnv1_resources),
+        ("table2", table2_mnv2_rates),
+        ("rate_aware", rate_aware_serving),
+        ("kernels", kernel_bench),
+        ("roofline", roofline_mod),
+    ]
+    failures = 0
+    for name, mod in modules:
+        try:
+            for row, us, derived in mod.run():
+                print(f"{row},{us:.1f},{derived}")
+        except Exception:
+            failures += 1
+            print(f"{name},0.0,ERROR", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} benchmark modules failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Paper Table I: MobileNetV1 resources, ours vs [11], at equal data rate.
+
+Reproduces the paper's claims from the analytical resource model
+(core/resource_model.py):
+  LUT  -22%  /  BRAM -15%  /  DSP ~parity (-0.5%)  /  FF +7%.
+
+The exact operating point of [11]'s MNv1 build is not published; r = 3
+features/clock (one pixel/clock at the 3-channel input) reproduces the
+DSP count within 7% and every relative claim.  Prints CSV rows:
+name,us_per_call,derived.
+"""
+from __future__ import annotations
+
+import time
+from fractions import Fraction as F
+
+from repro.core import estimate_network, plan_network
+from repro.models.mobilenet import mobilenet_v1_chain
+
+PAPER = {
+    "ours": {"LUT": 158_540, "FF": 603_372, "BRAM36": 1449.5, "URAM": 10,
+             "DSP": 5664},
+    "ref11": {"LUT": 204_931, "FF": 563_255, "BRAM36": 1702.5, "URAM": 0,
+              "DSP": 5691},
+}
+
+
+def run() -> list:
+    chain = mobilenet_v1_chain()
+    rows = []
+    est = {}
+    for scheme in ("ours", "ref11"):
+        t0 = time.perf_counter()
+        impls = plan_network(chain, F(3), scheme=scheme)
+        e = estimate_network(impls).rounded()
+        dt = (time.perf_counter() - t0) * 1e6
+        est[scheme] = e
+        for k in ("LUT", "FF", "BRAM36", "DSP"):
+            paper = PAPER[scheme][k]
+            rows.append((f"table1/{scheme}/{k}", dt,
+                         f"{e[k]} (paper {paper}, "
+                         f"{100 * (e[k] - paper) / paper:+.1f}%)"))
+    # the paper's relative claims
+    for k, claim in (("LUT", -0.226), ("BRAM36", -0.149), ("DSP", -0.005),
+                     ("FF", +0.071)):
+        rel = est["ours"][k] / est["ref11"][k] - 1
+        rows.append((f"table1/relative/{k}", 0.0,
+                     f"model {rel:+.3f} vs paper {claim:+.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,6 @@
+"""repro — data-rate-aware continuous-flow inference/training framework.
+
+JAX/TPU adaptation of "Data-Rate-Aware High-Speed CNN Inference on FPGAs"
+(Habermann & Kumm, 2026).  See DESIGN.md for the architecture map.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,23 @@
+"""Core of the reproduction: the paper's data-rate-aware DSE.
+
+Public surface:
+  rate          — data-rate algebra (exact fractions), LayerSpec, propagation
+  dse           — (j,h) design-space exploration, Eqs. (1)-(11), both schemes
+  multipixel    — §II-E phase analysis: tap routing, stride pruning
+  schedule      — discrete-event continuous-flow validation
+  resource_model— analytical FPGA model reproducing Tables I & II
+  tpu_tiles     — the TPU adaptation: (j,h) -> Pallas BlockSpec tiles
+  stage_partition — rate-aware pipeline-stage partitioning (TPU analogue)
+  hlo_analysis  — roofline term extraction from compiled HLO
+  hw_specs      — hardware constants (TPU v5e + xcvu37p)
+"""
+from .rate import (  # noqa: F401
+    LayerSpec, RatePoint, propagate, propagate_chain, divisors,
+    frame_cycles, fps,
+)
+from .dse import (  # noqa: F401
+    LayerImpl, hj_set, best_rate, pixel_phases, surviving_phases,
+    select_ours, select_ref11, plan_network,
+)
+from .hw_specs import TPU_V5E, XCVU37P, TPUSpec, FPGASpec  # noqa: F401
+from .resource_model import ResourceEstimate, estimate_layer, estimate_network  # noqa: F401

@@ -1,0 +1,236 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+Per the task spec:
+
+  compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+  memory term     = HLO_bytes / (chips * HBM_bw)
+  collective term = collective_bytes / (chips * link_bw)
+
+``cost_analysis()`` supplies FLOPs and bytes accessed.  Collective bytes
+are NOT in cost_analysis: we parse the post-SPMD HLO text and sum operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute.  Collective byte counts are *per shard* (the compiled
+module is the per-device program), which is what the per-chip link-rate
+denominator wants.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Iterable, Optional
+
+from .hw_specs import TPUSpec, TPU_V5E
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  bf16[1024,512]{1,0}  or  f32[8,128]
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# an HLO instruction line:  %name = TYPE[SHAPE] op-name(...)
+_INSTR_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"             # result shape (maybe tuple)
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+
+_COMP_START_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\([^)]*\)\s*->.*\{")
+_CALL_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w\.\-]+)")
+_WHILE_BODY_RE = re.compile(r"\bwhile\(.*?body=%?([\w\.\-]+)", re.DOTALL)
+
+
+def _loop_computations(hlo_text: str) -> set:
+    """Names of computations executed inside while loops (transitively)."""
+    comps: Dict[str, list] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _COMP_START_RE.match(line)
+        if m:
+            cur = m.group(1)
+            comps[cur] = []
+        elif cur is not None:
+            comps[cur].append(line)
+
+    bodies = set()
+    for name, lines in comps.items():
+        for line in lines:
+            if " while(" in line or "= while(" in line.replace("  ", " "):
+                mb = re.search(r"body=%?([\w\.\-]+)", line)
+                if mb:
+                    bodies.add(mb.group(1))
+    # transitive closure over calls/to_apply within loop bodies
+    seen = set()
+    stack = list(bodies)
+    while stack:
+        name = stack.pop()
+        if name in seen or name not in comps:
+            continue
+        seen.add(name)
+        for line in comps[name]:
+            for callee in _CALL_RE.findall(line):
+                if callee not in seen:
+                    stack.append(callee)
+    return seen
+
+
+def collective_bytes(hlo_text: str, loop_trips: int = 1) -> CollectiveStats:
+    """Sum result-shape bytes of every collective op in the HLO module.
+
+    Result shapes are used (operand text isn't reliably on the same line);
+    for all-reduce result==operand size, for all-gather the result is the
+    gathered (larger) buffer — the bytes that actually cross links, which
+    is the quantity the roofline wants.  ``-start``/``-done`` pairs are
+    deduplicated by only counting ``-start`` when both appear.
+
+    ``loop_trips``: collectives that live inside while-loop bodies (layer
+    scans, accumulation scans) execute once per trip but appear once in
+    the module text — the same loop-bodies-once undercount as FLOPs.
+    They are multiplied by this factor (callers pass the main scan trip
+    count; nested inner scans are a documented residual undercount).
+    """
+    loop_comps = _loop_computations(hlo_text) if loop_trips > 1 else set()
+    by_bytes: Dict[str, int] = {k: 0 for k in _COLLECTIVE_OPS}
+    by_count: Dict[str, int] = {k: 0 for k in _COLLECTIVE_OPS}
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _COMP_START_RE.match(line)
+        if m:
+            cur = m.group(1)
+        if "-done(" in line:
+            continue  # counted at -start
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        shape_txt, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_txt)
+        if b == 0:
+            continue
+        mult = loop_trips if cur in loop_comps else 1
+        by_bytes[kind] += b * mult
+        by_count[kind] += mult
+    return CollectiveStats(bytes_by_kind=by_bytes, count_by_kind=by_count)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-compute time / bound time — how close the step is to the
+        pure-compute roofline if MODEL_FLOPS were all that ran."""
+        if self.bound_s <= 0 or self.model_flops <= 0:
+            return 0.0
+        ideal = self.model_flops / (self.chips * TPU_V5E.peak_bf16_flops)
+        return ideal / self.bound_s
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / total compiled FLOPs (flops field is per-device)."""
+        total = self.flops * max(self.chips, 1)
+        return self.model_flops / total if total else 0.0
+
+    def summary(self) -> dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes, "chips": self.chips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def roofline_terms(
+    cost_analysis: Optional[dict],
+    hlo_text: str,
+    chips: int,
+    *,
+    model_flops: float = 0.0,
+    spec: TPUSpec = TPU_V5E,
+    flops_override: Optional[float] = None,
+    bytes_override: Optional[float] = None,
+    loop_trips: int = 1,
+) -> RooflineTerms:
+    """Build the three roofline terms from a compiled module.
+
+    ``compiled.cost_analysis()`` on jax 0.8 returns PER-DEVICE numbers
+    (the post-SPMD per-device module is what gets analysed — validated
+    empirically in tests/integration/test_dryrun_small.py), so flops and
+    bytes are used directly against per-chip peaks.  ``model_flops`` is
+    whole-step (all chips); the roofline_fraction property divides it by
+    chip count.  Collective result shapes in the per-device module are the
+    *gathered* buffers; we scale by (n-1)/n per collective kind where the
+    ring transfer volume differs (all-reduce moves ~2x the shard).
+    """
+    ca = cost_analysis or {}
+    flops = float(flops_override if flops_override is not None
+                  else ca.get("flops", 0.0))
+    hbm = float(bytes_override if bytes_override is not None
+                else ca.get("bytes accessed", 0.0))
+    coll = float(collective_bytes(hlo_text, loop_trips=loop_trips).total_bytes)
+    return RooflineTerms(
+        flops=flops,
+        hbm_bytes=hbm,
+        coll_bytes=coll,
+        chips=chips,
+        compute_s=flops / spec.peak_bf16_flops,
+        memory_s=hbm / spec.hbm_bw,
+        collective_s=coll / (spec.ici_bw_per_link * spec.ici_links),
+        model_flops=model_flops,
+    )

@@ -1,0 +1,73 @@
+"""Hardware constants for the roofline model and both cost models.
+
+Two targets coexist:
+  * ``TPUSpec``  — the runtime target of the framework (TPU v5e class, the
+    numbers mandated for the roofline analysis).
+  * ``FPGASpec`` — the paper's target (AMD/Xilinx Virtex UltraScale+
+    xcvu37p-fsvh2892-3-e), used only by the analytical resource model that
+    reproduces the paper's Tables I/II.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUSpec:
+    """Per-chip numbers for the roofline terms (v5e class)."""
+
+    name: str = "tpu-v5e"
+    peak_bf16_flops: float = 197e12     # FLOP/s per chip
+    peak_int8_ops: float = 394e12       # int8 OPS (2x bf16) — used by cost model
+    hbm_bytes: int = 16 * 1024**3       # 16 GiB HBM per chip
+    hbm_bw: float = 819e9               # bytes/s per chip
+    ici_bw_per_link: float = 50e9       # bytes/s per ICI link (one direction)
+    ici_links: int = 4                  # 2D torus: +/-x, +/-y
+    vmem_bytes: int = 128 * 1024**2     # ~128 MiB VMEM (v5e: 128MB)
+    mxu_dim: int = 128                  # systolic array edge
+    sublanes: int = 8
+    lanes: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class FPGASpec:
+    """xcvu37p resources (paper's device) + mapping constants.
+
+    The mapping constants are calibrated once against the paper's own
+    tables (see benchmarks/table*.py) and documented here:
+
+    * ``dsp_pack``   — int8 multiplications packed per DSP48E2 when a
+      shared operand allows it (classic 2x packing for 8-bit).
+    * ``dw_mult_in_lut`` — depthwise multipliers are small and numerous;
+      the paper's DSP counts are only consistent with dw mults in LUTs.
+    * ``lut_per_8x8_mult`` — soft-logic int8 multiplier cost.
+    * ``compressor_alpha`` — LUTs per partial-product bit in a
+      compressor tree [13]; ``binary_alpha`` for naive binary adder trees
+      (the [11] baseline uses smaller trees, less compressor-friendly).
+    """
+
+    name: str = "xcvu37p-fsvh2892-3-e"
+    luts: int = 1_303_680
+    ffs: int = 2_607_360
+    bram36: int = 2_016
+    uram: int = 960
+    dsps: int = 9_024
+    bram36_kbits: int = 36
+    bram_width: int = 72                # SDP max width
+    bram_depth: int = 512               # at width 72
+    # calibration constants (fit once, never per-experiment):
+    dsp_pack: int = 2
+    dw_mult_in_lut: bool = True
+    lut_per_8x8_mult: float = 58.0
+    compressor_alpha: float = 0.62      # LUT / operand-bit, compressor tree
+    binary_alpha: float = 1.0           # LUT / operand-bit, binary adder tree
+    acc_bits: int = 16                  # partial-product width entering trees
+    ctrl_lut_per_unit: float = 34.0     # mux/counter/padding control per unit
+    ctrl_lut_invalid_filter: float = 55.0  # [11]-style invalid-data filtering
+    ff_per_mult: float = 26.0           # pipeline regs around each multiplier
+    ff_per_unit: float = 120.0          # config counters, select lines
+    ff_input_buffer_per_tap: float = 9.0  # non-transposed KPU input delay regs
+
+
+TPU_V5E = TPUSpec()
+XCVU37P = FPGASpec()

@@ -1,0 +1,134 @@
+"""Rate-aware pipeline-stage partitioning — the paper's continuous-flow
+constraint applied to multi-chip pipeline parallelism.
+
+FPGA reading: every layer must absorb its input rate (j/h >= r).
+TPU reading: every pipeline *stage* must process tokens at least as fast
+as they arrive from upstream; with equal chips per stage that means
+minimizing the maximum stage cost (the bottleneck sets the flow rate and
+every other stage idles in proportion — exactly the under-utilization the
+paper attacks).
+
+Two tools:
+
+* ``partition_min_bottleneck`` — classic contiguous-chain DP: assign
+  layers to S stages minimizing max stage FLOPs.  The divisibility
+  constraints of Eq. (7)/(8) reappear as ``block`` granularity: scanned
+  layer blocks cannot be split.
+* ``allocate_chips`` — the (j,h) analogue for heterogeneous stages:
+  given per-stage cost and a chip budget that must be split in divisor
+  granularity (mesh rows), find the allocation whose service rates are
+  all >= the arrival rate with minimal total chips — BestRate, but for
+  chips.  Used for enc/dec and prefill/decode disaggregation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from fractions import Fraction
+from typing import List, Sequence, Tuple
+
+from .rate import divisors
+
+
+@dataclasses.dataclass(frozen=True)
+class StagePlan:
+    boundaries: Tuple[int, ...]      # stage s = layers [b[s], b[s+1])
+    stage_cost: Tuple[float, ...]    # cost per stage (FLOPs or seconds)
+    bottleneck: float                # max stage cost
+    balance: float                   # mean/max utilization across stages
+
+
+def partition_min_bottleneck(costs: Sequence[float], n_stages: int
+                             ) -> StagePlan:
+    """Contiguous partition of ``costs`` into ``n_stages`` minimizing the
+    bottleneck stage.  O(n^2 * S) DP — layer counts are small (<= few
+    hundred)."""
+    n = len(costs)
+    if n_stages <= 0 or n_stages > n:
+        raise ValueError(f"n_stages={n_stages} for {n} layers")
+    prefix = [0.0]
+    for c in costs:
+        prefix.append(prefix[-1] + c)
+
+    INF = float("inf")
+    # dp[s][i] = min over partitions of first i layers into s stages of max cost
+    dp = [[INF] * (n + 1) for _ in range(n_stages + 1)]
+    cut = [[0] * (n + 1) for _ in range(n_stages + 1)]
+    dp[0][0] = 0.0
+    for s in range(1, n_stages + 1):
+        for i in range(s, n + 1):
+            for k in range(s - 1, i):
+                cost = max(dp[s - 1][k], prefix[i] - prefix[k])
+                if cost < dp[s][i]:
+                    dp[s][i] = cost
+                    cut[s][i] = k
+    bounds = [n]
+    i = n
+    for s in range(n_stages, 0, -1):
+        i = cut[s][i]
+        bounds.append(i)
+    bounds = tuple(reversed(bounds))
+    stage_cost = tuple(prefix[bounds[s + 1]] - prefix[bounds[s]]
+                       for s in range(n_stages))
+    bot = max(stage_cost)
+    balance = (sum(stage_cost) / len(stage_cost)) / bot if bot else 1.0
+    return StagePlan(boundaries=bounds, stage_cost=stage_cost,
+                     bottleneck=bot, balance=balance)
+
+
+def partition_blocks(costs: Sequence[float], n_stages: int, block: int
+                     ) -> StagePlan:
+    """Same, but boundaries restricted to multiples of ``block`` (scanned
+    layer stacks can only split between scan blocks — the divisibility
+    constraint, Eq. (7)/(8) analogue)."""
+    n = len(costs)
+    if n % block:
+        raise ValueError(f"{n} layers not divisible by block {block}")
+    merged = [sum(costs[i:i + block]) for i in range(0, n, block)]
+    plan = partition_min_bottleneck(merged, n_stages)
+    return StagePlan(
+        boundaries=tuple(b * block for b in plan.boundaries),
+        stage_cost=plan.stage_cost, bottleneck=plan.bottleneck,
+        balance=plan.balance,
+    )
+
+
+def allocate_chips(
+    stage_cost: Sequence[float],
+    total_chips: int,
+    *,
+    granularity: int = 1,
+) -> List[int]:
+    """Allocate chips to stages ~proportional to cost (largest-remainder),
+    in ``granularity`` quanta (mesh-row constraint), every stage >= 1 quantum.
+
+    This is the continuous-flow sizing: stage service rate chips/cost must
+    cover the shared arrival rate; allocating proportional to cost
+    maximizes the minimum service rate for a fixed budget.
+    """
+    q = total_chips // granularity
+    n = len(stage_cost)
+    if q < n:
+        raise ValueError(f"{total_chips} chips / gran {granularity} < {n} stages")
+    total = sum(stage_cost) or 1.0
+    raw = [c / total * q for c in stage_cost]
+    base = [max(1, int(f)) for f in raw]
+    while sum(base) > q:                      # pull back from the largest
+        i = max(range(n), key=lambda k: base[k] - raw[k])
+        if base[i] > 1:
+            base[i] -= 1
+        else:
+            break
+    rem = q - sum(base)
+    # hand remaining quanta to the most-starved stages (largest cost/chip)
+    for _ in range(rem):
+        i = max(range(n), key=lambda k: stage_cost[k] / base[k])
+        base[i] += 1
+    return [b * granularity for b in base]
+
+
+def service_rates(stage_cost: Sequence[float], chips: Sequence[int],
+                  flops_per_chip: float) -> List[float]:
+    """Tokens/sec each stage can sustain (cost in FLOPs/token)."""
+    return [flops_per_chip * c / max(sc, 1e-30)
+            for sc, c in zip(stage_cost, chips)]

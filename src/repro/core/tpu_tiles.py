@@ -1,0 +1,127 @@
+"""TPU adaptation of the (j,h) DSE: BlockSpec tile selection.
+
+The paper's constraint set maps 1:1 onto Pallas/MXU tiling:
+
+  j  (input features/clock, j | d_in)   -> K-dimension tile bk (bk | d_in)
+  h  (outputs multiplexed,  h | d_out)  -> N-dim grid trips: bn = d_out/h
+  C = h*d_in/j reconfigurations          -> grid steps per output tile
+  multi-pixel P                          -> M-dim tile bm (output positions
+                                            per grid step; lanes=128)
+  continuous flow  j/h >= r              -> tile's arithmetic intensity
+                                            >= the layer's stream rate
+
+Extra constraints that exist on TPU but not on the FPGA:
+  * MXU alignment: contraction and lane dims should be multiples of 128
+    (8 sublanes x 128 lanes for fp32/bf16); we *prefer* aligned tiles and
+    only fall back when the channel count is smaller than the alignment.
+  * VMEM capacity: the working set  bm*bk + bk*bn + bm*bn  elements
+    (x dtype bytes x double-buffering) must fit the per-core VMEM budget.
+
+`select_tile` runs the same BestRate search over the constrained HJ set.
+This is what `kernels/*/ops.py` call to pick their BlockSpecs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from fractions import Fraction
+from typing import Optional, Tuple
+
+from .hw_specs import TPUSpec, TPU_V5E
+from .rate import divisors
+
+
+@dataclasses.dataclass(frozen=True)
+class TileChoice:
+    """A concrete matmul-style tiling for one layer."""
+
+    bm: int          # output-position (pixel) tile — the multi-pixel P
+    bk: int          # contraction tile  (the paper's j)
+    bn: int          # output-channel tile (d_out / h)
+    grid_m: int
+    grid_k: int      # the paper's C: weight "reconfigurations"
+    grid_n: int
+    vmem_bytes: int
+    mxu_aligned: bool
+
+    @property
+    def j(self) -> int:
+        return self.bk
+
+    def h(self, d_out: int) -> int:
+        return max(1, d_out // self.bn)
+
+
+def _align_ok(x: int, want: int) -> bool:
+    return x % want == 0 or x < want
+
+
+def select_tile(
+    m: int,
+    d_in: int,
+    d_out: int,
+    *,
+    rate: Optional[Fraction] = None,
+    dtype_bytes: int = 2,
+    spec: TPUSpec = TPU_V5E,
+    vmem_fraction: float = 0.5,
+) -> TileChoice:
+    """Choose (bm, bk, bn) for an [m, d_in] x [d_in, d_out] product.
+
+    The candidate set is the paper's HJ set (divisor-constrained); the
+    BestRate criterion becomes: smallest tile whose throughput covers
+    ``rate`` (features per MXU pass), tie-broken toward large h (big
+    accumulation per output tile => fewer HBM round-trips — the
+    compressor-tree argument, TPU edition).  With ``rate=None`` the
+    highest-intensity aligned tile is chosen.
+    """
+    budget = int(spec.vmem_bytes * vmem_fraction)
+    lane = spec.lanes      # 128
+    sub = spec.sublanes    # 8
+
+    best: Optional[Tuple] = None
+    for bk in divisors(d_in):
+        if bk > 2048:
+            continue
+        for bn in divisors(d_out):
+            if bn > 2048:
+                continue
+            h = d_out // bn
+            # continuous-flow feasibility (Eq. 9 analogue)
+            if rate is not None and Fraction(bk, max(1, h)) < rate:
+                continue
+            # pick bm: as many output rows as fit VMEM, ideally lane-aligned
+            bm = min(m, 512)
+            while bm > sub:
+                ws = (bm * bk + bk * bn + bm * bn) * dtype_bytes * 2  # dbl-buf
+                if ws <= budget:
+                    break
+                bm //= 2
+            ws = (bm * bk + bk * bn + bm * bn) * dtype_bytes * 2
+            if ws > budget:
+                continue
+            # strict alignment: a dim is aligned if the tile is a lane
+            # multiple OR the whole dim is too small to ever align.
+            aligned = ((bk % lane == 0 or d_in < lane)
+                       and (bn % lane == 0 or d_out < lane))
+            # TPU tie-break (the compressor-tree argument, MXU edition):
+            # deep K accumulation per pass (big bk), output tile wide
+            # enough to fill lanes but small enough to keep h large
+            # (many output tiles re-using the resident input block).
+            bn_pref = -abs(bn - 2 * lane)
+            score = (aligned, bk, bn_pref, bm)
+            if best is None or score > best[0]:
+                best = (score, bm, bk, bn)
+    if best is None:
+        # degenerate fallback: single-element tiles always fit
+        bm, bk, bn = min(m, sub), 1, 1
+    else:
+        _, bm, bk, bn = best
+    return TileChoice(
+        bm=bm, bk=bk, bn=bn,
+        grid_m=math.ceil(m / bm),
+        grid_k=max(1, d_in // bk),
+        grid_n=max(1, d_out // bn),
+        vmem_bytes=(bm * bk + bk * bn + bm * bn) * dtype_bytes * 2,
+        mxu_aligned=_align_ok(bk, lane) and _align_ok(bn, lane),
+    )

@@ -1,0 +1,237 @@
+"""Sharding rules: name/shape-based PartitionSpecs for every pytree.
+
+Strategy (DESIGN.md §6): TP over 'model' for heads / d_ff / vocab, FSDP
+over 'data' (+'pod') on the d_model axis of matrices, batch over
+('pod','data'), KV-cache sequence over 'model' (flash-decoding-style
+split-K).  Rules are *divisibility-guarded*: a dimension is only sharded
+by axes whose size divides it — the paper's Eq. (7)/(8) constraint
+applied to mesh partitioning (same math, `divisors()` and all); otherwise
+the rule degrades to the next candidate and ultimately replication.
+
+Everything here returns PartitionSpec / NamedSharding pytrees consumed by
+jit(in_shardings=...) in the launcher and dry-run.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def mesh_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _axsize(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    s = 1
+    for a in axes:
+        s *= mesh_sizes(mesh)[a]
+    return s
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    return axes is None or (dim % _axsize(mesh, axes) == 0)
+
+
+def _guard(shape, mesh, spec_axes):
+    """Zero out sharding on dims the mesh doesn't divide."""
+    out = []
+    for dim, axes in zip(shape, spec_axes):
+        out.append(axes if _fits(dim, mesh, axes) else None)
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# parameter rules (match on path suffix)
+# ---------------------------------------------------------------------------
+
+def param_spec(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    # int8-serving trees wrap leaves as parent/{__q__,__s__}: __q__ shards
+    # like the parent; __s__ (per-output-channel scales, row dim == 1)
+    # gets the parent spec with the row axis dropped.
+    scale_leaf = path.endswith("__s__")
+    path = path.replace("/__q__", "").replace("/__s__", "")
+    if scale_leaf and len(shape) >= 2:
+        spec = param_spec(path, shape[:-2] + (max(shape[-2], 2), shape[-1]),
+                          mesh)
+        parts = list(spec) + [None] * (len(shape) - len(spec))
+        if len(parts) >= 2:
+            parts[-2] = None
+        return P(*parts[:len(shape)])
+    if len(shape) < 2:
+        return P()          # vectors/scalars (incl. optimizer sentinels)
+    da = data_axes(mesh)
+    lead = (None,) * (len(shape) - 2)       # scanned layer-stack dims
+
+    def rule2(row_axes, col_axes):
+        if len(shape) < 2:
+            return P()
+        return _guard(shape, mesh, lead + (row_axes, col_axes))
+
+    name = path.lower()
+    if re.search(r"(embed|unembed)$", name):
+        v, d = shape[-2], shape[-1]
+        # vocab over 'model' (keeps the embedding gather and the logits
+        # einsum shard-aligned: logits land (data, None, model));
+        # d_model deliberately unsharded — data-sharding it forces an
+        # involuntary resharding around the token gather.
+        if _fits(v, mesh, "model"):
+            return P("model", None)
+        if _fits(d, mesh, "model"):
+            return P(None, "model")
+        return P()
+    if re.search(r"router$", name):
+        return rule2(da, None)
+    # MoE expert stacks [.., E, d, f] / [.., E, f, d]
+    if re.search(r"moe/(w_up|w_gate)$", name):
+        return _guard(shape, mesh, (None,) * (len(shape) - 3) + (None, da, "model"))
+    if re.search(r"moe/w_down$", name):
+        return _guard(shape, mesh, (None,) * (len(shape) - 3) + (None, "model", da))
+    if re.search(r"(wq|wk|wv|w_up|w_gate|in_proj)$", name):
+        return rule2(da, "model")
+    if re.search(r"(wo|w_down|out_proj)$", name):
+        return rule2("model", da)
+    if re.search(r"conv_w$", name):
+        return _guard(shape, mesh, lead + (None, "model")) if len(shape) >= 2 else P()
+    if re.search(r"(\bw\b|/w)$", name) and len(shape) >= 2:
+        return rule2(da, "model")
+    return P()                               # norms, biases, scalars: replicate
+
+
+def _named(path_tuple) -> str:
+    return "/".join(
+        getattr(p, "name", getattr(p, "key", str(getattr(p, "idx", p))))
+        for p in path_tuple)
+
+
+def tree_shardings(tree: Any, mesh: Mesh, spec_fn) -> Any:
+    """Map (path, leaf) -> NamedSharding over any pytree."""
+    def to_sharding(path, leaf):
+        spec = spec_fn(_named(path), tuple(leaf.shape))
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(to_sharding, tree)
+
+
+def params_shardings(params: Any, mesh: Mesh) -> Any:
+    return tree_shardings(params, mesh,
+                          lambda p, s: param_spec(p, s, mesh))
+
+
+def opt_state_shardings(opt_state: Any, params_like: Any, mesh: Mesh) -> Any:
+    """Adam moments follow their parameter's spec; scalars replicate.
+    Works because mu/nu mirror the param tree structure."""
+    def spec_fn(path, shape):
+        # strip the leading 'mu/' or 'nu/' or '.mu' naming from NamedTuple
+        cleaned = re.sub(r"^\.?(mu|nu)[/.]?", "", path)
+        if not shape:
+            return P()
+        return param_spec(cleaned, shape, mesh)
+    return tree_shardings(opt_state, mesh, spec_fn)
+
+
+# ---------------------------------------------------------------------------
+# batch / serve-state rules
+# ---------------------------------------------------------------------------
+
+def batch_specs(batch: Any, mesh: Mesh) -> Any:
+    """Leading dim = global batch -> ('pod','data'); rest unsharded."""
+    da = data_axes(mesh)
+
+    def spec_fn(path, shape):
+        if not shape:
+            return P()
+        if _fits(shape[0], mesh, da):
+            return P(da)
+        return P()
+    return tree_shardings(batch, mesh, spec_fn)
+
+
+def serve_state_specs(state: Any, mesh: Mesh) -> Any:
+    """KV caches [L, B, S, nkv, dh]: batch over data when divisible,
+    sequence over 'model' (split-K decode).  Batch-1 long-context shards
+    the sequence over (data, model) jointly.  SSM states [L, B, H, P, N]:
+    batch over data, heads over model."""
+    da = data_axes(mesh)
+
+    def spec_fn(path, shape):
+        if len(shape) == 5:
+            _, b, s_or_h = shape[0], shape[1], shape[2]
+            is_kv = shape[2] >= 256  # seq dim heuristic: caches are long
+            if is_kv:
+                if _fits(b, mesh, da) and b > 1:
+                    return _guard(shape, mesh, (None, da, "model", None, None))
+                return _guard(shape, mesh,
+                              (None, None, da + ("model",), None, None))
+            # ssm state [L, B, H, P, N]
+            if _fits(b, mesh, da) and b > 1:
+                return _guard(shape, mesh, (None, da, "model", None, None))
+            return _guard(shape, mesh, (None, None, "model", None, None))
+        if len(shape) == 4:
+            # hybrid/ssm conv cache [L, B, K-1, convdim] or memory [B,S,d]x?
+            return _guard(shape, mesh, (None, da, None, "model"))
+        if len(shape) == 3:
+            # encoder memory [B, S, d]
+            return _guard(shape, mesh, (da, None, "model"))
+        if len(shape) >= 1:
+            return _guard(shape, mesh, (da,) + (None,) * (len(shape) - 1))
+        return P()
+    return tree_shardings(state, mesh, spec_fn)
+
+
+def abstract_with_shardings(tree: Any, shardings: Any) -> Any:
+    """Attach shardings to ShapeDtypeStructs (dry-run input building)."""
+    return jax.tree.map(
+        lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s),
+        tree, shardings)
+
+
+# ---------------------------------------------------------------------------
+# in-model activation constraints (ambient-mesh aware)
+# ---------------------------------------------------------------------------
+
+_LOGICAL = {
+    "batch": ("pod", "data"),
+    "seq": ("model",),
+    "tp": ("model",),       # tensor-parallel feature dims (d_ff, heads)
+    None: None,
+}
+
+
+def constrain(x: jax.Array, logical: Tuple[Optional[str], ...]) -> jax.Array:
+    """Apply a logical-axis sharding constraint against the ambient mesh.
+
+    No-op outside a mesh context (CPU tests/examples), and per-dim
+    divisibility-guarded (Eq. 7/8 again), so models can call it
+    unconditionally.  The main use is the residual stream
+    ('batch','seq',None): with full remat, the per-layer stash is exactly
+    this tensor, and seq->model sharding (Megatron sequence parallelism)
+    divides the stash by the TP degree.
+    """
+    from jax._src import mesh as mesh_lib
+    mesh = mesh_lib.thread_resources.env.physical_mesh
+    if mesh.empty or not mesh.axis_names:
+        return x
+    names = set(mesh.axis_names)
+    spec = []
+    for dim, log in zip(x.shape, logical):
+        axes = _LOGICAL.get(log)
+        if axes is None:
+            spec.append(None)
+            continue
+        axes = tuple(a for a in axes if a in names)
+        if axes and dim % _axsize(mesh, axes) == 0 and dim > 1:
+            spec.append(axes if len(axes) > 1 else axes[0])
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))

@@ -1,0 +1,30 @@
+"""jit'd wrapper reshaping [B, H, S, d] <-> [BH, S, d] and choosing blocks."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .flash_attention import flash_attention_p
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                              "interpret"))
+def flash_attention(
+    q: jax.Array,   # [B, H, Sq, d]
+    k: jax.Array,   # [B, H, Sk, d]
+    v: jax.Array,   # [B, H, Sk, d]
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    out = flash_attention_p(
+        q.reshape(b * h, sq, d), k.reshape(b * h, sk, d),
+        v.reshape(b * h, sk, d),
+        causal=causal, block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return out.reshape(b, h, sq, d)

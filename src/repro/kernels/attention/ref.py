@@ -1,0 +1,20 @@
+"""Pure-jnp oracle: naive softmax attention."""
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale=None) -> jax.Array:
+    """q: [BH, Sq, d], k/v: [BH, Sk, d]."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        sq, sk = s.shape[-2:]
+        qi = jnp.arange(sq)[:, None]
+        ki = jnp.arange(sk)[None, :]
+        s = jnp.where(qi >= ki, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,46 @@
+"""jit'd wrapper for the depthwise kernel: SAME padding + j-tile choice."""
+from __future__ import annotations
+
+import functools
+from fractions import Fraction
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rate import divisors
+from .dw_conv import dw_conv_p
+
+
+def _same_pads(size: int, k: int, s: int):
+    out = -(-size // s)
+    total = max(0, (out - 1) * s + k - size)
+    return out, (total // 2, total - total // 2)
+
+
+def _pick_bc(c: int, rate: Optional[Fraction]) -> int:
+    """The paper's j for depthwise (h=1, cm=1): smallest divisor tile
+    covering the stream rate; default = lane-width-ish tile."""
+    want = 128 if rate is None else max(1, int(rate))
+    cands = [d for d in divisors(c) if d >= want]
+    return min(cands) if cands else c
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "rate", "interpret", "bc"))
+def dw_conv(
+    x: jax.Array,          # [N, H, W, C]
+    w: jax.Array,          # [kh, kw, C]
+    *,
+    stride: int = 1,
+    rate: Optional[Fraction] = None,
+    interpret: bool = True,
+    bc: Optional[int] = None,
+) -> jax.Array:
+    n, h, wdt, c = x.shape
+    kh, kw, _ = w.shape
+    ho, (pt, pb) = _same_pads(h, kh, stride)
+    wo, (pl_, pr) = _same_pads(wdt, kw, stride)
+    xp = jnp.pad(x, ((0, 0), (pt, pb), (pl_, pr), (0, 0)))
+    bc = bc or _pick_bc(c, rate)
+    return dw_conv_p(xp, w, out_hw=(ho, wo), stride=stride, bc=bc,
+                     interpret=interpret)

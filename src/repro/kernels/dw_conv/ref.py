@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the depthwise conv kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def dw_conv_ref(x: jax.Array, w: jax.Array, stride: int = 1,
+                padding: str = "SAME", out_dtype=None) -> jax.Array:
+    """x: [N, H, W, C], w: [kh, kw, C] (channel multiplier 1)."""
+    out_dtype = out_dtype or x.dtype
+    c = x.shape[-1]
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w[..., None, :].astype(jnp.float32),
+        window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+    return out.astype(out_dtype)

@@ -1,0 +1,56 @@
+"""jit'd public wrapper: DSE-derived tiling + shape plumbing.
+
+``fcu_matmul`` is the drop-in for pointwise convolutions and dense layers
+(flattens leading dims to the pixel/m axis).  The BlockSpec tiling comes
+from the paper's HJ exploration (core.tpu_tiles.select_tile), optionally
+constrained by a stream ``rate`` for rate-matched serving pipelines.
+"""
+from __future__ import annotations
+
+import functools
+from fractions import Fraction
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tpu_tiles import select_tile
+from .fcu_matmul import fcu_matmul_p
+
+
+def _pick_bm(m: int, want: int) -> int:
+    bm = min(want, m)
+    while m % bm:
+        bm -= 1
+    return max(1, bm)
+
+
+@functools.partial(jax.jit, static_argnames=("rate", "interpret", "bm", "bk", "bn"))
+def fcu_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    rate: Optional[Fraction] = None,
+    interpret: bool = True,
+    bm: Optional[int] = None,
+    bk: Optional[int] = None,
+    bn: Optional[int] = None,
+) -> jax.Array:
+    """x: [..., d_in] @ w: [d_in, d_out] -> [..., d_out]."""
+    lead = x.shape[:-1]
+    d_in = x.shape[-1]
+    d_out = w.shape[-1]
+    m = 1
+    for s in lead:
+        m *= s
+    xm = x.reshape(m, d_in)
+    if bm is None or bk is None or bn is None:
+        t = select_tile(m, d_in, d_out, rate=rate,
+                        dtype_bytes=x.dtype.itemsize)
+        bk = bk or t.bk
+        bn = bn or t.bn
+        bm = bm or _pick_bm(m, t.bm)
+    else:
+        bm = _pick_bm(m, bm)
+    out = fcu_matmul_p(xm, w, bm=bm, bk=bk, bn=bn, interpret=interpret)
+    return out.reshape(*lead, d_out)

@@ -1,0 +1,2 @@
+from .ops import kpu_conv  # noqa: F401
+from .ref import kpu_conv_ref  # noqa: F401

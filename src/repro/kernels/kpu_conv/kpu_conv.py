@@ -1,0 +1,105 @@
+"""KPU — the paper's kernel processing unit, re-thought for the TPU.
+
+FPGA KPU (Figs. 1, 4-6): K*K multipliers per input channel, sliding-window
+delay lines, phase-specialized copies for multi-pixel processing, pruned
+phases under stride.
+
+TPU translation (DESIGN.md §2): the delay-line has no TPU analogue — a
+VMEM-resident input block *is* the shared, non-transposed input buffer of
+the improved KPU (paper Fig. 5: "the input features ... can be buffered
+once, and then shared with all other KPUs in the layer").  What transfers
+is the schedule:
+
+  * weight-stationary tap accumulation: for each of the K*K taps we run
+    one MXU pass  x_shifted[(Ho*Wo), bci] @ w_tap[bci, bco]  and
+    accumulate in an f32 VMEM scratch — the KPU's adder tree becomes the
+    MXU's systolic reduction + scratch accumulation;
+  * multi-pixel P: every output position of the block is computed per
+    pass (the lane dimension), i.e. P = Wo;
+  * stride pruning (§II-E): the strided slice  x[:, dy::s, dx::s, :]
+    gathers only surviving-phase windows — skipped windows are never
+    materialized, the moral equivalent of deleting pruned KPUs;
+  * j -> bci input-channel tile (j | d_in), h -> d_out/bco output tile
+    trips (h | d_out), C -> the (ci, tap) accumulation trip count.
+
+Input must be pre-padded (ops.py does 'SAME' padding); the pad-select
+signals of the FPGA become plain zero padding here.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kpu_kernel(x_ref, w_ref, o_ref, acc_ref, *,
+                kh: int, kw: int, stride: int, grid_ci: int):
+    """Grid: (n, co_blocks, ci_blocks).  Blocks:
+    x: [1, Hp, Wp, bci] (padded spatial), w: [kh, kw, bci, bco],
+    o/acc: [1, Ho, Wo, bco]."""
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    _, ho, wo, _ = acc_ref.shape
+    x = x_ref[0]                      # [Hp, Wp, bci]
+    # weight-stationary tap loop (static unroll = the C configurations)
+    for dy in range(kh):
+        for dx in range(kw):
+            # §II-E stride pruning: gather only surviving windows
+            win = jax.lax.slice(
+                x,
+                (dy, dx, 0),
+                (dy + (ho - 1) * stride + 1, dx + (wo - 1) * stride + 1,
+                 x.shape[-1]),
+                (stride, stride, 1),
+            )                          # [Ho, Wo, bci]
+            w_tap = w_ref[dy, dx]      # [bci, bco]
+            acc_ref[0] += jax.lax.dot_general(
+                win, w_tap,
+                dimension_numbers=(((2,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+
+    @pl.when(ci == grid_ci - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def kpu_conv_p(
+    x_padded: jax.Array,     # [N, Hp, Wp, d_in]  (pre-padded)
+    w: jax.Array,            # [kh, kw, d_in, d_out]
+    *,
+    out_hw: tuple,
+    stride: int = 1,
+    bci: int,
+    bco: int,
+    interpret: bool = True,
+    out_dtype=None,
+) -> jax.Array:
+    n, hp, wp, d_in = x_padded.shape
+    kh, kw, d_in2, d_out = w.shape
+    assert d_in == d_in2
+    assert d_in % bci == 0 and d_out % bco == 0, (
+        f"(bci={bci}, bco={bco}) must divide ({d_in}, {d_out})")
+    ho, wo = out_hw
+    grid = (n, d_out // bco, d_in // bci)
+    out_dtype = out_dtype or x_padded.dtype
+    return pl.pallas_call(
+        functools.partial(_kpu_kernel, kh=kh, kw=kw, stride=stride,
+                          grid_ci=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, bci), lambda nn, co, ci: (nn, 0, 0, ci)),
+            pl.BlockSpec((kh, kw, bci, bco), lambda nn, co, ci: (0, 0, ci, co)),
+        ],
+        out_specs=pl.BlockSpec((1, ho, wo, bco), lambda nn, co, ci: (nn, 0, 0, co)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, d_out), out_dtype),
+        scratch_shapes=[pltpu.VMEM((1, ho, wo, bco), jnp.float32)],
+        interpret=interpret,
+    )(x_padded, w)

@@ -1,0 +1,44 @@
+"""jit'd wrapper: SAME padding + DSE-derived channel tiling."""
+from __future__ import annotations
+
+import functools
+from fractions import Fraction
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tpu_tiles import select_tile
+from .kpu_conv import kpu_conv_p
+
+
+def _same_pads(size: int, k: int, s: int):
+    out = -(-size // s)
+    total = max(0, (out - 1) * s + k - size)
+    return out, (total // 2, total - total // 2)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("stride", "rate", "interpret", "bci", "bco"))
+def kpu_conv(
+    x: jax.Array,            # [N, H, W, d_in]
+    w: jax.Array,            # [kh, kw, d_in, d_out]
+    *,
+    stride: int = 1,
+    rate: Optional[Fraction] = None,
+    interpret: bool = True,
+    bci: Optional[int] = None,
+    bco: Optional[int] = None,
+) -> jax.Array:
+    n, h, wdt, d_in = x.shape
+    kh, kw, _, d_out = w.shape
+    ho, (pt, pb) = _same_pads(h, kh, stride)
+    wo, (pl_, pr) = _same_pads(wdt, kw, stride)
+    xp = jnp.pad(x, ((0, 0), (pt, pb), (pl_, pr), (0, 0)))
+    if bci is None or bco is None:
+        t = select_tile(ho * wo, d_in, d_out, rate=rate,
+                        dtype_bytes=x.dtype.itemsize)
+        bci = bci or t.bk
+        bco = bco or t.bn
+    return kpu_conv_p(xp, w, out_hw=(ho, wo), stride=stride,
+                      bci=bci, bco=bco, interpret=interpret)

@@ -1,0 +1,2 @@
+from .ops import ssd_chunk  # noqa: F401
+from .ref import ssd_chunk_ref  # noqa: F401

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the fused SSD chunk kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(x, dt, a, b, c, *, chunk: int):
+    """Same contract as ssd_chunk_p; delegates to the nn-substrate SSD
+    (itself validated against the token-by-token recurrence)."""
+    from repro.nn.ssm import ssd_chunked_streaming
+    # b/c arrive head-broadcast [B, L, H, N]; the substrate form takes
+    # groups — pass with G == H (identity broadcast).
+    return ssd_chunked_streaming(x, dt, a, b, c, chunk=chunk)

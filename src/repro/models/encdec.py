@@ -1,0 +1,171 @@
+"""seamless-m4t-medium backbone — encoder-decoder transformer.
+
+The audio frontend is a STUB per the task spec: ``input_specs()`` supplies
+precomputed frame embeddings [B, T, d_model] straight into the encoder.
+Decoder: causal self-attention + cross-attention to encoder output.
+
+The enc->dec boundary is a structural data-rate drop (encoder runs once
+per utterance, decoder once per output token) — the paper's rate
+calculus allocates chips across it via core.stage_partition.allocate_chips
+(exercised in benchmarks/rate_aware_serving.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn.attention import AttnSpec, attention, init_attention
+from repro.nn.embeddings import embed, init_embedding, unembed
+from repro.nn.layers import ffn, init_ffn
+from repro.nn.norms import init_rms, rms_norm
+
+
+def _spec(cfg: ModelConfig, causal: bool) -> AttnSpec:
+    return AttnSpec(n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.head_dim,
+                    rope_theta=cfg.rope_theta, causal=causal,
+                    q_block=cfg.q_block, k_block=cfg.k_block)
+
+
+def _init_enc_block(rng, cfg):
+    k1, k2 = jax.random.split(rng)
+    return {
+        "ln1": init_rms(cfg.d_model, cfg.dtype),
+        "attn": init_attention(k1, cfg.d_model, cfg.n_heads, cfg.n_kv,
+                               cfg.head_dim, dtype=cfg.dtype),
+        "ln2": init_rms(cfg.d_model, cfg.dtype),
+        "ffn": init_ffn(k2, cfg.d_model, cfg.d_ff, kind=cfg.ffn_kind,
+                        dtype=cfg.dtype),
+    }
+
+
+def _init_dec_block(rng, cfg):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    p = _init_enc_block(jax.random.fold_in(rng, 7), cfg)
+    p["ln_x"] = init_rms(cfg.d_model, cfg.dtype)
+    p["xattn"] = init_attention(k3, cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                cfg.head_dim, dtype=cfg.dtype)
+    return p
+
+
+def init(cfg: ModelConfig, rng: jax.Array) -> dict:
+    k_emb, k_enc, k_dec = jax.random.split(rng, 3)
+    enc_keys = jax.random.split(k_enc, cfg.enc_layers)
+    dec_keys = jax.random.split(k_dec, cfg.dec_layers)
+    return {
+        "embed": init_embedding(k_emb, cfg.vocab, cfg.d_model, cfg.dtype),
+        "enc_norm": init_rms(cfg.d_model, cfg.dtype),
+        "final_norm": init_rms(cfg.d_model, cfg.dtype),
+        "enc": jax.vmap(lambda k: _init_enc_block(k, cfg))(enc_keys),
+        "dec": jax.vmap(lambda k: _init_dec_block(k, cfg))(dec_keys),
+    }
+
+
+def encode(params, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """frames: [B, T, d_model] (stub frontend output) -> memory [B, T, d]."""
+    b, t, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+    spec = _spec(cfg, causal=False)
+
+    def body(x, p):
+        if cfg.shard_activations:
+            from repro.distributed.sharding import constrain
+            x = constrain(x, ("batch", "seq", None))
+        h, _ = attention(p["attn"], rms_norm(x, p["ln1"], eps=cfg.norm_eps),
+                         positions, spec)
+        x = x + h
+        x = x + ffn(p["ffn"], rms_norm(x, p["ln2"], eps=cfg.norm_eps),
+                    kind=cfg.ffn_kind)
+        return x, None
+
+    fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
+        if cfg.remat else body
+    x, _ = jax.lax.scan(fn, frames.astype(cfg.dtype), params["enc"])
+    return rms_norm(x, params["enc_norm"], eps=cfg.norm_eps)
+
+
+def _dec_pass(params, x, positions, memory, cfg, cache=None, cache_len=None):
+    self_spec = _spec(cfg, causal=True)
+    cross_spec = _spec(cfg, causal=False)
+
+    def body(x, scanned):
+        if cfg.shard_activations:
+            from repro.distributed.sharding import constrain
+            x = constrain(x, ("batch", "seq", None))
+        p = scanned["p"]
+        kv = (scanned["ck"], scanned["cv"]) if cache is not None else None
+        h, new_kv = attention(p["attn"],
+                              rms_norm(x, p["ln1"], eps=cfg.norm_eps),
+                              positions, self_spec, kv_cache=kv,
+                              cache_len=cache_len)
+        x = x + h
+        h, _ = attention(p["xattn"], rms_norm(x, p["ln_x"], eps=cfg.norm_eps),
+                         positions, cross_spec, x_kv=memory)
+        x = x + h
+        x = x + ffn(p["ffn"], rms_norm(x, p["ln2"], eps=cfg.norm_eps),
+                    kind=cfg.ffn_kind)
+        out = {}
+        if cache is not None:
+            out["ck"], out["cv"] = new_kv
+        return x, out
+
+    fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
+        if (cfg.remat and cache is None) else body
+    scanned = {"p": params["dec"]}
+    if cache is not None:
+        scanned["ck"], scanned["cv"] = cache
+    x, outs = jax.lax.scan(fn, x, scanned)
+    new_cache = (outs["ck"], outs["cv"]) if cache is not None else None
+    return x, new_cache
+
+
+def forward(params, batch_tokens, frames, cfg: ModelConfig):
+    """Training: teacher-forced decode over encoded frames."""
+    memory = encode(params, frames, cfg)
+    b, s = batch_tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = embed(params["embed"], batch_tokens)
+    x, _ = _dec_pass(params, x, positions, memory, cfg)
+    x = rms_norm(x, params["final_norm"], eps=cfg.norm_eps)
+    return unembed(params["embed"], x), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, batch: Dict[str, jax.Array], cfg: ModelConfig):
+    logits, aux = forward(params, batch["tokens"], batch["frames"], cfg)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return ce, {"ce": ce, "aux": aux}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    shape = (cfg.dec_layers, batch, max_len, cfg.n_kv, cfg.head_dim)
+    return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+
+def prefill(params, tokens, frames, cfg: ModelConfig, cache):
+    """Encode + teacher-forced decoder prefill."""
+    memory = encode(params, frames, cfg)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = embed(params["embed"], tokens)
+    x, cache = _dec_pass(params, x, positions, memory, cfg, cache=cache,
+                         cache_len=jnp.zeros((), jnp.int32))
+    x = rms_norm(x[:, -1:], params["final_norm"], eps=cfg.norm_eps)
+    return unembed(params["embed"], x), cache, memory
+
+
+def decode_step(params, cache, memory, tokens, pos, cfg: ModelConfig):
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(
+        pos + jnp.arange(s, dtype=jnp.int32), (b, s)).astype(jnp.int32)
+    x = embed(params["embed"], tokens)
+    x, cache = _dec_pass(params, x, positions, memory, cfg, cache=cache,
+                         cache_len=pos)
+    x = rms_norm(x, params["final_norm"], eps=cfg.norm_eps)
+    return unembed(params["embed"], x), cache

@@ -1,0 +1,190 @@
+"""zamba2-1.2b — Mamba2 backbone + one *shared* attention block.
+
+Zamba's trick: a single transformer block (attention + MLP) whose weights
+are re-used every ``hybrid_attn_every`` SSM layers — global mixing at
+almost no parameter cost.  We scan over groups of
+(hybrid_attn_every x mamba layer), applying the shared block (same params
+each time, closed over) at each group boundary.
+
+Caches: SSM state per layer + ONE KV cache per shared-attention *site*
+(n_sites = n_layers // hybrid_attn_every).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn.attention import AttnSpec, attention, init_attention
+from repro.nn.embeddings import embed, init_embedding, unembed
+from repro.nn.layers import ffn, init_ffn
+from repro.nn.norms import init_rms, rms_norm
+from repro.nn.ssm import SSMSpec, init_ssm, init_ssm_state, ssm_forward
+
+
+def _spec(cfg: ModelConfig) -> SSMSpec:
+    return SSMSpec(d_model=cfg.d_model, d_state=cfg.ssm_state,
+                   d_conv=cfg.ssm_conv, expand=cfg.ssm_expand,
+                   head_dim=cfg.ssm_head_dim, chunk=cfg.ssm_chunk)
+
+
+def _attn_spec(cfg: ModelConfig) -> AttnSpec:
+    return AttnSpec(n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.head_dim,
+                    rope_theta=cfg.rope_theta, q_block=cfg.q_block,
+                    k_block=cfg.k_block)
+
+
+def n_sites(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.hybrid_attn_every
+
+
+def init(cfg: ModelConfig, rng: jax.Array) -> dict:
+    k_emb, k_sh1, k_sh2, k_layers = jax.random.split(rng, 4)
+    keys = jax.random.split(k_layers, cfg.n_layers)
+    spec = _spec(cfg)
+    return {
+        "embed": init_embedding(k_emb, cfg.vocab, cfg.d_model, cfg.dtype),
+        "final_norm": init_rms(cfg.d_model, cfg.dtype),
+        "shared": {
+            "ln1": init_rms(cfg.d_model, cfg.dtype),
+            "attn": init_attention(k_sh1, cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                   cfg.head_dim, dtype=cfg.dtype),
+            "ln2": init_rms(cfg.d_model, cfg.dtype),
+            "ffn": init_ffn(k_sh2, cfg.d_model, cfg.d_ff, kind=cfg.ffn_kind,
+                            dtype=cfg.dtype),
+        },
+        "blocks": jax.vmap(lambda k: {
+            "ln": init_rms(cfg.d_model, cfg.dtype),
+            "ssm": init_ssm(k, spec, cfg.dtype),
+        })(keys),
+    }
+
+
+def init_state(cfg: ModelConfig, batch: int, max_len: int, kv_dtype=None):
+    kv_dtype = kv_dtype or cfg.dtype
+    spec = _spec(cfg)
+    s, c = init_ssm_state(batch, spec, cfg.dtype)
+    rep = lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape)
+    kv_shape = (n_sites(cfg), batch, max_len, cfg.n_kv, cfg.head_dim)
+    return {
+        "ssm": (rep(s), rep(c)),
+        "kv": (jnp.zeros(kv_shape, kv_dtype), jnp.zeros(kv_shape, kv_dtype)),
+    }
+
+
+def _shared_block(params, x, positions, cfg, kv=None, cache_len=None):
+    p = params["shared"]
+    h, new_kv = attention(p["attn"], rms_norm(x, p["ln1"], eps=cfg.norm_eps),
+                          positions, _attn_spec(cfg), kv_cache=kv,
+                          cache_len=cache_len)
+    x = x + h
+    x = x + ffn(p["ffn"], rms_norm(x, p["ln2"], eps=cfg.norm_eps),
+                kind=cfg.ffn_kind)
+    return x, new_kv
+
+
+def _pass(params, x, positions, cfg: ModelConfig, state=None,
+          cache_len=None, decode=False):
+    spec = _spec(cfg)
+    per = cfg.hybrid_attn_every
+    groups = cfg.n_layers // per
+    ssm_state = state["ssm"] if state else None
+    kv = state["kv"] if state else None
+
+    def group_body(carry, scanned):
+        x = carry
+        if cfg.shard_activations:
+            from repro.distributed.sharding import constrain
+            x = constrain(x, ("batch", "seq", None))
+        # shared attention block at the group boundary (weights closed over)
+        site_kv = ((scanned["kv_k"], scanned["kv_v"])
+                   if kv is not None else None)
+        x, new_kv = _shared_block(params, x, positions, cfg, kv=site_kv,
+                                  cache_len=cache_len)
+        new_ssm = []
+        for i in range(per):
+            blk = jax.tree.map(lambda a: a[i], scanned["blk"])
+            st = ((scanned["s"][i], scanned["c"][i])
+                  if ssm_state is not None else None)
+            y, st_new = ssm_forward(
+                blk["ssm"], rms_norm(x, blk["ln"], eps=cfg.norm_eps),
+                spec, state=st, decode=decode)
+            x = x + y
+            new_ssm.append(st_new)
+        out = {}
+        if ssm_state is not None:
+            out["s"] = jnp.stack([s for s, _ in new_ssm])
+            out["c"] = jnp.stack([c for _, c in new_ssm])
+        if kv is not None:
+            out["kv_k"], out["kv_v"] = new_kv
+        return x, out
+
+    fn = group_body
+    if cfg.remat and not decode:
+        fn = jax.checkpoint(group_body,
+                            policy=jax.checkpoint_policies.nothing_saveable)
+
+    scanned = {"blk": jax.tree.map(
+        lambda a: a.reshape((groups, per) + a.shape[1:]), params["blocks"])}
+    if ssm_state is not None:
+        scanned["s"] = ssm_state[0].reshape((groups, per) + ssm_state[0].shape[1:])
+        scanned["c"] = ssm_state[1].reshape((groups, per) + ssm_state[1].shape[1:])
+    if kv is not None:
+        scanned["kv_k"], scanned["kv_v"] = kv
+
+    x, outs = jax.lax.scan(fn, x, scanned)
+    new_state = None
+    if state is not None:
+        new_state = {
+            "ssm": (outs["s"].reshape(ssm_state[0].shape),
+                    outs["c"].reshape(ssm_state[1].shape))
+            if ssm_state is not None else None,
+            "kv": (outs["kv_k"], outs["kv_v"]) if kv is not None else None,
+        }
+    return x, new_state
+
+
+def forward(params, tokens, cfg: ModelConfig, *, full_logits=True):
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = embed(params["embed"], tokens)
+    x, _ = _pass(params, x, positions, cfg)
+    x = rms_norm(x, params["final_norm"], eps=cfg.norm_eps)
+    if not full_logits:
+        x = x[:, -1:]
+    return unembed(params["embed"], x), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, batch: Dict[str, jax.Array], cfg: ModelConfig):
+    logits, aux = forward(params, batch["tokens"], cfg)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return ce, {"ce": ce, "aux": aux}
+
+
+def prefill(params, tokens, cfg: ModelConfig, state):
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = embed(params["embed"], tokens)
+    x, new_state = _pass(params, x, positions, cfg, state=state,
+                         cache_len=jnp.zeros((), jnp.int32))
+    x = rms_norm(x[:, -1:], params["final_norm"], eps=cfg.norm_eps)
+    return unembed(params["embed"], x), new_state
+
+
+def decode_step(params, state, tokens, pos, cfg: ModelConfig):
+    b, s = tokens.shape
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = jnp.broadcast_to(
+        jnp.atleast_1d(pos)[:, None] + jnp.arange(s, dtype=jnp.int32),
+        (b, s)).astype(jnp.int32)
+    x = embed(params["embed"], tokens)
+    x, new_state = _pass(params, x, positions, cfg, state=state,
+                         cache_len=pos, decode=True)
+    x = rms_norm(x, params["final_norm"], eps=cfg.norm_eps)
+    return unembed(params["embed"], x), new_state

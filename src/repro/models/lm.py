@@ -1,0 +1,354 @@
+"""Generic decoder-only transformer LM.
+
+Covers grok-1 (MoE every layer), llama4-maverick (MoE alternating +
+shared expert), deepseek-coder, qwen2 (qkv bias), starcoder2 (non-gated
+FFN), gemma3 (5:1 local:global windows, zero-centered RMSNorm convention
+folded into plain RMSNorm here).
+
+Layer stacks are *scanned*: parameters are stacked [L, ...] (or [L/2, ...]
+for alternating MoE) so 60+-layer architectures compile one block — the
+compile-time requirement for the 40-cell dry-run.  Per-layer heterogeneity
+(gemma3 windows) rides through the scan as traced per-layer scalars.
+
+Three entry points per the shape suites:
+  forward/loss_fn  — training (train_4k)
+  prefill          — inference prefill (prefill_32k): logits for the last
+                     position + populated KV caches
+  decode_step      — single-token decode against caches (decode_32k,
+                     long_500k)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn.attention import AttnSpec, attention, init_attention
+from repro.nn.embeddings import embed, init_embedding, unembed
+from repro.nn.layers import ffn, init_ffn
+from repro.nn.moe import MoESpec, init_moe, moe
+from repro.nn.norms import init_rms, rms_norm
+from repro.nn.quant import dequantize_tree, _is_qleaf
+
+
+# ---------------------------------------------------------------------------
+# specs derived from config
+# ---------------------------------------------------------------------------
+
+def _attn_spec(cfg: ModelConfig) -> AttnSpec:
+    return AttnSpec(
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.head_dim,
+        rope_theta=cfg.rope_theta, qkv_bias=cfg.qkv_bias,
+        q_block=cfg.q_block, k_block=cfg.k_block,
+    )
+
+
+def _moe_spec(cfg: ModelConfig) -> MoESpec:
+    return MoESpec(
+        n_experts=cfg.moe_experts, top_k=cfg.moe_top_k, d_model=cfg.d_model,
+        d_ff=cfg.d_ff, ffn_kind=cfg.ffn_kind,
+        capacity_factor=cfg.moe_capacity, shared_expert=cfg.moe_shared,
+        impl=cfg.moe_impl,
+    )
+
+
+def _layer_kinds(cfg: ModelConfig):
+    """('dense',) | ('moe',) | ('dense', 'moe') — the scanned group."""
+    if cfg.moe_every == 1:
+        return ("moe",)
+    if cfg.moe_every == 2:
+        return ("dense", "moe")
+    return ("dense",)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(rng, cfg: ModelConfig, kind: str) -> dict:
+    k1, k2 = jax.random.split(rng)
+    p = {
+        "ln1": init_rms(cfg.d_model, cfg.dtype),
+        "attn": init_attention(k1, cfg.d_model, cfg.n_heads, cfg.n_kv,
+                               cfg.head_dim, qkv_bias=cfg.qkv_bias,
+                               dtype=cfg.dtype),
+        "ln2": init_rms(cfg.d_model, cfg.dtype),
+    }
+    if kind == "moe":
+        p["moe"] = init_moe(k2, _moe_spec(cfg), cfg.dtype)
+    else:
+        p["ffn"] = init_ffn(k2, cfg.d_model, cfg.d_ff, kind=cfg.ffn_kind,
+                            dtype=cfg.dtype)
+    return p
+
+
+def init(cfg: ModelConfig, rng: jax.Array) -> dict:
+    kinds = _layer_kinds(cfg)
+    n_groups = cfg.n_layers // len(kinds)
+    k_emb, k_out, *k_groups = jax.random.split(rng, 2 + len(kinds))
+    params: Dict = {
+        "embed": init_embedding(k_emb, cfg.vocab, cfg.d_model, cfg.dtype),
+        "final_norm": init_rms(cfg.d_model, cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = init_embedding(k_out, cfg.vocab, cfg.d_model,
+                                           cfg.dtype)
+    for kind, kg in zip(kinds, k_groups):
+        keys = jax.random.split(kg, n_groups)
+        params[f"blocks_{kind}"] = jax.vmap(
+            lambda k: _init_block(k, cfg, kind))(keys)
+    return params
+
+
+def _window_array(cfg: ModelConfig) -> jnp.ndarray:
+    return jnp.asarray(
+        [cfg.window_for_layer(i) for i in range(cfg.n_layers)], jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# forward (training)
+# ---------------------------------------------------------------------------
+
+def _block_fwd(p, x, positions, cfg: ModelConfig, kind: str, window,
+               kv_cache=None, cache_len=None):
+    if cfg.shard_activations:
+        from repro.distributed.sharding import constrain
+        # residual stream = the remat stash: batch->data, seq->model
+        # (Megatron-SP); no-op outside a mesh context.
+        x = constrain(x, ("batch", "seq", None))
+    spec = _attn_spec(cfg)
+    h, new_cache = attention(p["attn"], rms_norm(x, p["ln1"], eps=cfg.norm_eps),
+                             positions, spec, kv_cache=kv_cache,
+                             cache_len=cache_len, window=window)
+    x = x + h
+    y = rms_norm(x, p["ln2"], eps=cfg.norm_eps)
+    if kind == "moe":
+        y, aux = moe(p["moe"], y, _moe_spec(cfg))
+    else:
+        y, aux = ffn(p["ffn"], y, kind=cfg.ffn_kind), jnp.zeros((), jnp.float32)
+    return x + y, aux, new_cache
+
+
+def forward(params: dict, tokens: jax.Array, cfg: ModelConfig,
+            *, full_logits: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """tokens [B, S] -> (logits, aux_loss)."""
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = embed(params["embed"], tokens)
+    kinds = _layer_kinds(cfg)
+    n_groups = cfg.n_layers // len(kinds)
+    windows = _window_array(cfg).reshape(n_groups, len(kinds))
+
+    def group_body(carry, scanned):
+        x, aux = carry
+        for gi, kind in enumerate(kinds):
+            p = scanned[f"blocks_{kind}"]
+            x, a, _ = _block_fwd(p, x, positions, cfg, kind,
+                                 scanned["window"][gi])
+            aux = aux + a
+        return (x, aux), None
+
+    body = group_body
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.nothing_saveable
+                  if cfg.remat_policy == "full"
+                  else jax.checkpoint_policies.dots_saveable)
+        body = jax.checkpoint(group_body, policy=policy)
+
+    scanned = {f"blocks_{k}": params[f"blocks_{k}"] for k in kinds}
+    scanned["window"] = windows
+    if cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   scanned)
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(n_groups):
+            sl = jax.tree.map(lambda a: a[i], scanned)
+            (x, aux), _ = body((x, aux), sl)
+
+    x = rms_norm(x, params["final_norm"], eps=cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    if not full_logits:
+        x = x[:, -1:]
+    logits = unembed(table, x)
+    return logits, aux
+
+
+def loss_fn(params: dict, batch: Dict[str, jax.Array], cfg: ModelConfig
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, aux = forward(params, batch["tokens"], cfg)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    loss = ce + 0.01 * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None):
+    """KV caches for serving.
+
+    Uniform-window models: one stacked [L, B, S, kv, dh] pair (scan-able).
+    Mixed local:global models (gemma3): a per-layer LIST where local
+    layers get RING buffers of window size — the paper's rate-aware
+    allocation applied to KV memory: a layer that only ever *consumes*
+    the last w positions is given exactly w slots (Eq. 7/8 spirit).
+    gemma3-1b @ long_500k: 26 full-length caches -> 4 full + 22×512-slot
+    rings = 6.4x less KV memory and traffic.
+    """
+    dtype = dtype or cfg.dtype
+    if cfg.kv_quant and not (cfg.global_every > 0 and cfg.window > 0):
+        shape = (cfg.n_layers, batch, max_len, cfg.n_kv, cfg.head_dim)
+        sshape = (cfg.n_layers, batch, max_len, cfg.n_kv)
+        return (jnp.zeros(shape, jnp.int8), jnp.zeros(shape, jnp.int8),
+                jnp.zeros(sshape, jnp.float32), jnp.zeros(sshape, jnp.float32))
+    if cfg.global_every > 0 and cfg.window > 0 and max_len > cfg.window:
+        caches = []
+        for i in range(cfg.n_layers):
+            w = cfg.window_for_layer(i)
+            size = max_len if w == 0 else min(max_len, w)
+            shape = (batch, size, cfg.n_kv, cfg.head_dim)
+            caches.append((jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)))
+        return caches
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv, cfg.head_dim)
+    return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+
+def _serve_pass_per_layer(params, x, positions, cache, cache_len,
+                          cfg: ModelConfig):
+    """Python-loop serve pass over a per-layer cache LIST (mixed window
+    sizes — see init_cache).  Local layers use ring buffers when their
+    cache is smaller than the context."""
+    kinds = _layer_kinds(cfg)
+    new_cache = []
+    aux = jnp.zeros((), jnp.float32)
+    pos_scalar = jnp.max(jnp.asarray(cache_len))
+    for i in range(cfg.n_layers):
+        kind = kinds[i % len(kinds)]
+        p = dequantize_tree(
+            jax.tree.map(lambda a: a[i // len(kinds)],
+                         params[f"blocks_{kind}"]), cfg.dtype)
+        w = cfg.window_for_layer(i)
+        ck, cv = cache[i]
+        ring = w > 0 and ck.shape[1] <= w       # window-sized ring buffer
+        x, a, nc = _block_fwd_ring(p, x, positions, cfg, kind, (ck, cv),
+                                   pos_scalar if ring else cache_len,
+                                   window=w, ring=ring)
+        aux = aux + a
+        new_cache.append(nc)
+    return x, new_cache
+
+
+def _block_fwd_ring(p, x, positions, cfg: ModelConfig, kind: str, kv, pos,
+                    *, window: int, ring: bool):
+    """Serve block over a per-layer cache (ring for windowed layers)."""
+    if cfg.shard_activations:
+        from repro.distributed.sharding import constrain
+        x = constrain(x, ("batch", "seq", None))
+    spec = _attn_spec(cfg)
+    h, new_cache = attention(p["attn"], rms_norm(x, p["ln1"], eps=cfg.norm_eps),
+                             positions, spec, kv_cache=kv, cache_len=pos,
+                             window=jnp.asarray(window, jnp.int32),
+                             ring=ring)
+    x = x + h
+    y = rms_norm(x, p["ln2"], eps=cfg.norm_eps)
+    if kind == "moe":
+        y, aux = moe(p["moe"], y, _moe_spec(cfg))
+    else:
+        y, aux = ffn(p["ffn"], y, kind=cfg.ffn_kind), jnp.zeros((), jnp.float32)
+    return x + y, aux, new_cache
+
+
+def _serve_pass(params, x, positions, cache, cache_len, cfg: ModelConfig):
+    """Run the layer stack against stacked caches.  cache: (ck, cv) with
+    leading layer dim, or a per-layer list (mixed windows).
+    Returns (x, new_cache)."""
+    if isinstance(cache, list):
+        return _serve_pass_per_layer(params, x, positions, cache, cache_len,
+                                     cfg)
+    kinds = _layer_kinds(cfg)
+    n_groups = cfg.n_layers // len(kinds)
+    windows = _window_array(cfg).reshape(n_groups, len(kinds))
+    parts = tuple(cache)          # (ck, cv) or (ck, cv, sk, sv) quantized
+    grouped = tuple(
+        c.reshape((n_groups, len(kinds)) + c.shape[1:]) for c in parts)
+
+    def group_body(x, scanned):
+        outs = [[] for _ in parts]
+        for gi, kind in enumerate(kinds):
+            # int8-serving: dequantize THIS layer's weight slice only —
+            # the weight stream from HBM stays int8 (the decode win).
+            p = dequantize_tree(scanned[f"blocks_{kind}"], cfg.dtype)
+            kv = tuple(scanned[f"c{j}"][gi] for j in range(len(parts)))
+            x, _, nc = _block_fwd(
+                p, x, positions, cfg, kind, scanned["window"][gi],
+                kv_cache=kv, cache_len=cache_len)
+            for j in range(len(parts)):
+                outs[j].append(nc[j])
+        return x, tuple(jnp.stack(o) for o in outs)
+
+    scanned = {f"blocks_{k}": params[f"blocks_{k}"] for k in kinds}
+    scanned["window"] = windows
+    for j, gc in enumerate(grouped):
+        scanned[f"c{j}"] = gc
+    if cfg.scan_layers:
+        x, new_parts = jax.lax.scan(group_body, x, scanned)
+    else:
+        accum = [[] for _ in parts]
+        for i in range(n_groups):
+            sl = jax.tree.map(lambda a: a[i], scanned)
+            x, np_ = group_body(x, sl)
+            for j in range(len(parts)):
+                accum[j].append(np_[j])
+        new_parts = tuple(jnp.stack(a) for a in accum)
+    return x, tuple(
+        npart.reshape(orig.shape) for npart, orig in zip(new_parts, parts))
+
+
+def _table(params: dict, name: str, cfg: ModelConfig):
+    t = params[name]
+    if _is_qleaf(t):
+        t = dequantize_tree(t, cfg.dtype)
+    return t
+
+
+def prefill(params: dict, tokens: jax.Array, cfg: ModelConfig,
+            cache: Tuple[jax.Array, jax.Array]
+            ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """tokens [B, S] + empty caches -> (last-position logits, caches)."""
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = embed(_table(params, "embed", cfg), tokens)
+    x, cache = _serve_pass(params, x, positions, cache,
+                           jnp.zeros((), jnp.int32), cfg)
+    x = rms_norm(x[:, -1:], params["final_norm"], eps=cfg.norm_eps)
+    table = _table(params,
+                   "embed" if cfg.tie_embeddings else "unembed", cfg)
+    return unembed(table, x), cache
+
+
+def decode_step(params: dict, cache: Tuple[jax.Array, jax.Array],
+                tokens: jax.Array, pos, cfg: ModelConfig
+                ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """tokens [B, 1], pos: current length (scalar, or [B] per-slot for the
+    continuous-batching engine) -> (logits, caches)."""
+    b, s = tokens.shape
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = jnp.broadcast_to(
+        jnp.atleast_1d(pos)[:, None] + jnp.arange(s, dtype=jnp.int32),
+        (b, s)).astype(jnp.int32)
+    x = embed(_table(params, "embed", cfg), tokens)
+    x, cache = _serve_pass(params, x, positions, cache, pos, cfg)
+    x = rms_norm(x, params["final_norm"], eps=cfg.norm_eps)
+    table = _table(params,
+                   "embed" if cfg.tie_embeddings else "unembed", cfg)
+    return unembed(table, x), cache

@@ -1,0 +1,108 @@
+"""mamba2-780m — pure SSM LM (attention-free), SSD chunked scan.
+
+State, not KV, is the decode cache: [L, B, H, P, N] + conv cache.  The
+long_500k cell runs here natively (state size is context-independent —
+the architectural reason the shape suite routes 512k decode to SSM).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn.embeddings import embed, init_embedding, unembed
+from repro.nn.norms import init_rms, rms_norm
+from repro.nn.ssm import SSMSpec, init_ssm, init_ssm_state, ssm_forward
+
+
+def _spec(cfg: ModelConfig) -> SSMSpec:
+    return SSMSpec(d_model=cfg.d_model, d_state=cfg.ssm_state,
+                   d_conv=cfg.ssm_conv, expand=cfg.ssm_expand,
+                   head_dim=cfg.ssm_head_dim, chunk=cfg.ssm_chunk)
+
+
+def init(cfg: ModelConfig, rng: jax.Array) -> dict:
+    k_emb, k_layers = jax.random.split(rng)
+    keys = jax.random.split(k_layers, cfg.n_layers)
+    spec = _spec(cfg)
+    return {
+        "embed": init_embedding(k_emb, cfg.vocab, cfg.d_model, cfg.dtype),
+        "final_norm": init_rms(cfg.d_model, cfg.dtype),
+        "blocks": jax.vmap(lambda k: {
+            "ln": init_rms(cfg.d_model, cfg.dtype),
+            "ssm": init_ssm(k, spec, cfg.dtype),
+        })(keys),
+    }
+
+
+def init_state(cfg: ModelConfig, batch: int):
+    spec = _spec(cfg)
+    s, c = init_ssm_state(batch, spec, cfg.dtype)
+    rep = lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape)
+    return (rep(s), rep(c))
+
+
+def _stack_pass(params, x, cfg: ModelConfig, state=None, decode=False):
+    spec = _spec(cfg)
+
+    def body(carry, scanned):
+        x = carry
+        if cfg.shard_activations:
+            from repro.distributed.sharding import constrain
+            x = constrain(x, ("batch", "seq", None))
+        st = (scanned["s"], scanned["c"]) if "s" in scanned else None
+        y, new_st = ssm_forward(scanned["blk"]["ssm"],
+                                rms_norm(x, scanned["blk"]["ln"],
+                                         eps=cfg.norm_eps),
+                                spec, state=st, decode=decode)
+        return x + y, new_st
+
+    fn = body
+    if cfg.remat and not decode:
+        fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    scanned = {"blk": params["blocks"]}
+    if state is not None:
+        scanned["s"], scanned["c"] = state
+    x, new_states = jax.lax.scan(fn, x, scanned)
+    return x, new_states
+
+
+def forward(params: dict, tokens: jax.Array, cfg: ModelConfig,
+            *, full_logits: bool = True):
+    x = embed(params["embed"], tokens)
+    x, _ = _stack_pass(params, x, cfg, state=None, decode=False)
+    x = rms_norm(x, params["final_norm"], eps=cfg.norm_eps)
+    if not full_logits:
+        x = x[:, -1:]
+    return unembed(params["embed"], x), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, batch: Dict[str, jax.Array], cfg: ModelConfig):
+    logits, aux = forward(params, batch["tokens"], cfg)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return ce, {"ce": ce, "aux": aux}
+
+
+def prefill(params: dict, tokens: jax.Array, cfg: ModelConfig, state):
+    """Returns (last logits, populated state).  ``state`` arg is the
+    initial (zero) state — same calling convention as lm.prefill."""
+    x = embed(params["embed"], tokens)
+    x, new_state = _stack_pass(params, x, cfg, state=state, decode=False)
+    x = rms_norm(x[:, -1:], params["final_norm"], eps=cfg.norm_eps)
+    return unembed(params["embed"], x), new_state
+
+
+def decode_step(params: dict, state, tokens: jax.Array, pos,
+                cfg: ModelConfig):
+    del pos  # SSM state carries position implicitly
+    x = embed(params["embed"], tokens)
+    x, new_state = _stack_pass(params, x, cfg, state=state, decode=True)
+    x = rms_norm(x, params["final_norm"], eps=cfg.norm_eps)
+    return unembed(params["embed"], x), new_state

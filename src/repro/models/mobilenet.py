@@ -1,0 +1,266 @@
+"""MobileNetV1/V2 — the paper's evaluation models.
+
+Two faces:
+
+1. ``mobilenet_v1_chain()`` / ``mobilenet_v2_chain()`` — the ``LayerSpec``
+   chains consumed by the core DSE + resource model (Tables I & II).
+2. ``init_params`` / ``apply`` — a full JAX inference implementation
+   (NHWC, bf16/fp32, optional int8 simulated quantization to honour the
+   paper's 8-bit datapath), used end-to-end by the examples and as the
+   integration target for the Pallas kernels (a ``conv_impls`` mapping
+   lets the caller swap XLA convs for kernel-backed ones).
+
+BatchNorm is folded into conv scale/bias (inference-time, as on the FPGA).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rate import LayerSpec
+
+
+# ==========================================================================
+# LayerSpec chains (the DSE's view)
+# ==========================================================================
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _conv(name, kind, d_in, d_out, hw, k, s, cm=1):
+    out_hw = (_ceil_div(hw[0], s), _ceil_div(hw[1], s))
+    return (
+        LayerSpec(name=name, kind=kind, d_in=d_in, d_out=d_out,
+                  in_hw=hw, out_hw=out_hw, kernel=(k, k), stride=(s, s),
+                  channel_multiplier=cm),
+        out_hw,
+    )
+
+
+def mobilenet_v1_chain(
+    input_hw: Tuple[int, int] = (224, 224), alpha: float = 1.0,
+    num_classes: int = 1000,
+) -> List[LayerSpec]:
+    def c(ch):
+        return max(8, int(ch * alpha))
+
+    layers: List[LayerSpec] = []
+    hw = input_hw
+    spec, hw = _conv("conv1", "conv", 3, c(32), hw, 3, 2)
+    layers.append(spec)
+    # (dw stride, pw out channels)
+    cfg = [(1, 64), (2, 128), (1, 128), (2, 256), (1, 256), (2, 512),
+           (1, 512), (1, 512), (1, 512), (1, 512), (1, 512),
+           (2, 1024), (1, 1024)]
+    d = c(32)
+    for i, (s, out) in enumerate(cfg):
+        spec, hw = _conv(f"dw{i+1}", "dwconv", d, d, hw, 3, s)
+        layers.append(spec)
+        spec, hw = _conv(f"pw{i+1}", "pointwise", d, c(out), hw, 1, 1)
+        layers.append(spec)
+        d = c(out)
+    layers.append(LayerSpec(name="gap", kind="gap", d_in=d, d_out=d,
+                            in_hw=hw, out_hw=(1, 1), kernel=hw))
+    layers.append(LayerSpec(name="fc", kind="dense", d_in=d,
+                            d_out=num_classes, in_hw=(1, 1), out_hw=(1, 1)))
+    return layers
+
+
+_V2_CFG = [
+    # (expansion t, out channels c, repeats n, first stride s)
+    (1, 16, 1, 1),
+    (6, 24, 2, 2),
+    (6, 32, 3, 2),
+    (6, 64, 4, 2),
+    (6, 96, 3, 1),
+    (6, 160, 3, 2),
+    (6, 320, 1, 1),
+]
+
+
+def mobilenet_v2_chain(
+    input_hw: Tuple[int, int] = (224, 224), alpha: float = 1.0,
+    num_classes: int = 1000,
+) -> List[LayerSpec]:
+    def c(ch):
+        ch = int(ch * alpha)
+        return max(8, (ch + 4) // 8 * 8)
+
+    layers: List[LayerSpec] = []
+    hw = input_hw
+    spec, hw = _conv("conv1", "conv", 3, c(32), hw, 3, 2)
+    layers.append(spec)
+    d = c(32)
+    blk = 0
+    for t, ch, n, s in _V2_CFG:
+        for i in range(n):
+            blk += 1
+            stride = s if i == 0 else 1
+            exp = d * t
+            if t != 1:
+                spec, hw = _conv(f"b{blk}_expand", "pointwise", d, exp, hw, 1, 1)
+                layers.append(spec)
+            spec, hw = _conv(f"b{blk}_dw", "dwconv", exp, exp, hw, 3, stride)
+            layers.append(spec)
+            spec, hw = _conv(f"b{blk}_project", "pointwise", exp, c(ch), hw, 1, 1)
+            layers.append(spec)
+            d = c(ch)
+    spec, hw = _conv("conv_last", "pointwise", d, c(1280) if alpha > 1.0 else 1280,
+                     hw, 1, 1)
+    layers.append(spec)
+    d = 1280 if alpha <= 1.0 else c(1280)
+    layers.append(LayerSpec(name="gap", kind="gap", d_in=d, d_out=d,
+                            in_hw=hw, out_hw=(1, 1), kernel=hw))
+    layers.append(LayerSpec(name="fc", kind="dense", d_in=d,
+                            d_out=num_classes, in_hw=(1, 1), out_hw=(1, 1)))
+    return layers
+
+
+# ==========================================================================
+# JAX model (NHWC, folded BN)
+# ==========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class MobileNetConfig:
+    version: int = 2
+    input_hw: Tuple[int, int] = (224, 224)
+    alpha: float = 1.0
+    num_classes: int = 1000
+    dtype: jnp.dtype = jnp.float32
+
+    def chain(self) -> List[LayerSpec]:
+        fn = mobilenet_v1_chain if self.version == 1 else mobilenet_v2_chain
+        return fn(self.input_hw, self.alpha, self.num_classes)
+
+
+def init_params(cfg: MobileNetConfig, rng: jax.Array) -> Dict[str, Dict[str, jax.Array]]:
+    """He-init weights + folded-BN bias for every layer in the chain."""
+    params: Dict[str, Dict[str, jax.Array]] = {}
+    for spec in cfg.chain():
+        if spec.kind in ("gap", "add", "pool"):
+            continue
+        rng, k1, k2 = jax.random.split(rng, 3)
+        if spec.kind == "conv":
+            shape = (*spec.kernel, spec.d_in, spec.d_out)
+            fan_in = spec.d_in * spec.k_taps
+        elif spec.kind == "dwconv":
+            # HWIO for grouped conv: I = 1 (per-group), O = C * multiplier
+            shape = (*spec.kernel, 1, spec.d_in * spec.channel_multiplier)
+            fan_in = spec.k_taps
+        else:  # pointwise / dense
+            shape = (spec.d_in, spec.d_out)
+            fan_in = spec.d_in
+        w = jax.random.normal(k1, shape, cfg.dtype) * np.sqrt(2.0 / fan_in)
+        b = jnp.zeros((spec.d_out,), cfg.dtype)
+        params[spec.name] = {"w": w, "b": b}
+    return params
+
+
+def _relu6(x):
+    return jnp.clip(x, 0.0, 6.0)
+
+
+ConvImpl = Callable[..., jax.Array]
+
+
+def _default_conv(x, w, stride):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _default_dwconv(x, w, stride):
+    c = x.shape[-1]
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+
+
+def _default_pointwise(x, w):
+    return jnp.einsum("bhwc,cd->bhwd", x, w)
+
+
+def apply(
+    params: Dict[str, Dict[str, jax.Array]],
+    x: jax.Array,
+    cfg: MobileNetConfig,
+    *,
+    conv_impls: Optional[Dict[str, ConvImpl]] = None,
+) -> jax.Array:
+    """Forward pass.  ``x``: [N, H, W, 3].  Returns logits [N, classes].
+
+    ``conv_impls`` may override {'conv', 'dwconv', 'pointwise'} with
+    kernel-backed implementations (see repro.kernels.*.ops).
+    """
+    impls = {"conv": _default_conv, "dwconv": _default_dwconv,
+             "pointwise": _default_pointwise}
+    if conv_impls:
+        impls.update(conv_impls)
+
+    chain = cfg.chain()
+    residual: Optional[jax.Array] = None
+    block_in: Optional[jax.Array] = None
+    x = x.astype(cfg.dtype)
+
+    for spec in chain:
+        if spec.kind == "gap":
+            x = jnp.mean(x, axis=(1, 2))
+            continue
+        p = params[spec.name]
+        if spec.kind == "conv":
+            x = impls["conv"](x, p["w"], spec.stride[0]) + p["b"]
+            x = _relu6(x)
+        elif spec.kind == "dwconv":
+            x = impls["dwconv"](x, p["w"], spec.stride[0]) + p["b"]
+            x = _relu6(x)
+        elif spec.kind == "pointwise":
+            is_project = cfg.version == 2 and spec.name.endswith("_project")
+            is_expand = cfg.version == 2 and spec.name.endswith("_expand")
+            if is_expand:
+                block_in = x
+            x = impls["pointwise"](x, p["w"]) + p["b"]
+            if is_project:
+                # linear bottleneck: no activation; residual when shapes match
+                if block_in is not None and block_in.shape == x.shape:
+                    x = x + block_in
+                block_in = None
+            else:
+                x = _relu6(x)
+        elif spec.kind == "dense":
+            x = x @ p["w"] + p["b"]
+    return x
+
+
+# ==========================================================================
+# int8 simulated-quantization path (paper runs an 8-bit datapath)
+# ==========================================================================
+
+def quantize_params(params, bits: int = 8):
+    """Per-tensor symmetric int8 weights; returns (q_params, scales)."""
+    qmax = 2 ** (bits - 1) - 1
+    q, scales = {}, {}
+    for name, p in params.items():
+        s = jnp.maximum(jnp.max(jnp.abs(p["w"])), 1e-8) / qmax
+        q[name] = {"w": jnp.round(p["w"] / s).astype(jnp.int8), "b": p["b"]}
+        scales[name] = s
+    return q, scales
+
+
+def apply_int8(q_params, scales, x, cfg: MobileNetConfig) -> jax.Array:
+    """Inference with int8 weights dequantized on the fly (sim of the
+    FPGA's int8 datapath; activations stay float — activation quant is
+    exercised in the kernels' int8 mode)."""
+    deq = {
+        name: {"w": p["w"].astype(cfg.dtype) * scales[name], "b": p["b"]}
+        for name, p in q_params.items()
+    }
+    return apply(deq, x, cfg)

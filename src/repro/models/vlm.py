@@ -1,0 +1,85 @@
+"""internvl2-2b backbone — InternLM2-style LM consuming a STUB ViT.
+
+Per the task spec the modality frontend is a stub: ``input_specs()``
+provides precomputed patch embeddings [B, n_patches, d_model] (the
+InternViT output after the mlp1 projector).  They are concatenated ahead
+of the text embeddings; everything downstream is the standard causal LM
+from models.lm (the image prefix participates in causal attention the way
+InternVL's chat template places it).
+
+Serving: the patch embeds are part of the *prefill*; decode is plain LM
+decode (the image lives in the KV cache) — the frontend->backbone rate
+drop is a stage boundary for core.stage_partition.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.nn.embeddings import embed, unembed
+from repro.nn.norms import rms_norm
+
+init = lm.init            # same parameter structure (vision tower is stubbed)
+init_cache = lm.init_cache
+decode_step = lm.decode_step   # decode never sees patches directly
+
+
+def _merge(params, tokens, patches, cfg):
+    """[B, St] tokens + [B, Np, d] patches -> [B, Np+St, d] embeddings."""
+    tok_x = embed(lm._table(params, "embed", cfg), tokens)
+    return jnp.concatenate([patches.astype(tok_x.dtype), tok_x], axis=1)
+
+
+def forward(params, tokens, patches, cfg: ModelConfig, *, full_logits=True):
+    x = _merge(params, tokens, patches, cfg)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    kinds = lm._layer_kinds(cfg)
+    n_groups = cfg.n_layers // len(kinds)
+    windows = lm._window_array(cfg).reshape(n_groups, len(kinds))
+
+    def group_body(carry, scanned):
+        x, aux = carry
+        for gi, kind in enumerate(kinds):
+            p = scanned[f"blocks_{kind}"]
+            x, a, _ = lm._block_fwd(p, x, positions, cfg, kind,
+                                    scanned["window"][gi])
+            aux = aux + a
+        return (x, aux), None
+
+    body = jax.checkpoint(group_body,
+                          policy=jax.checkpoint_policies.nothing_saveable) \
+        if cfg.remat else group_body
+    scanned = {f"blocks_{k}": params[f"blocks_{k}"] for k in kinds}
+    scanned["window"] = windows
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), scanned)
+    x = rms_norm(x, params["final_norm"], eps=cfg.norm_eps)
+    if not full_logits:
+        x = x[:, -1:]
+    return unembed(params["embed"], x), aux
+
+
+def loss_fn(params, batch: Dict[str, jax.Array], cfg: ModelConfig):
+    """CE on the text region only (labels are text-aligned)."""
+    logits, aux = forward(params, batch["tokens"], batch["patches"], cfg)
+    text_logits = logits[:, cfg.n_patches:, :]
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(text_logits, axis=-1)
+    gold = jnp.take_along_axis(text_logits, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return ce + 0.01 * aux, {"ce": ce, "aux": aux}
+
+
+def prefill(params, tokens, patches, cfg: ModelConfig, cache):
+    x = _merge(params, tokens, patches, cfg)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, cache = lm._serve_pass(params, x, positions, cache,
+                              jnp.zeros((), jnp.int32), cfg)
+    x = rms_norm(x[:, -1:], params["final_norm"], eps=cfg.norm_eps)
+    return unembed(lm._table(params, "embed", cfg), x), cache

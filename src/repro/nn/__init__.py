@@ -1,0 +1,1 @@
+"""Neural-net substrate: layers used by all 10 assigned architectures."""

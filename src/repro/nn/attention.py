@@ -1,0 +1,303 @@
+"""Attention substrate: GQA, RoPE, sliding windows, KV-cache decode.
+
+The training/prefill path uses *blockwise* attention (lax.scan over query
+and KV blocks with an online-softmax running state) — the pure-JAX
+counterpart of kernels/attention, chosen so 32k-token prefills never
+materialize an [Sq, Skv] score matrix.  This is the continuous-flow idea
+at the memory level: consume the KV stream in rate-matched blocks.
+
+Sliding windows are a *traced* per-layer scalar (0 = global), so layer
+stacks with mixed local/global attention (gemma3's 5:1) scan over stacked
+params with a per-layer window array — one compiled block for all layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .embeddings import rope
+
+_NEG = -1e30
+
+
+def init_attention(rng, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+                   *, qkv_bias: bool = False, dtype=jnp.float32) -> dict:
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    s_in = 1.0 / math.sqrt(d_model)
+    s_out = 1.0 / math.sqrt(n_heads * head_dim)
+    p = {
+        "wq": (jax.random.normal(k1, (d_model, n_heads * head_dim), jnp.float32) * s_in).astype(dtype),
+        "wk": (jax.random.normal(k2, (d_model, n_kv * head_dim), jnp.float32) * s_in).astype(dtype),
+        "wv": (jax.random.normal(k3, (d_model, n_kv * head_dim), jnp.float32) * s_in).astype(dtype),
+        "wo": (jax.random.normal(k4, (n_heads * head_dim, d_model), jnp.float32) * s_out).astype(dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv * head_dim,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# masked blockwise attention core
+# ---------------------------------------------------------------------------
+
+def _mask(q_pos, k_pos, *, causal: bool, window, kv_len):
+    """[.., Sq, Sk] boolean validity mask from position vectors."""
+    m = jnp.ones(q_pos.shape[:-1] + (q_pos.shape[-1], k_pos.shape[-1]),
+                 dtype=bool)
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    if causal:
+        m &= kp <= qp
+    if window is not None:
+        w = jnp.asarray(window, jnp.int32)
+        m &= jnp.where(w > 0, (qp - kp) < w, True)
+    if kv_len is not None:
+        m &= kp < jnp.asarray(kv_len, jnp.int32)[..., None, None]
+    return m
+
+
+def _attend_dense(q, k, v, q_pos, k_pos, *, causal, window, kv_len, scale):
+    """q: [B, Hkv, G, Sq, D]; k/v: [B, Hkv, Sk, D].
+
+    f32 accumulation happens inside the dots (preferred_element_type);
+    casting the operands themselves would materialize the whole KV cache
+    in f32 (measured 4 GiB/dev x many at grok decode_32k).
+    """
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    m = _mask(q_pos, k_pos, causal=causal, window=window, kv_len=kv_len)
+    # broadcast mask [B?, Sq, Sk] -> [B, 1, 1, Sq, Sk]
+    while m.ndim < s.ndim:
+        m = m[:, None] if m.ndim > 2 else m[None]
+    s = jnp.where(m, s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out
+
+
+def _attend_blockwise(q, k, v, q_pos, k_pos, *, causal, window, kv_len,
+                      scale, q_block: int, k_block: int):
+    """Online-softmax double scan.  Same signature as _attend_dense."""
+    b, hkv, g, sq, d = q.shape
+    sk = k.shape[2]
+    q_block = min(q_block, sq)
+    k_block = min(k_block, sk)
+    while sq % q_block:
+        q_block //= 2
+    while sk % k_block:
+        k_block //= 2
+    q_block, k_block = max(q_block, 1), max(k_block, 1)
+    nq, nk = sq // q_block, sk // k_block
+
+    qb = q.reshape(b, hkv, g, nq, q_block, d).transpose(3, 0, 1, 2, 4, 5)
+    qpb = q_pos.reshape(q_pos.shape[:-1] + (nq, q_block))
+    qpb = jnp.moveaxis(qpb, -2, 0)                     # [nq, ..., q_block]
+    kb = k.reshape(b, hkv, nk, k_block, d).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, hkv, nk, k_block, d).transpose(2, 0, 1, 3, 4)
+    kpb = k_pos.reshape(nk, k_block)
+
+    def q_step(_, q_in):
+        q_i, qp_i = q_in
+
+        @jax.checkpoint
+        def kv_step(carry, kv_in):
+            m_run, l_run, acc = carry
+            k_j, v_j, kp_j = kv_in
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", q_i, k_j,
+                           preferred_element_type=jnp.float32) * scale
+            msk = _mask(qp_i, kp_j, causal=causal, window=window,
+                        kv_len=kv_len)
+            while msk.ndim < s.ndim:
+                msk = msk[:, None] if msk.ndim > 2 else msk[None]
+            s = jnp.where(msk, s, _NEG)
+            m_cur = jnp.max(s, axis=-1, keepdims=True)
+            m_new = jnp.maximum(m_run, m_cur)
+            p = jnp.exp(s - m_new)
+            alpha = jnp.exp(m_run - m_new)
+            l_new = alpha * l_run + jnp.sum(p, axis=-1, keepdims=True)
+            acc_new = acc * alpha + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p.astype(v_j.dtype), v_j,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((b, hkv, g, q_block, 1), _NEG, jnp.float32),
+            jnp.zeros((b, hkv, g, q_block, 1), jnp.float32),
+            jnp.zeros((b, hkv, g, q_block, d), jnp.float32),
+        )
+        (m_f, l_f, acc_f), _ = jax.lax.scan(kv_step, init, (kb, vb, kpb))
+        return None, acc_f / jnp.maximum(l_f, 1e-30)
+
+    # checkpoint both scan levels: bwd recomputes blocks instead of
+    # stashing per-(q,kv)-block softmax residuals (which would be the
+    # full S^2 score matrix again — defeating blockwise attention).
+    _, out = jax.lax.scan(jax.checkpoint(q_step), None, (qb, qpb))
+    # out: [nq, b, hkv, g, q_block, d] -> [b, hkv, g, sq, d]
+    return out.transpose(1, 2, 3, 0, 4, 5).reshape(b, hkv, g, sq, d)
+
+
+# ---------------------------------------------------------------------------
+# public layer
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    causal: bool = True
+    qkv_bias: bool = False
+    use_rope: bool = True
+    q_block: int = 512
+    k_block: int = 1024
+    impl: str = "auto"          # auto | dense | blockwise
+    dense_max: int = 2048       # auto: dense below, blockwise above
+
+
+def attention(
+    params: dict,
+    x: jax.Array,                       # [B, Sq, d_model]
+    q_positions: jax.Array,             # [B, Sq]
+    spec: AttnSpec,
+    *,
+    x_kv: Optional[jax.Array] = None,   # cross-attention source [B, Skv, d]
+    kv_cache: Optional[Tuple[jax.Array, jax.Array]] = None,  # [B, Smax, n_kv, D]
+    cache_len=None,                     # scalar int32: valid entries in cache
+    window=None,                        # traced scalar, 0/None = global
+    ring: bool = False,                 # cache is a ring buffer of size w:
+                                        # rate-aware KV for windowed layers
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """Returns (out [B, Sq, d_model], updated kv_cache or None)."""
+    b, sq, _ = x.shape
+    h, nkv, dh = spec.n_heads, spec.n_kv, spec.head_dim
+    g = h // nkv
+
+    q = x @ params["wq"]
+    src = x if x_kv is None else x_kv
+    k = src @ params["wk"]
+    v = src @ params["wv"]
+    if spec.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+
+    q = q.reshape(b, sq, h, dh)
+    k = k.reshape(b, src.shape[1], nkv, dh)
+    v = v.reshape(b, src.shape[1], nkv, dh)
+
+    if spec.use_rope and x_kv is None:
+        q = rope(q, q_positions, theta=spec.rope_theta)
+        k = rope(k, q_positions, theta=spec.rope_theta)
+
+    new_cache = None
+    if kv_cache is not None and ring:
+        # Ring-buffer cache: slot = t mod w.  Slot i holds absolute
+        # position t = P - ((P - i) mod w) for current position P
+        # (negative = empty, masked via a sentinel position).
+        ck, cv = kv_cache                          # [B, w, nkv, D]
+        w_size = ck.shape[1]
+        start = jnp.asarray(cache_len, jnp.int32)  # absolute first position
+        if sq == 1:
+            slot = start % w_size
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                              (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                              (0, slot, 0, 0))
+            new_cache = (ck, cv)
+            k, v = ck, cv
+            kv_len = None                          # validity via k_pos
+            i = jnp.arange(w_size, dtype=jnp.int32)
+            t = start - ((start - i) % w_size)
+            k_pos = jnp.where(t >= 0, t, jnp.int32(2 ** 30))
+        else:
+            # prefill into a ring: the ring keeps the LAST w tokens;
+            # attention itself runs over the current (full) k/v with the
+            # window mask — the cache never held older context anyway.
+            keep = min(w_size, sq)
+            t_abs = start + jnp.arange(sq - keep, sq, dtype=jnp.int32)
+            slots = t_abs % w_size
+            ck = ck.at[:, slots].set(k[:, -keep:].astype(ck.dtype))
+            cv = cv.at[:, slots].set(v[:, -keep:].astype(cv.dtype))
+            new_cache = (ck, cv)
+            kv_len = None
+            k_pos = start + jnp.arange(sq, dtype=jnp.int32)
+    elif kv_cache is not None and len(kv_cache) == 4:
+        # int8-quantized cache (paper's 8-bit datapath, KV edition):
+        # values in int8 + per-(token, kv-head) f32 scales — ~0.5x the
+        # bf16 cache bytes, the decode roofline's dominant term.
+        ck, cv, sk, sv = kv_cache                  # int8 x2, f32 [B,S,kv] x2
+        start = jnp.asarray(cache_len, jnp.int32)
+        k_s = jnp.max(jnp.abs(k.astype(jnp.float32)), axis=-1) / 127.0
+        v_s = jnp.max(jnp.abs(v.astype(jnp.float32)), axis=-1) / 127.0
+        k_s = jnp.maximum(k_s, 1e-8)
+        v_s = jnp.maximum(v_s, 1e-8)
+        k_q = jnp.clip(jnp.round(k.astype(jnp.float32) / k_s[..., None]),
+                       -127, 127).astype(jnp.int8)
+        v_q = jnp.clip(jnp.round(v.astype(jnp.float32) / v_s[..., None]),
+                       -127, 127).astype(jnp.int8)
+        ck = jax.lax.dynamic_update_slice(ck, k_q, (0, start, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v_q, (0, start, 0, 0))
+        sk = jax.lax.dynamic_update_slice(sk, k_s.astype(sk.dtype),
+                                          (0, start, 0))
+        sv = jax.lax.dynamic_update_slice(sv, v_s.astype(sv.dtype),
+                                          (0, start, 0))
+        new_cache = (ck, cv, sk, sv)
+        k = (ck.astype(x.dtype) * sk[..., None].astype(x.dtype))
+        v = (cv.astype(x.dtype) * sv[..., None].astype(x.dtype))
+        kv_len = start + sq
+        k_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
+    elif kv_cache is not None:
+        ck, cv = kv_cache                          # [B, Smax, nkv, D]
+        start = jnp.asarray(cache_len, jnp.int32)
+        if start.ndim == 0:
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                              (0, start, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                              (0, start, 0, 0))
+        else:
+            # per-slot positions (continuous-batching engine): vmapped
+            # per-row update at each slot's own write offset.
+            upd = jax.vmap(
+                lambda c, kk, s0: jax.lax.dynamic_update_slice(
+                    c, kk, (s0, 0, 0)))
+            ck = upd(ck, k.astype(ck.dtype), start)
+            cv = upd(cv, v.astype(cv.dtype), start)
+        new_cache = (ck, cv)
+        k, v = ck, cv
+        kv_len = start + sq
+        k_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
+    else:
+        kv_len = None
+        k_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
+
+    # [B, Hkv, G, Sq, D] / [B, Hkv, Sk, D]
+    qh = q.reshape(b, sq, nkv, g, dh).transpose(0, 2, 3, 1, 4)
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+
+    scale = 1.0 / math.sqrt(dh)
+    skv = kh.shape[2]
+    impl = spec.impl
+    if impl == "auto":
+        impl = "dense" if (sq * skv <= spec.dense_max ** 2) else "blockwise"
+    if impl == "dense":
+        out = _attend_dense(qh, kh, vh, q_positions, k_pos,
+                            causal=spec.causal and x_kv is None,
+                            window=window, kv_len=kv_len, scale=scale)
+    else:
+        out = _attend_blockwise(qh, kh, vh, q_positions, k_pos,
+                                causal=spec.causal and x_kv is None,
+                                window=window, kv_len=kv_len, scale=scale,
+                                q_block=spec.q_block, k_block=spec.k_block)
+
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h * dh)
+    out = out.astype(x.dtype) @ params["wo"]
+    return out, new_cache

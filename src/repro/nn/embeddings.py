@@ -1,0 +1,51 @@
+"""Token embeddings and rotary position embeddings."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def init_embedding(rng, vocab: int, d: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(rng, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def embed(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(table: jax.Array, x: jax.Array) -> jax.Array:
+    """Tied softmax projection: [..., d] @ [vocab, d]^T.
+
+    Inputs stay in their storage dtype; accumulation is f32 via
+    preferred_element_type — f32 logits without f32 *operand* copies
+    (and bf16 embedding gradients instead of a full-vocab f32 temp).
+    """
+    return jnp.einsum("...d,vd->...v", x, table,
+                      preferred_element_type=jnp.float32)
+
+
+def rope(
+    x: jax.Array,                 # [..., S, H, Dh] or [..., S, Dh]
+    positions: jax.Array,         # [..., S] int32
+    *,
+    theta: float = 10000.0,
+    rotary_dim: Optional[int] = None,
+) -> jax.Array:
+    """Rotary embeddings, split-half convention (llama-style)."""
+    dh = x.shape[-1]
+    rd = rotary_dim or dh
+    half = rd // 2
+    freqs = jnp.exp(
+        -jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs   # [..., S, half]
+    if x.ndim == ang.ndim + 1:                               # heads axis present
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:rd]
+    rot = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    if rd < dh:
+        rot = jnp.concatenate([rot, x[..., rd:]], axis=-1)
+    return rot.astype(x.dtype)

@@ -1,0 +1,50 @@
+"""FFN variants + shared initializers."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def _dense_init(rng, shape, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+    return (jax.random.normal(rng, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_ffn(rng, d_model: int, d_ff: int, *, kind: str = "swiglu",
+             dtype=jnp.float32) -> dict:
+    """kind: swiglu | geglu (gated, 3 matrices) or gelu (plain, 2)."""
+    k1, k2, k3 = jax.random.split(rng, 3)
+    p = {"w_up": _dense_init(k1, (d_model, d_ff), dtype),
+         "w_down": _dense_init(k2, (d_ff, d_model), dtype)}
+    if kind in ("swiglu", "geglu"):
+        p["w_gate"] = _dense_init(k3, (d_model, d_ff), dtype)
+    return p
+
+
+def ffn(params: dict, x: jax.Array, *, kind: str = "swiglu") -> jax.Array:
+    up = x @ params["w_up"]
+    if kind == "swiglu":
+        act = jax.nn.silu(x @ params["w_gate"]) * up
+    elif kind == "geglu":
+        act = jax.nn.gelu(x @ params["w_gate"]) * up
+    elif kind == "gelu":
+        act = jax.nn.gelu(up)
+    else:
+        raise ValueError(kind)
+    return act @ params["w_down"]
+
+
+def dense(rng, d_in: int, d_out: int, *, dtype=jnp.float32, bias=False):
+    p = {"w": _dense_init(rng, (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def apply_dense(params, x):
+    y = x @ params["w"]
+    if "b" in params:
+        y = y + params["b"]
+    return y

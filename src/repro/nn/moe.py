@@ -1,0 +1,249 @@
+"""Mixture-of-experts FFN (grok-1: 8e top-2; llama4: 128e top-1 + shared).
+
+Three implementations, selectable per config (``moe_impl``):
+
+* ``"scatter"`` (default) — capacity-buffer dispatch via scatter-add,
+  grouped per batch row.  No [T, E, C] one-hot is ever materialized
+  (the classic GShard einsum's memory killer at 1M-token steps): the
+  dispatch is a [T*k] -> [G, E, C, d] scatter (30 GB global at grok-1
+  train_4k — fine sharded), and expert compute is a single
+  ``becd,edf`` einsum whose FLOPs are exactly top_k * capacity_factor *
+  dense-FFN — HLO-FLOP-clean.  Groups align with the batch sharding, so
+  the scatter partitions over 'data' without resharding.
+* ``"einsum"`` — textbook GShard one-hot dispatch (kept as the reference
+  implementation and for ablation; fine at test scale, documented-
+  quadratic at datacenter scale).
+* ``"ragged"`` — dropless sort + ``lax.ragged_dot`` grouped GEMM; used on
+  the single-host serving path.
+
+Expert capacity is the paper's continuous-flow constraint (§II-C
+analogue): per-expert buffer (service rate) must cover expected token
+arrival, C = ceil(g * top_k / E * capacity_factor) per group of g tokens.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ffn, init_ffn, _dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    n_experts: int
+    top_k: int
+    d_model: int
+    d_ff: int
+    ffn_kind: str = "swiglu"
+    capacity_factor: float = 1.25
+    shared_expert: bool = False
+    impl: str = "einsum"             # einsum | scatter | ragged
+    group_size: int = 256            # tokens per dispatch group (einsum)
+
+
+def capacity(spec: MoESpec, group_tokens: int) -> int:
+    return max(spec.top_k, int(math.ceil(
+        group_tokens * spec.top_k / spec.n_experts * spec.capacity_factor)))
+
+
+def init_moe(rng, spec: MoESpec, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(rng, 5)
+    e, d, f = spec.n_experts, spec.d_model, spec.d_ff
+    scale_in = 1.0 / math.sqrt(d)
+    scale_out = 1.0 / math.sqrt(f)
+
+    def stack(key, shape, scale):
+        return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+    p = {
+        "router": _dense_init(ks[0], (d, e), jnp.float32),  # router in f32
+        "w_up": stack(ks[1], (e, d, f), scale_in),
+        "w_down": stack(ks[2], (e, f, d), scale_out),
+    }
+    if spec.ffn_kind in ("swiglu", "geglu"):
+        p["w_gate"] = stack(ks[3], (e, d, f), scale_in)
+    if spec.shared_expert:
+        p["shared"] = init_ffn(ks[4], d, f, kind=spec.ffn_kind, dtype=dtype)
+    return p
+
+
+def _route(params, x2d, spec: MoESpec):
+    """-> (gates [T, k], idx [T, k], aux_loss scalar)."""
+    logits = x2d.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, spec.top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    # load-balancing auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx, spec.n_experts, dtype=jnp.float32), axis=1),
+        axis=0)
+    aux = spec.n_experts * jnp.sum(me * ce)
+    return gates, idx, aux
+
+
+def _expert_ffn_grouped(p, xe, kind):
+    """xe: [G, E, C, d] -> [G, E, C, d].
+
+    The group dim G aligns with the batch sharding and the hidden dim f
+    with tensor parallelism; without explicit constraints XLA resolves
+    the (FSDP-sharded weights x group-sharded activations) contraction by
+    replicating the [G,E,C,f] intermediates over data — a multi-GiB/dev
+    temp at grok-1 scale (measured).  The constraints force the
+    all-gather onto the (smaller) weights instead.
+    """
+    from repro.distributed.sharding import constrain
+    xe = constrain(xe, ("batch", None, None, None))
+    up = constrain(jnp.einsum("gecd,edf->gecf", xe, p["w_up"]),
+                   ("batch", None, None, "tp"))
+    if kind in ("swiglu", "geglu"):
+        gate = constrain(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"]),
+                         ("batch", None, None, "tp"))
+        act = (jax.nn.silu(gate) if kind == "swiglu" else jax.nn.gelu(gate)) * up
+    else:
+        act = jax.nn.gelu(up)
+    out = jnp.einsum("gecf,efd->gecd", act, p["w_down"])
+    return constrain(out, ("batch", None, None, None))
+
+
+# ---------------------------------------------------------------------------
+# scatter impl (production path)
+# ---------------------------------------------------------------------------
+
+def moe_scatter(params: dict, x: jax.Array, spec: MoESpec):
+    """x: [B, S, d] -> ([B, S, d], aux).  Groups = batch rows (aligned with
+    the data sharding, so the dispatch scatter stays shard-local)."""
+    b, s, d = x.shape
+    k = spec.top_k
+    e = spec.n_experts
+    cap = capacity(spec, s)
+    x2 = x.reshape(b * s, d)
+    gates, idx, aux = _route(params, x2, spec)       # [T, k]
+
+    # position of each routed copy inside its (row, expert) buffer
+    idx_r = idx.reshape(b, s * k)                     # expert ids per row
+    onehot = jax.nn.one_hot(idx_r, e, dtype=jnp.int32)        # [b, s*k, E]
+    pos_all = jnp.cumsum(onehot, axis=1) - 1                   # [b, s*k, E]
+    pos = jnp.take_along_axis(pos_all, idx_r[..., None], axis=-1)[..., 0]
+    keep = pos < cap                                           # drops
+
+    from repro.distributed.sharding import constrain
+    rows = jnp.broadcast_to(jnp.arange(b)[:, None], (b, s * k))
+    pos_c = jnp.where(keep, pos, cap)    # overflow slot -> dropped bucket
+    xr = jnp.repeat(x.reshape(b, s, 1, d), k, axis=2).reshape(b, s * k, d)
+    xr = constrain(xr, ("batch", None, None))
+
+    # GSPMD cannot infer that the scatter's batch indices align with the
+    # operand's batch sharding; without the constraint the dispatch buffer
+    # replicates over 'data' (measured 48 GiB/dev at grok prefill_32k).
+    xe = jnp.zeros((b, e, cap + 1, d), x.dtype)
+    xe = xe.at[rows, idx_r, pos_c].add(xr)
+    xe = constrain(xe, ("batch", None, None, None))
+    ye = _expert_ffn_grouped(params, xe[:, :, :cap], spec.ffn_kind)
+    ye = jnp.pad(ye, ((0, 0), (0, 0), (0, 1), (0, 0)))   # dropped bucket = 0
+    ye = constrain(ye, ("batch", None, None, None))
+
+    yr = constrain(ye[rows, idx_r, pos_c], ("batch", None, None))
+    g = (gates.reshape(b, s * k) * keep).astype(yr.dtype)
+    y = jnp.sum((yr * g[..., None]).reshape(b, s, k, d), axis=2)
+
+    if spec.shared_expert:
+        y = y + ffn(params["shared"], x, kind=spec.ffn_kind)
+    return y.astype(x.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# einsum impl (GShard dispatch with SMALL groups — the production path)
+# ---------------------------------------------------------------------------
+
+def moe_einsum(params: dict, x: jax.Array, spec: MoESpec):
+    """One-hot dispatch over fixed-size token groups.
+
+    Group size g (<= spec.group_size) keeps the [G, g, E, C(g)] one-hot
+    small (C scales with g, so total one-hot bytes ~ T*g*topk*cf — at
+    g=512 that's ~134 MB/device for a 1M-token grok prefill) while the
+    dispatch einsum stays an ordinary matmul GSPMD partitions on the
+    group axis.  Dispatch FLOPs are ~2*g*topk*cf*d per token: ~0.5% of
+    expert FLOPs at g=512 (counted in core/flops.py).
+
+    The scatter formulation (moe_scatter) has zero dispatch FLOPs but
+    GSPMD cannot batch-partition the scatter and replicates the buffers
+    (measured 48 GiB/device at grok prefill) — kept for ablation.
+    """
+    b, s, d = x.shape
+    k = spec.top_k
+    e = spec.n_experts
+    g = min(spec.group_size, s)
+    while s % g:
+        g //= 2
+    g = max(g, 1)
+    ng = (b * s) // g
+    cap = capacity(spec, g)
+    gates, idx, aux = _route(params, x.reshape(-1, d), spec)
+
+    xg = x.reshape(ng, g, d)
+    idx_r = idx.reshape(ng, g, k)
+    gates_r = gates.reshape(ng, g, k)
+    onehot_e = jax.nn.one_hot(idx_r, e, dtype=jnp.float32)    # [G, g, k, E]
+    pos = jnp.cumsum(onehot_e.reshape(ng, g * k, e), axis=1).reshape(
+        ng, g, k, e) - 1.0
+    keep = (pos < cap) & (onehot_e > 0)
+    pos = jnp.where(keep, pos, 0.0).astype(jnp.int32)
+    disp = (jax.nn.one_hot(pos, cap, dtype=x.dtype)
+            * keep[..., None].astype(x.dtype))                # [G, g, k, E, C]
+    comb = jnp.sum(disp * gates_r[..., None, None].astype(x.dtype), axis=2)
+    disp = jnp.sum(disp, axis=2)                              # [G, g, E, C]
+
+    xe = jnp.einsum("gsec,gsd->gecd", disp, xg)
+    ye = _expert_ffn_grouped(params, xe, spec.ffn_kind)
+    y = jnp.einsum("gsec,gecd->gsd", comb, ye).reshape(b, s, d)
+    if spec.shared_expert:
+        y = y + ffn(params["shared"], x, kind=spec.ffn_kind)
+    return y.astype(x.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# ragged impl (dropless; single-host serving)
+# ---------------------------------------------------------------------------
+
+def moe_ragged(params: dict, x: jax.Array, spec: MoESpec):
+    """Dropless sort-based grouping + lax.ragged_dot grouped GEMM."""
+    b, s, d = x.shape
+    t = b * s
+    x2 = x.reshape(t, d)
+    gates, idx, aux = _route(params, x2, spec)
+
+    flat_e = idx.reshape(-1)                              # [T*k]
+    order = jnp.argsort(flat_e)
+    tok = jnp.repeat(jnp.arange(t), spec.top_k)[order]
+    xg = x2[tok]                                          # [T*k, d] grouped
+    sizes = jnp.bincount(flat_e, length=spec.n_experts)
+
+    up = jax.lax.ragged_dot(xg, params["w_up"], sizes)
+    if spec.ffn_kind in ("swiglu", "geglu"):
+        gt = jax.lax.ragged_dot(xg, params["w_gate"], sizes)
+        act = (jax.nn.silu(gt) if spec.ffn_kind == "swiglu"
+               else jax.nn.gelu(gt)) * up
+    else:
+        act = jax.nn.gelu(up)
+    yg = jax.lax.ragged_dot(act, params["w_down"], sizes)  # [T*k, d]
+
+    g_sorted = gates.reshape(-1)[order]
+    y = jnp.zeros((t, d), jnp.float32).at[tok].add(
+        yg.astype(jnp.float32) * g_sorted[:, None])
+    y = y.reshape(b, s, d).astype(x.dtype)
+    if spec.shared_expert:
+        y = y + ffn(params["shared"], x, kind=spec.ffn_kind)
+    return y, aux
+
+
+def moe(params: dict, x: jax.Array, spec: MoESpec):
+    if spec.impl == "ragged":
+        return moe_ragged(params, x, spec)
+    if spec.impl == "scatter":
+        return moe_scatter(params, x, spec)
+    return moe_einsum(params, x, spec)

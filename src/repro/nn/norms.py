@@ -1,0 +1,36 @@
+"""Normalization layers (f32 accumulation regardless of param dtype)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6,
+             zero_centered: bool = False) -> jax.Array:
+    """RMSNorm; ``zero_centered`` uses (1+scale) (gemma convention)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    g = scale.astype(jnp.float32)
+    if zero_centered:
+        g = 1.0 + g
+    return (y * g).astype(dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               *, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def init_rms(d: int, dtype=jnp.float32, zero_centered: bool = False):
+    return jnp.zeros((d,), dtype) if zero_centered else jnp.ones((d,), dtype)
+
+
+def init_ln(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}

@@ -1,0 +1,27 @@
+"""Learning-rate schedules (the cosine one is wired into AdamW)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, lr: float, warmup_steps: int, total_steps: int,
+                  min_ratio: float = 0.1):
+    warm = jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - warmup_steps)
+                    / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return lr * warm * (min_ratio + (1 - min_ratio) * cos)
+
+
+def warmup_linear(step, *, lr: float, warmup_steps: int, total_steps: int):
+    warm = jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+    decay = 1.0 - jnp.clip((step - warmup_steps)
+                           / jnp.maximum(total_steps - warmup_steps, 1),
+                           0.0, 1.0)
+    return lr * warm * decay
+
+
+def constant(step, *, lr: float, warmup_steps: int = 0, **_):
+    warm = jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0) \
+        if warmup_steps else 1.0
+    return lr * warm

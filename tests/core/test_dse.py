@@ -1,0 +1,261 @@
+"""Property + unit tests for the (j,h) design-space exploration (Eqs. 1-11)."""
+from fractions import Fraction as F
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    LayerSpec, divisors, hj_set, best_rate, pixel_phases, surviving_phases,
+    select_ours, select_ref11, plan_network,
+)
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+channels = st.sampled_from([1, 3, 8, 16, 24, 32, 64, 96, 128, 144, 192, 256,
+                            320, 384, 512, 576, 960, 1024, 1280])
+rates = st.fractions(min_value=F(1, 64), max_value=F(8, 1))
+
+
+def _pw(d_in, d_out):
+    return LayerSpec(name="pw", kind="pointwise", d_in=d_in, d_out=d_out,
+                     in_hw=(16, 16), out_hw=(16, 16))
+
+
+def _conv(d_in, d_out, k=3, s=1):
+    return LayerSpec(name="cv", kind="conv", d_in=d_in, d_out=d_out,
+                     in_hw=(16, 16), out_hw=(16 // s, 16 // s),
+                     kernel=(k, k), stride=(s, s))
+
+
+# ---------------------------------------------------------------------------
+# divisors / HJ set
+# ---------------------------------------------------------------------------
+
+@given(st.integers(min_value=1, max_value=4096))
+def test_divisors_correct(n):
+    ds = divisors(n)
+    assert ds == sorted(ds)
+    assert all(n % d == 0 for d in ds)
+    assert ds[0] == 1 and ds[-1] == n
+    # completeness
+    assert all((n % k != 0) or (k in ds) for k in range(1, min(n, 200) + 1))
+
+
+@given(channels, channels, rates)
+def test_hj_set_eq9(d_in, d_out, r):
+    hj = hj_set(d_in, d_out, r)
+    for j, h in hj:
+        assert d_in % j == 0        # Eq. (7)
+        assert d_out % h == 0       # Eq. (8)
+        assert F(j, h) >= r         # continuous-flow feasibility
+    # (d_in, 1) is always viable when r <= d_in
+    if r <= d_in:
+        assert (d_in, 1) in hj
+
+
+@given(channels, channels, rates)
+def test_best_rate_is_upper_diophantine(d_in, d_out, r):
+    hj = hj_set(d_in, d_out, r)
+    if not hj:
+        return
+    br = best_rate(hj)
+    assert br >= r
+    # no viable setting sits strictly between r and br
+    assert all(F(j, h) >= br for j, h in hj)
+
+
+# ---------------------------------------------------------------------------
+# select_ours invariants (Eqs. 10-11)
+# ---------------------------------------------------------------------------
+
+@given(channels, channels, rates)
+@settings(max_examples=200)
+def test_select_ours_invariants(d_in, d_out, r):
+    lay = _pw(d_in, d_out)
+    impl = select_ours(lay, r)
+    assert d_in % impl.j == 0
+    assert d_out % impl.h == 0
+    assert impl.capacity >= r                      # can absorb the stream
+    assert 0 < impl.utilization <= 1
+    # Eq. (11): capacity is the closest viable rate from above
+    per_phase = r / impl.p_raw
+    hj = hj_set(d_in, d_out, per_phase)
+    assert F(impl.j, impl.h) == best_rate(hj)
+    # Eq. (4)
+    assert impl.configs == (impl.h * d_in) // impl.j
+
+
+@given(channels, channels, rates)
+@settings(max_examples=200)
+def test_select_ours_maximizes_utilization(d_in, d_out, r):
+    """BestRate selection yields utilization >= any other viable setting."""
+    lay = _pw(d_in, d_out)
+    impl = select_ours(lay, r)
+    per_phase = r / impl.p_raw
+    for j, h in hj_set(d_in, d_out, per_phase):
+        assert impl.utilization >= (per_phase / F(j, h)) - F(1, 10**9)
+
+
+@given(channels, channels, rates)
+def test_ours_mult_count_identity(d_in, d_out, r):
+    """mults = d_out * BestRate * P for pointwise — resource use scales with
+    the *achieved* rate, the heart of data-rate-aware sizing."""
+    lay = _pw(d_in, d_out)
+    impl = select_ours(lay, r)
+    assert impl.mults == impl.units * impl.j
+    assert F(impl.mults) == F(d_out * impl.j, impl.h) * impl.p
+
+
+@given(channels, channels, rates)
+def test_tie_break_prefers_large_h(d_in, d_out, r):
+    lay = _pw(d_in, d_out)
+    a = select_ours(lay, r, prefer_large_h=True)
+    b = select_ours(lay, r, prefer_large_h=False)
+    assert F(a.j, a.h) == F(b.j, b.h)  # same BestRate
+    assert a.h >= b.h                  # but fewer, bigger units
+    assert a.units <= b.units
+
+
+# ---------------------------------------------------------------------------
+# multi-pixel + stride pruning
+# ---------------------------------------------------------------------------
+
+@given(st.integers(min_value=1, max_value=8), st.integers(min_value=1, max_value=4))
+def test_surviving_phase_count(p, s):
+    surv = surviving_phases(p, s)
+    assert 1 <= surv <= p
+    if s == 1 or p == 1:
+        assert surv == p
+
+
+def test_paper_example_p2_s2():
+    """Paper §II-E: P=2, s=2 -> 'the second KPU ... can be removed'."""
+    assert surviving_phases(2, 2) == 1
+
+
+def test_multipixel_conv_2px():
+    # 6 features/clk into 3 channels = 2 pixels/clk (paper's 6/1 rate)
+    lay = _conv(3, 32, k=3, s=2)
+    impl = select_ours(lay, F(6))
+    assert impl.p_raw == 2
+    assert impl.p == 1            # stride 2 prunes the odd phase
+    assert impl.capacity >= F(6)
+
+
+@given(rates)
+def test_single_pixel_never_phases(r):
+    if r > 64:
+        return
+    lay = _pw(64, 128)
+    impl = select_ours(lay, min(r, F(64)))
+    assert impl.p_raw == pixel_phases(min(r, F(64)), 64)
+
+
+# ---------------------------------------------------------------------------
+# ref11 baseline (Eqs. 1-3)
+# ---------------------------------------------------------------------------
+
+@given(channels, channels, rates)
+def test_ref11_eq1_eq2(d_in, d_out, r):
+    lay = _conv(d_in, d_out)
+    impl = select_ref11(lay, r)
+    per_phase = r / impl.p_raw
+    import math
+    c_expected = min(math.ceil(d_in / per_phase), d_in * d_out)
+    assert impl.configs == c_expected
+    assert impl.capacity >= r or impl.pad_waste >= 0
+
+
+@given(channels, channels, rates)
+def test_ref11_vs_ours_properties(d_in, d_out, r):
+    """What the paper actually promises, sharpened by a found
+    counterexample (d_in=8, d_out=64, r=3/64): ours is always feasible
+    and PADDING-FREE (zero invalid-data control) — whereas [11]'s fixed
+    j = numerator(r) may pad (or be infeasible outright).  When [11]
+    happens to be pad-free and feasible, the exhaustive DSE matches or
+    beats its utilization.  At awkward rates [11]'s *padded* designs can
+    show higher arithmetic utilization per layer — they pay for it in
+    filtering logic (Table I's LUT column), not fewer multipliers."""
+    lay = _pw(d_in, d_out)
+    ours = select_ours(lay, r)
+    ref = select_ref11(lay, r)
+    assert ours.feasible
+    assert ours.pad_waste == 0           # Eq. (7)/(8): never pads
+    if ref.feasible and ref.pad_waste == 0:
+        assert ours.utilization >= ref.utilization - F(1, 10**9)
+
+
+# ---------------------------------------------------------------------------
+# whole-network planning
+# ---------------------------------------------------------------------------
+
+def test_plan_network_rate_propagation():
+    from repro.models.mobilenet import mobilenet_v2_chain
+    chain = mobilenet_v2_chain()
+    impls = plan_network(chain, F(3))
+    assert len(impls) == len(chain)
+    # every layer's capacity covers its (propagated) demand
+    for impl in impls:
+        assert impl.capacity >= impl.demand
+    # total mult count shrinks monotonically with input rate
+    m = [sum(i.mults for i in plan_network(chain, F(3, d)))
+         for d in (1, 2, 4, 8, 16, 32)]
+    assert all(a >= b for a, b in zip(m, m[1:]))
+
+
+def test_plan_network_dse_beats_ref11_resources():
+    """Table I's qualitative claim at the planning level: same rate,
+    ours needs no more units of arithmetic and strictly fewer units."""
+    from repro.models.mobilenet import mobilenet_v1_chain
+    chain = mobilenet_v1_chain()
+    ours = plan_network(chain, F(3), scheme="ours")
+    ref = plan_network(chain, F(3), scheme="ref11")
+    assert sum(i.units for i in ours) < sum(i.units for i in ref)
+
+
+# ---------------------------------------------------------------------------
+# beyond-paper objectives
+# ---------------------------------------------------------------------------
+
+def test_resources_objective_matches_heuristic_on_mobilenet():
+    """Null result worth keeping: within BestRate candidate sets the
+    paper's max-h heuristic is already cost-optimal under the calibrated
+    model (mults are constant across candidates; max-h minimizes units)."""
+    from repro.core import estimate_network
+    from repro.models.mobilenet import mobilenet_v2_chain
+    r = F(3, 4)
+    chain = mobilenet_v2_chain()
+    a, b = [], []
+    ra = rb = r
+    for lay in chain:
+        ia = select_ours(lay, ra)
+        ib = select_ours(lay, rb, objective="resources")
+        a.append(ia)
+        b.append(ib)
+        ra, rb = ia.rate_out, ib.rate_out
+    ea, eb = estimate_network(a).rounded(), estimate_network(b).rounded()
+    assert ea == eb
+
+
+def test_pareto_objective_beats_bestrate_lut():
+    """The beyond-paper full-HJ search: >=3% LUT savings on MNv2 @ 3/4
+    (measured -10%), small DSP increase, continuous flow preserved."""
+    from repro.core import estimate_network
+    from repro.models.mobilenet import mobilenet_v2_chain
+    r = F(3, 4)
+    chain = mobilenet_v2_chain()
+    base, par = [], []
+    ra = rb = r
+    for lay in chain:
+        ia = select_ours(lay, ra)
+        ib = select_ours(lay, rb, objective="pareto")
+        assert ib.capacity >= ib.demand       # continuous flow holds
+        base.append(ia)
+        par.append(ib)
+        ra, rb = ia.rate_out, ib.rate_out
+    eb = estimate_network(base).rounded()
+    ep = estimate_network(par).rounded()
+    assert ep["LUT"] <= 0.97 * eb["LUT"]
+    assert ep["DSP"] <= 1.10 * eb["DSP"]

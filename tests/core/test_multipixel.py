@@ -1,0 +1,82 @@
+"""§II-E phase analysis: tap routing, coverage, stride pruning, padding."""
+import math
+
+from hypothesis import given, strategies as st
+
+from repro.core.multipixel import (
+    PhasePlan, pad_select, phase_tap_routes, plan_phases, window_assignment,
+)
+
+ps = st.integers(min_value=1, max_value=6)
+ks = st.integers(min_value=1, max_value=7)
+strides = st.integers(min_value=1, max_value=4)
+
+
+@given(ps, ks)
+def test_tap_routes_align_all_taps(p, k):
+    """All taps of a window must be *simultaneously* available at compute
+    time: arrival_time(tap) + delay(tap) is constant across taps."""
+    for phase in range(p):
+        routes = phase_tap_routes(p, k, phase)
+        n = phase
+        times = [(n + r.tap) // p + r.delay for r in routes]
+        assert len(set(times)) == 1
+        # wires are within the bus, delays non-negative
+        assert all(0 <= r.wire < p and r.delay >= 0 for r in routes)
+
+
+def test_paper_fig5_example():
+    """Fig. 5/6: P=2, K=3. Phase 0 (window at col 0): last pixel (col 2) is
+    on wire 0 with no delay; col 1 on wire 1 delayed 1; col 0 on wire 0
+    delayed 1."""
+    routes = phase_tap_routes(2, 3, 0)
+    assert routes[2].wire == 0 and routes[2].delay == 0
+    assert routes[1].wire == 1 and routes[1].delay == 1
+    assert routes[0].wire == 0 and routes[0].delay == 1
+
+
+@given(ps, ks, strides)
+def test_every_valid_window_covered_once(p, k, s):
+    plans = plan_phases(p, k, s)
+    assign = window_assignment(p, k, s, n_positions=4 * p * s + 1)
+    alive = {pl.phase for pl in plans if pl.alive}
+    for n, phase in assign.items():
+        assert phase in alive, f"valid window {n} assigned to pruned phase"
+
+
+@given(ps, strides)
+def test_pruned_phase_count_matches_gcd_rule(p, s):
+    plans = plan_phases(p, 3, s)
+    n_alive = sum(pl.alive for pl in plans)
+    assert n_alive == p // math.gcd(p, s)
+
+
+def test_paper_example_stride2_prunes_half():
+    """P=2, s=2: 'the second KPU would always produce invalid outputs ...
+    and can be removed'."""
+    plans = plan_phases(2, 3, 2)
+    assert plans[0].alive and not plans[1].alive
+
+
+@given(ps, ks, strides)
+def test_validity_pattern_periodic(p, k, s):
+    """Valid outputs of an alive phase recur with the derived period —
+    a counter suffices for the control logic, as the paper claims."""
+    plans = plan_phases(p, k, s)
+    for pl in plans:
+        if not pl.alive:
+            continue
+        assert pl.valid_period >= 1
+        n0 = pl.phase + pl.valid_offset * p
+        assert n0 % s == 0
+        assert (pl.phase + (pl.valid_offset + pl.valid_period) * p) % s == 0
+
+
+@given(st.integers(min_value=0, max_value=40), ks,
+       st.integers(min_value=8, max_value=64), st.integers(min_value=0, max_value=3))
+def test_pad_select(n, k, width, pad):
+    sel = pad_select(n, k, width, pad)
+    assert len(sel) == k
+    for t, padded in enumerate(sel):
+        in_bounds = 0 <= n - pad + t < width
+        assert padded == (not in_bounds)

@@ -1,0 +1,82 @@
+"""The resource model must reproduce the paper's Tables I & II within
+documented tolerances.  These are the reproduction's primary claims."""
+from fractions import Fraction as F
+
+import pytest
+
+from repro.core import plan_network, estimate_network, fps
+from repro.models.mobilenet import mobilenet_v1_chain, mobilenet_v2_chain
+
+# (rate, Fmax MHz, FPS, DSP, LUT, BRAM36) — paper Table II
+TABLE2 = [
+    (F(6, 1), 403.71, 16020.40, 6302, 186_000, 1410.0),
+    (F(3, 1), 404.53, 8026.40, 3168, 124_000, 1194.5),
+    (F(3, 2), 400.64, 3974.61, 1765, 77_000, 1038.0),
+    (F(3, 4), 405.52, 2011.48, 928, 52_000, 1048.0),
+    (F(3, 8), 408.33, 1012.72, 526, 41_000, 1063.5),
+    (F(3, 16), 410.00, 508.44, 306, 33_000, 1068.0),
+    (F(3, 32), 353.48, 219.17, 212, 30_000, 1078.0),
+]
+
+
+@pytest.fixture(scope="module")
+def v2_chain():
+    return mobilenet_v2_chain()
+
+
+@pytest.mark.parametrize("rate,fmax,fps_paper,dsp,lut,bram", TABLE2,
+                         ids=[str(t[0]) for t in TABLE2])
+def test_table2_fps_exact(rate, fmax, fps_paper, dsp, lut, bram):
+    """FPS = f * pixel_rate / ((W+1)*H): reproduces every row to <0.1%."""
+    got = fps((224, 224), rate / 3, fmax * 1e6)
+    assert got == pytest.approx(fps_paper, rel=1e-3)
+
+
+@pytest.mark.parametrize("rate,fmax,fps_paper,dsp,lut,bram", TABLE2,
+                         ids=[str(t[0]) for t in TABLE2])
+def test_table2_resources(v2_chain, rate, fmax, fps_paper, dsp, lut, bram):
+    est = estimate_network(plan_network(v2_chain, rate)).rounded()
+    assert est["DSP"] == pytest.approx(dsp, rel=0.10)
+    assert est["LUT"] == pytest.approx(lut, rel=0.08)
+    assert est["BRAM36"] == pytest.approx(bram, rel=0.10)
+
+
+def test_table2_trend_thrice_sota():
+    """Ours(6/1) reaches >3x the SOTA accelerator's 4803 FPS (paper §III)."""
+    assert fps((224, 224), F(2), 403.71e6) > 3 * 4803.1
+
+
+def test_table1_relative_claims():
+    """MNv1, ours vs [11]: DSP parity, FF +7%, fewer units for ours."""
+    chain = mobilenet_v1_chain()
+    ours = estimate_network(plan_network(chain, F(3), scheme="ours")).rounded()
+    ref = estimate_network(plan_network(chain, F(3), scheme="ref11")).rounded()
+    # DSP nearly equal (paper: 5664 vs 5691 = -0.5%)
+    assert ours["DSP"] == pytest.approx(ref["DSP"], rel=0.02)
+    # FF: ours ~+7% (paper: +7.1%)
+    assert (ours["FF"] - ref["FF"]) / ref["FF"] == pytest.approx(0.071, abs=0.03)
+    # LUT: ours substantially lower (paper: -22%)
+    assert ours["LUT"] < 0.85 * ref["LUT"]
+    # absolute sanity vs published row (documented wider tolerance: the
+    # exact [11] MNv1 operating point is not fully specified in the paper)
+    assert ours["DSP"] == pytest.approx(5664, rel=0.08)
+    assert ours["FF"] == pytest.approx(603_372, rel=0.05)
+
+
+def test_fits_target_fpga():
+    """Every Table II configuration must fit the xcvu37p (the paper built
+    them): sanity bound on the model."""
+    from repro.core import XCVU37P
+    chain = mobilenet_v2_chain()
+    for rate, *_ in TABLE2:
+        est = estimate_network(plan_network(chain, rate)).rounded()
+        assert est["DSP"] <= XCVU37P.dsps
+        assert est["LUT"] <= XCVU37P.luts
+        assert est["BRAM36"] <= XCVU37P.bram36
+
+
+def test_resource_monotonic_in_rate(v2_chain):
+    """Lower data rate => no more DSPs (Table II's qualitative trend)."""
+    dsps = [estimate_network(plan_network(v2_chain, r)).rounded()["DSP"]
+            for r, *_ in TABLE2]
+    assert all(a >= b for a, b in zip(dsps, dsps[1:]))

@@ -1,0 +1,75 @@
+"""Paged KV cache: allocator invariants + data-plane roundtrip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.kv_cache import PagedKVCache, PagedKVConfig, capacity_for
+
+
+def _cache(n_blocks=16, block_size=4):
+    return PagedKVCache(PagedKVConfig(
+        n_blocks=n_blocks, block_size=block_size, n_layers=2, n_kv=2,
+        head_dim=8, dtype="float32"))
+
+
+def test_alloc_extend_free_roundtrip():
+    c = _cache()
+    c.allocate(1, 6)                 # 2 blocks
+    assert c.free_blocks == 14
+    assert len(c.table(1)) == 2
+    # extend within the partial block: no new block
+    assert c.extend(1) is None
+    assert c.extend(1) is None       # len 8 = exactly 2 blocks
+    assert c.extend(1) is not None   # len 9 -> 3rd block
+    assert c.free_blocks == 13
+    c.free(1)
+    assert c.free_blocks == 16
+
+
+def test_admission_is_capacity_bound():
+    c = _cache(n_blocks=4, block_size=4)
+    assert c.can_admit(16)
+    assert not c.can_admit(17)
+    c.allocate(1, 12)
+    assert c.can_admit(4) and not c.can_admit(5)
+    with pytest.raises(MemoryError):
+        c.allocate(2, 8)
+
+
+@given(lengths=st.lists(st.integers(min_value=1, max_value=30),
+                        min_size=1, max_size=8))
+@settings(max_examples=30, deadline=None)
+def test_fragmentation_bounded(lengths):
+    c = _cache(n_blocks=128, block_size=4)
+    for i, n in enumerate(lengths):
+        c.allocate(i, n)
+    frag = c.fragmentation()
+    # waste is < 1 block per sequence
+    alloc = sum(len(c.table(i)) for i in range(len(lengths))) * 4
+    assert frag * alloc < len(lengths) * 4
+    # no block leaked / double-owned
+    owned = [b for i in range(len(lengths)) for b in c.table(i)]
+    assert len(owned) == len(set(owned))
+    assert len(owned) + c.free_blocks == 128
+
+
+def test_write_gather_roundtrip():
+    c = _cache()
+    c.allocate(7, 6)
+    toks = []
+    for pos in range(6):
+        k = jnp.full((2, 2, 8), float(pos + 1))
+        v = -k
+        c.write_token(7, (k, v), pos)
+        toks.append(float(pos + 1))
+    k, v = c.gather_kv(7)
+    assert k.shape == (2, 6, 2, 8)
+    np.testing.assert_allclose(np.asarray(k[0, :, 0, 0]), toks)
+    np.testing.assert_allclose(np.asarray(v), -np.asarray(k))
+
+
+def test_capacity_sizing():
+    # 1000 tok/s, 2 s residency, 16-token blocks -> >= 157 blocks
+    assert capacity_for(1000, 2.0, 16) == 157

@@ -1,0 +1,285 @@
+"""Substrate tests: optimizer, data, checkpointing, fault tolerance,
+gradient compression, pipeline parallelism."""
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.optimizers import (AdamWConfig, AdamWState, accumulate_grads,
+                                    apply_updates, init as adam_init)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def _quad_loss(params, batch):
+    del batch
+    loss = sum(jnp.sum(jnp.square(p)) for p in jax.tree.leaves(params))
+    return loss, {"ce": loss}
+
+
+def test_adamw_converges_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                      total_steps=200, min_lr_ratio=1.0)
+    params = {"w": jnp.ones((4, 4)) * 3.0, "b": jnp.ones((4,))}
+    state = adam_init(cfg, params)
+    for _ in range(200):
+        grads = jax.grad(lambda p: _quad_loss(p, None)[0])(params)
+        params, state, _ = apply_updates(cfg, params, grads, state)
+    assert float(_quad_loss(params, None)[0]) < 1e-2
+
+
+def test_adamw_bf16_moments_close_to_f32():
+    k = jax.random.key(0)
+    params = {"w": jax.random.normal(k, (8, 8))}
+    grads = {"w": jax.random.normal(jax.random.key(1), (8, 8))}
+    outs = {}
+    for dt in ("float32", "bfloat16"):
+        cfg = AdamWConfig(lr=1e-2, mu_dtype=dt, nu_dtype=dt, warmup_steps=0)
+        st = adam_init(cfg, params)
+        p = params
+        for _ in range(5):
+            p, st, _ = apply_updates(cfg, p, grads, st)
+        outs[dt] = np.asarray(p["w"])
+    np.testing.assert_allclose(outs["float32"], outs["bfloat16"],
+                               rtol=0.05, atol=0.05)
+    # and the bf16 state actually IS bf16 (the memory claim)
+    cfg = AdamWConfig(mu_dtype="bfloat16", nu_dtype="bfloat16")
+    st = adam_init(cfg, params)
+    assert st.mu["w"].dtype == jnp.bfloat16
+    assert st.nu["w"].dtype == jnp.bfloat16
+
+
+def test_factored_second_moment_shapes():
+    cfg = AdamWConfig(factored=True)
+    params = {"w": jnp.ones((16, 32)), "b": jnp.ones((32,))}
+    st = adam_init(cfg, params)
+    r, c = st.nu["w"]
+    assert r.shape == (16,) and c.shape == (32,)       # d^2 -> 2d state
+    assert st.nu["b"].shape == (32,)                   # 1D stays dense
+    grads = jax.tree.map(jnp.ones_like, params)
+    p2, st2, _ = apply_updates(cfg, params, grads, st)
+    assert all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(p2))
+
+
+def test_grad_accumulation_matches_full_batch():
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"]
+        l = jnp.mean(jnp.square(pred - batch["y"]))
+        return l, {"ce": l}
+
+    k1, k2, k3 = jax.random.split(jax.random.key(0), 3)
+    params = {"w": jax.random.normal(k1, (8, 4))}
+    batch = {"x": jax.random.normal(k2, (16, 8)),
+             "y": jax.random.normal(k3, (16, 4))}
+    _, _, g_full = accumulate_grads(loss_fn, params, batch, 1)
+    _, _, g_micro = accumulate_grads(loss_fn, params, batch, 4)
+    np.testing.assert_allclose(np.asarray(g_full["w"]),
+                               np.asarray(g_micro["w"]), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_synthetic_deterministic_and_resumable():
+    from repro.data.pipeline import SyntheticLM
+    a = SyntheticLM(vocab=64, seq_len=8, batch=2, seed=7)
+    b1 = next(a)
+    b2 = next(a)
+    st = a.state_dict()
+    b3 = next(a)
+    fresh = SyntheticLM(vocab=64, seq_len=8, batch=2, seed=7)
+    fresh.load_state_dict(st)
+    np.testing.assert_array_equal(next(fresh)["tokens"], b3["tokens"])
+    # shards are disjoint streams
+    s0 = SyntheticLM(vocab=64, seq_len=8, batch=2, seed=7, shard_id=0,
+                     num_shards=2)
+    s1 = SyntheticLM(vocab=64, seq_len=8, batch=2, seed=7, shard_id=1,
+                     num_shards=2)
+    assert not np.array_equal(next(s0)["tokens"], next(s1)["tokens"])
+    assert b1["tokens"].shape == (2, 8)
+    np.testing.assert_array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
+
+
+def test_packed_file_roundtrip(tmp_path):
+    from repro.data.pipeline import PackedFileDataset, write_packed_file
+    toks = np.arange(9 * 10, dtype=np.int64) % 97
+    path = str(tmp_path / "toks.bin")
+    write_packed_file(path, toks, vocab=97)
+    ds = PackedFileDataset(path=path, vocab=97, seq_len=8, batch=2)
+    b = next(ds)
+    assert b["tokens"].shape == (2, 8)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+# ---------------------------------------------------------------------------
+# checkpointing + restart drill
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    from repro.checkpoint.checkpointer import Checkpointer
+    ck = Checkpointer(str(tmp_path), keep=2)
+    tree = {"a": jnp.arange(6.0).reshape(2, 3), "n": {"b": jnp.ones((4,))}}
+    for step in (1, 2, 3):
+        ck.save(step, jax.tree.map(lambda x: x * step, tree),
+                extra={"data": {"step": step}})
+    ck.wait()
+    assert ck.latest_step() == 3
+    restored, extra = ck.restore(None, tree)
+    np.testing.assert_allclose(np.asarray(restored["a"]),
+                               np.asarray(tree["a"]) * 3)
+    assert extra["data"]["step"] == 3
+    # gc kept only 2
+    assert sorted(int(p.name.split("_")[1])
+                  for p in tmp_path.glob("step_*")) == [2, 3]
+
+
+def test_checkpoint_atomicity_partial_write(tmp_path):
+    """A leftover .tmp dir (simulated crash) must not be visible."""
+    from repro.checkpoint.checkpointer import Checkpointer
+    ck = Checkpointer(str(tmp_path))
+    (tmp_path / "step_9.tmp").mkdir()
+    tree = {"a": jnp.ones((2,))}
+    ck.save(1, tree, blocking=True)
+    assert ck.latest_step() == 1
+
+
+def test_preemption_drill(tmp_path):
+    """Simulated preemption: train 5 steps, 'crash', resume, and the
+    resumed run reproduces the uninterrupted run exactly."""
+    from repro.checkpoint.checkpointer import Checkpointer
+    from repro.data.pipeline import SyntheticLM
+
+    def train(steps, resume_dir=None, crash_at=None):
+        cfg = AdamWConfig(lr=1e-2, warmup_steps=0)
+        params = {"w": jnp.ones((8, 8))}
+        state = adam_init(cfg, params)
+        data = SyntheticLM(vocab=64, seq_len=4, batch=2, seed=3)
+        ck = Checkpointer(str(tmp_path / "drill"))
+        start = 0
+        if resume_dir:
+            (params, state), extra = ck.restore(None, (params, state))
+            data.load_state_dict(extra["data"])
+            start = extra["step"]
+        for step in range(start, steps):
+            batch = next(data)
+            x = jnp.asarray(batch["tokens"], jnp.float32)[:, :4] / 64.0
+            grads = jax.grad(
+                lambda p: jnp.mean(jnp.square(x @ p["w"][:4, :4])))(params)
+            params, state, _ = apply_updates(cfg, params, grads, state)
+            ck.save(step + 1, (params, state),
+                    extra={"step": step + 1, "data": data.state_dict()},
+                    blocking=True)
+            if crash_at is not None and step + 1 == crash_at:
+                return params       # simulate preemption
+        return params
+
+    p_crash = train(10, crash_at=5)
+    p_resumed = train(10, resume_dir=True)
+    p_straight = None
+    import shutil
+    shutil.rmtree(tmp_path / "drill")
+    p_straight = train(10)
+    np.testing.assert_allclose(np.asarray(p_resumed["w"]),
+                               np.asarray(p_straight["w"]), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+def test_straggler_watchdog():
+    from repro.distributed.fault_tolerance import StragglerWatchdog
+    wd = StragglerWatchdog(threshold=1.5, patience=3)
+    fired = False
+    for step in range(20):
+        t = 1.0 if step < 10 else 2.5      # node goes bad at step 10
+        fired = wd.observe(step, t)
+        if fired:
+            break
+    assert fired and step == 12            # 3 consecutive slow steps
+    assert wd.flagged_steps == [10, 11, 12]
+
+
+def test_watchdog_tolerates_single_hiccup():
+    from repro.distributed.fault_tolerance import StragglerWatchdog
+    wd = StragglerWatchdog(threshold=1.5, patience=3)
+    for step in range(20):
+        t = 3.0 if step == 7 else 1.0
+        assert not wd.observe(step, t)
+
+
+def test_elastic_remesh_and_reshard():
+    from repro.distributed.fault_tolerance import (ElasticMesh,
+                                                   viable_mesh_shape)
+    assert viable_mesh_shape(256, 16) == (16, 16)
+    assert viable_mesh_shape(240, 16) == (15, 16)      # lost a host of 16
+    assert viable_mesh_shape(8, 16) is None
+    em = ElasticMesh(model_degree=1)
+    mesh = em.remesh(jax.devices())                    # degraded 1-dev mesh
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    tree = {"w": np.arange(8.0)}
+    out = em.reshard(tree, {"w": NamedSharding(mesh, P())})
+    np.testing.assert_allclose(np.asarray(out["w"]), tree["w"])
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+def test_compressed_psum_error_feedback_converges():
+    """Mean of int8-compressed psum across a 4-way axis tracks the true
+    mean, and error feedback drives the bias to ~0 over steps."""
+    from repro.distributed.collectives import compressed_psum
+    import functools
+
+    grads = jax.random.normal(jax.random.key(0), (4, 64))  # 4 workers
+    true_mean = jnp.mean(grads, axis=0)
+
+    def worker(g, r):
+        return compressed_psum(g, r, "w")
+
+    run = jax.vmap(worker, axis_name="w")
+    res = jnp.zeros_like(grads)
+    acc = jnp.zeros_like(true_mean)
+    steps = 30
+    for _ in range(steps):
+        mean, res = run(grads, res)
+        acc = acc + mean[0] / steps
+    # single-shot quantization error is ~1%, accumulated bias far less
+    assert float(jnp.max(jnp.abs(mean[0] - true_mean))) < 0.05
+    assert float(jnp.max(jnp.abs(acc - true_mean))) < 0.02
+
+
+# ---------------------------------------------------------------------------
+# pipeline parallelism (CPU 1-device 'stage' mesh is meaningless; simulate
+# with a 1-stage mesh + utilization math, full ring logic covered in the
+# multi-device dry-run test)
+# ---------------------------------------------------------------------------
+
+def test_pipeline_utilization_math():
+    from repro.distributed.pipeline_parallel import microbatch_utilization
+    assert microbatch_utilization(1, 4) == pytest.approx(0.25)
+    assert microbatch_utilization(16, 4) == pytest.approx(16 / 19)
+    assert microbatch_utilization(64, 8) > 0.9
+
+
+def test_stage_param_stacking_pads_identity():
+    from repro.core.stage_partition import partition_min_bottleneck
+    from repro.distributed.pipeline_parallel import stack_stage_params
+    params = {"w": jnp.arange(5 * 3.0).reshape(5, 3)}
+    plan = partition_min_bottleneck([1.0, 1.0, 1.0, 1.0, 4.0], 2)
+    stacked = stack_stage_params(params, plan)
+    assert stacked["w"].shape[0] == 2                  # stages
+    # padded rows are zero (identity for residual blocks)
+    sizes = [plan.boundaries[i + 1] - plan.boundaries[i] for i in range(2)]
+    smax = max(sizes)
+    for s, size in enumerate(sizes):
+        if size < smax:
+            np.testing.assert_allclose(
+                np.asarray(stacked["w"][s, size:]), 0.0)

@@ -1,0 +1,65 @@
+"""Flash attention kernel vs naive softmax oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.attention import flash_attention, attention_ref
+
+
+def _qkv(key, b, h, sq, sk, d, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (b, h, sq, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(k2, (b, h, sk, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(k3, (b, h, sk, d), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+@given(
+    s=st.sampled_from([64, 128, 256]),
+    d=st.sampled_from([32, 64]),
+    causal=st.booleans(),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+@settings(max_examples=16, deadline=None)
+def test_flash_matches_ref(s, d, causal, dtype):
+    q, k, v = _qkv(jax.random.key(0), 2, 2, s, s, d, dtype)
+    got = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64)
+    want = attention_ref(q.reshape(4, s, d), k.reshape(4, s, d),
+                         v.reshape(4, s, d), causal=causal).reshape(2, 2, s, d)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("bq,bk", [(32, 32), (64, 128), (128, 64)])
+def test_flash_block_sizes_equivalent(bq, bk):
+    q, k, v = _qkv(jax.random.key(1), 1, 2, 128, 128, 32)
+    got = flash_attention(q, k, v, block_q=bq, block_k=bk)
+    want = flash_attention(q, k, v, block_q=128, block_k=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_cross_attention_shapes():
+    """Decode shape: 1 query block against a long KV stream."""
+    q, k, v = _qkv(jax.random.key(2), 1, 4, 64, 512, 64)
+    got = flash_attention(q, k, v, causal=False, block_q=64, block_k=128)
+    want = attention_ref(q.reshape(4, 64, 64), k.reshape(4, 512, 64),
+                         v.reshape(4, 512, 64), causal=False).reshape(1, 4, 64, 64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_numerical_stability_large_logits():
+    """Online softmax must survive +/-80-scale logits."""
+    q, k, v = _qkv(jax.random.key(3), 1, 1, 64, 64, 32)
+    q = q * 40.0
+    got = flash_attention(q, k, v, block_q=32, block_k=32)
+    assert bool(jnp.all(jnp.isfinite(got)))
+    want = attention_ref(q.reshape(1, 64, 32), k.reshape(1, 64, 32),
+                         v.reshape(1, 64, 32)).reshape(1, 1, 64, 32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
