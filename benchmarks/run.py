@@ -3,31 +3,50 @@
 Prints ``name,us_per_call,derived`` CSV.  Modules:
   table1_mnv1_resources — paper Table I (MNv1 ours vs [11])
   table2_mnv2_rates     — paper Table II (MNv2 across 7 data rates)
+  table3_dag_buffers    — DAG skew FIFOs + DAG DSE (MNv2 + ResNet-18)
   rate_aware_serving    — the technique applied to LM serving (DESIGN §3)
   kernel_bench          — Pallas kernels vs oracles + tile stats
   roofline              — 40-cell roofline summary (needs dry-run JSONs)
+
+``--only a,b,c`` restricts to named modules (CI smoke uses the analytic
+tables, which need no accelerator and finish in seconds).
 """
 from __future__ import annotations
 
+import argparse
+import importlib
 import sys
 import traceback
 
+# name -> module path; imported lazily so `--only table1,table2,table3`
+# never pays for (or breaks on) jax/Pallas imports it does not use
+MODULES = [
+    ("table1", "benchmarks.table1_mnv1_resources"),
+    ("table2", "benchmarks.table2_mnv2_rates"),
+    ("table3", "benchmarks.table3_dag_buffers"),
+    ("rate_aware", "benchmarks.rate_aware_serving"),
+    ("kernels", "benchmarks.kernel_bench"),
+    ("roofline", "benchmarks.roofline"),
+]
 
-def main() -> None:
-    from benchmarks import (kernel_bench, rate_aware_serving,
-                            table1_mnv1_resources, table2_mnv2_rates)
-    from benchmarks import roofline as roofline_mod
 
-    modules = [
-        ("table1", table1_mnv1_resources),
-        ("table2", table2_mnv2_rates),
-        ("rate_aware", rate_aware_serving),
-        ("kernels", kernel_bench),
-        ("roofline", roofline_mod),
-    ]
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default="",
+                    help="comma-separated module names (default: all)")
+    args = ap.parse_args(argv)
+    selected = {m for m in args.only.split(",") if m}
+    mods = MODULES
+    if selected:
+        unknown = selected - {name for name, _ in mods}
+        if unknown:
+            raise SystemExit(f"unknown benchmark modules: {sorted(unknown)}")
+        mods = [(n, m) for n, m in mods if n in selected]
+
     failures = 0
-    for name, mod in modules:
+    for name, path in mods:
         try:
+            mod = importlib.import_module(path)
             for row, us, derived in mod.run():
                 print(f"{row},{us:.1f},{derived}")
         except Exception:

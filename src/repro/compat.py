@@ -1,0 +1,36 @@
+"""Version portability helpers for the jax API surface this repo uses.
+
+The repo targets jax >= 0.6 (``jax.shard_map``, dict-valued
+``cost_analysis``) but must also run on the 0.4.x line shipped in some
+images, where ``shard_map`` lives in ``jax.experimental`` and takes
+``check_rep`` instead of ``check_vma``.  Keep every such branch here so
+call sites stay clean.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: Optional[bool] = None):
+    """``jax.shard_map`` with the modern keyword surface on any jax."""
+    if hasattr(jax, "shard_map"):
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    # Old shard_map has no pcast/varying annotations, so its replication
+    # checker rejects valid stage-varying carries; disable it unless the
+    # caller explicitly asked for checking.
+    kw = {"check_rep": bool(check_vma) if check_vma is not None else False}
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+def pcast(x, axes, to: str = "varying"):
+    """``jax.lax.pcast`` when available; identity on older jax (which has
+    no varying-manifest-axes type system to annotate for)."""
+    if hasattr(jax.lax, "pcast"):
+        return jax.lax.pcast(x, axes, to=to)
+    return x

@@ -2,10 +2,13 @@
 
 Public surface:
   rate          — data-rate algebra (exact fractions), LayerSpec, propagation
+  graph         — DAG rate graph: branch/join propagation, skew-buffer
+                  sizing, DAG-aware DSE (plan_graph)
   dse           — (j,h) design-space exploration, Eqs. (1)-(11), both schemes
   multipixel    — §II-E phase analysis: tap routing, stride pruning
-  schedule      — discrete-event continuous-flow validation
-  resource_model— analytical FPGA model reproducing Tables I & II
+  schedule      — discrete-event continuous-flow validation (chain + DAG)
+  resource_model— analytical FPGA model reproducing Tables I & II,
+                  plus DAG skew-FIFO terms (estimate_graph)
   tpu_tiles     — the TPU adaptation: (j,h) -> Pallas BlockSpec tiles
   stage_partition — rate-aware pipeline-stage partitioning (TPU analogue)
   hlo_analysis  — roofline term extraction from compiled HLO
@@ -16,8 +19,15 @@ from .rate import (  # noqa: F401
     frame_cycles, fps,
 )
 from .dse import (  # noqa: F401
-    LayerImpl, hj_set, best_rate, pixel_phases, surviving_phases,
-    select_ours, select_ref11, plan_network,
+    LayerImpl, NON_ARITH_KINDS, hj_set, best_rate, pixel_phases,
+    surviving_phases, select_impl, select_ours, select_ref11, plan_network,
+)
+from .graph import (  # noqa: F401
+    GraphError, GraphPlan, JoinBuffer, LayerGraph, NodeTiming,
+    compute_timing, join_buffers, plan_graph, propagate_graph,
 )
 from .hw_specs import TPU_V5E, XCVU37P, TPUSpec, FPGASpec  # noqa: F401
-from .resource_model import ResourceEstimate, estimate_layer, estimate_network  # noqa: F401
+from .resource_model import (  # noqa: F401
+    ResourceEstimate, estimate_graph, estimate_join_buffer, estimate_layer,
+    estimate_network,
+)

@@ -34,6 +34,11 @@ from typing import List, Optional, Tuple
 
 from .rate import LayerSpec, divisors
 
+# Layers with no multipliers: comparators (pool), elementwise adders (add),
+# wiring only (concat), running means (gap).  The DSE tracks their phases
+# and pass cadence but explores no (j, h) space.
+NON_ARITH_KINDS = ("pool", "add", "gap", "concat")
+
 
 @dataclasses.dataclass(frozen=True)
 class LayerImpl:
@@ -56,9 +61,7 @@ class LayerImpl:
     def rate_out(self) -> Fraction:
         """Output rate actually produced given the *demand* (steady state)."""
         lay = self.layer
-        spatial = Fraction(lay.out_hw[0] * lay.out_hw[1],
-                           lay.in_hw[0] * lay.in_hw[1])
-        return self.demand / lay.d_in * spatial * lay.d_out
+        return self.demand / lay.d_in * lay.spatial_ratio * lay.d_out
 
     @property
     def feasible(self) -> bool:
@@ -182,7 +185,7 @@ def select_ours(
     p_raw = pixel_phases(r, d_in)
     r_phase = r / p_raw
 
-    if layer.kind in ("pool", "add", "gap"):
+    if layer.kind in NON_ARITH_KINDS:
         # Non-arithmetic (or comparator-only) layers: track phases for the
         # resource model but no (j,h) exploration is needed.
         stride = max(layer.stride)
@@ -266,7 +269,7 @@ def select_ref11(layer: LayerSpec, r: Fraction) -> LayerImpl:
     r_phase = r / p_raw
     p = p_raw  # no stride-pruning insight in [11]
 
-    if layer.kind in ("pool", "add", "gap"):
+    if layer.kind in NON_ARITH_KINDS:
         return LayerImpl(layer=layer, j=min(d_in, max(1, r_phase.__ceil__())),
                          h=1, p=p, p_raw=p_raw, configs=1, units=p,
                          mults=0, scheme="ref11", demand=r,
@@ -311,6 +314,23 @@ def select_ref11(layer: LayerSpec, r: Fraction) -> LayerImpl:
 # Whole-network DSE
 # --------------------------------------------------------------------------
 
+def select_impl(
+    layer: LayerSpec,
+    r: Fraction,
+    *,
+    scheme: str = "ours",
+    prefer_large_h: bool = True,
+    objective: str = "max_h",
+) -> LayerImpl:
+    """Scheme dispatch shared by chain planning and the DAG planner."""
+    if scheme == "ours":
+        return select_ours(layer, r, prefer_large_h=prefer_large_h,
+                           objective=objective)
+    if scheme == "ref11":
+        return select_ref11(layer, r)
+    raise ValueError(f"unknown scheme {scheme!r}")
+
+
 def plan_network(
     layers: List[LayerSpec],
     input_rate: Fraction,
@@ -330,13 +350,8 @@ def plan_network(
     impls: List[LayerImpl] = []
     r = input_rate
     for lay in layers:
-        if scheme == "ours":
-            impl = select_ours(lay, r, prefer_large_h=prefer_large_h,
-                               objective=objective)
-        elif scheme == "ref11":
-            impl = select_ref11(lay, r)
-        else:
-            raise ValueError(f"unknown scheme {scheme!r}")
+        impl = select_impl(lay, r, scheme=scheme,
+                           prefer_large_h=prefer_large_h, objective=objective)
         impls.append(impl)
         r = impl.rate_out
     return impls

@@ -1,0 +1,416 @@
+"""DAG rate graph — branch/join rate propagation, skew sizing, DAG DSE.
+
+The paper's rate calculus (Eqs. 1-11) is formulated over a linear chain,
+but its own evaluation model (MobileNetV2) has residual branches, and
+every modern CNN worth serving is a DAG.  This module lifts the whole
+pipeline — rate propagation, (j, h) selection, continuous-flow checking —
+onto an explicit producer/consumer graph and adds the one genuinely new
+piece of physics a DAG brings: **join skew buffers**.
+
+In a dataflow FPGA design, when a stream forks (a residual branch) and
+re-converges (the elementwise add), the trunk path is many pipeline
+stages deep while the shortcut is a wire.  Pixel *n* of the shortcut
+arrives long before pixel *n* of the trunk; a FIFO must park the early
+pixels or the whole upstream pipeline backpressures and the continuous-
+flow guarantee dies.  Sizing those FIFOs analytically (instead of "make
+it deep and hope") is where BRAM is won or lost on branchy topologies
+(Petrica et al., "Memory-Efficient Dataflow Inference for Deep CNNs on
+FPGA").
+
+Timing model (exact fractions, validated by ``schedule.simulate_graph``):
+
+  A node's steady-state output stream is affine:  t_out(m) = offset +
+  (m+1)/q_out.  One pass over a pixel takes C cycles (C = h*d_in/j for
+  arithmetic layers, the pass cadence for pool/add/gap/concat), and a
+  sliding window must bank half a kernel of rows before its first valid
+  output, so
+
+      offset(v) = max_{u in preds(v)} offset(u) + C(v) + fill(v),
+      fill(v)   = ((k_h-1)//2 * W_in + (k_w-1)//2) / q_in(v).
+
+  At a join, pixel n is consumable at the *latest* branch's arrival.
+  The FIFO on an in-edge from u therefore holds at most
+
+      floor(skew * q) + P    pixels,   skew = max_offset - offset(u)
+
+  (P = the join's pixel phases; P extra slots cover multi-pixel intake).
+  ``simulate_graph`` asserts the measured occupancy never exceeds this.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import OrderedDict
+from fractions import Fraction
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .dse import LayerImpl, NON_ARITH_KINDS, select_impl
+from .rate import LayerSpec, RatePoint
+
+JOIN_KINDS = ("add", "concat")
+
+
+class GraphError(ValueError):
+    """Structural or rate inconsistency in a LayerGraph."""
+
+
+# ==========================================================================
+# Graph structure
+# ==========================================================================
+
+class LayerGraph:
+    """A DAG of ``LayerSpec`` nodes with producer→consumer edges.
+
+    Nodes are added in topological order by construction (``add`` requires
+    every producer to exist already), so ``topo_order()`` is simply the
+    insertion order.  Branch points are nodes with more than one consumer
+    (the stream is forked — each consumer sees the full rate); join nodes
+    are 'add'/'concat' specs with more than one producer.
+    """
+
+    def __init__(self) -> None:
+        self._specs: "OrderedDict[str, LayerSpec]" = OrderedDict()
+        self._preds: Dict[str, List[str]] = {}
+        self._succs: Dict[str, List[str]] = {}
+
+    # -- construction ------------------------------------------------------
+
+    def add(self, spec: LayerSpec, inputs: Sequence[str] = ()) -> str:
+        name = spec.name
+        if name in self._specs:
+            raise GraphError(f"duplicate node {name!r}")
+        preds = list(inputs)
+        for p in preds:
+            if p not in self._specs:
+                raise GraphError(f"{name}: unknown producer {p!r}")
+        self._check_shapes(spec, preds)
+        self._specs[name] = spec
+        self._preds[name] = preds
+        self._succs[name] = []
+        for p in preds:
+            self._succs[p].append(name)
+        return name
+
+    def _check_shapes(self, spec: LayerSpec, preds: List[str]) -> None:
+        if spec.kind in JOIN_KINDS:
+            if len(preds) < 2:
+                raise GraphError(f"{spec.name}: join kind {spec.kind!r} "
+                                 f"needs >=2 producers, got {len(preds)}")
+            for p in preds:
+                if self._specs[p].out_hw != spec.in_hw:
+                    raise GraphError(
+                        f"{spec.name}: producer {p} emits {self._specs[p].out_hw}"
+                        f" but join expects {spec.in_hw}")
+            d_ops = [self._specs[p].d_out for p in preds]
+            if spec.kind == "add":
+                if any(d != spec.d_in for d in d_ops) or spec.d_out != spec.d_in:
+                    raise GraphError(
+                        f"{spec.name}: add needs equal operand channels "
+                        f"(=d_in=d_out), got operands {d_ops}, "
+                        f"d_in={spec.d_in}, d_out={spec.d_out}")
+            else:  # concat
+                if sum(d_ops) != spec.d_in or spec.d_out != spec.d_in:
+                    raise GraphError(
+                        f"{spec.name}: concat d_in must equal sum of operand "
+                        f"channels {sum(d_ops)}, got d_in={spec.d_in}, "
+                        f"d_out={spec.d_out}")
+        else:
+            if len(preds) > 1:
+                raise GraphError(f"{spec.name}: kind {spec.kind!r} takes at "
+                                 f"most one producer, got {len(preds)}")
+            if preds:
+                pred = self._specs[preds[0]]
+                if pred.d_out != spec.d_in:
+                    raise GraphError(f"{spec.name}: d_in={spec.d_in} but "
+                                     f"producer {pred.name} has d_out={pred.d_out}")
+                if pred.out_hw != spec.in_hw:
+                    raise GraphError(f"{spec.name}: in_hw={spec.in_hw} but "
+                                     f"producer {pred.name} emits {pred.out_hw}")
+
+    @classmethod
+    def from_chain(cls, layers: Sequence[LayerSpec]) -> "LayerGraph":
+        g = cls()
+        prev: Optional[str] = None
+        for spec in layers:
+            prev = g.add(spec, [prev] if prev is not None else [])
+        return g
+
+    # -- accessors ---------------------------------------------------------
+
+    def spec(self, name: str) -> LayerSpec:
+        return self._specs[name]
+
+    def preds(self, name: str) -> List[str]:
+        return list(self._preds[name])
+
+    def succs(self, name: str) -> List[str]:
+        return list(self._succs[name])
+
+    def topo_order(self) -> List[str]:
+        return list(self._specs)
+
+    def __len__(self) -> int:
+        return len(self._specs)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._specs
+
+    @property
+    def input_nodes(self) -> List[str]:
+        return [n for n in self._specs if not self._preds[n]]
+
+    @property
+    def output_nodes(self) -> List[str]:
+        return [n for n in self._specs if not self._succs[n]]
+
+    def joins(self) -> List[str]:
+        return [n for n in self._specs if len(self._preds[n]) > 1]
+
+    def branches(self) -> List[str]:
+        return [n for n in self._specs if len(self._succs[n]) > 1]
+
+    def is_linear(self) -> bool:
+        return all(len(self._preds[n]) <= 1 and len(self._succs[n]) <= 1
+                   for n in self._specs)
+
+    def to_chain(self) -> List[LayerSpec]:
+        if not self.is_linear() or len(self.input_nodes) != 1:
+            raise GraphError("graph is not a single linear chain")
+        return [self._specs[n] for n in self.topo_order()]
+
+
+# ==========================================================================
+# Rate propagation (the DAG lift of rate.propagate_chain)
+# ==========================================================================
+
+def propagate_graph(
+    graph: LayerGraph, input_rate: Fraction
+) -> Tuple[Dict[str, Fraction], Dict[str, RatePoint]]:
+    """Exact steady-state rates over the DAG.
+
+    Returns ``(demands, out_points)``: the features/clock each node must
+    absorb (the DSE's r; for 'add' this is the per-operand rate — every
+    operand stream runs at the same q by the join-consistency check) and
+    the RatePoint each node emits.
+
+    Every source node receives ``input_rate``.  Joins require all operand
+    *pixel* rates to agree — a structural property of correct CNN DAGs
+    (both residual paths decimate identically); violations raise.
+    """
+    demands: Dict[str, Fraction] = {}
+    out: Dict[str, RatePoint] = {}
+    for name in graph.topo_order():
+        spec = graph.spec(name)
+        preds = graph.preds(name)
+        if not preds:
+            q_in = Fraction(input_rate) / spec.d_in
+        else:
+            qs = {out[p].pixels_per_clock for p in preds}
+            if len(qs) > 1:
+                raise GraphError(
+                    f"{name}: operand pixel rates disagree: "
+                    + ", ".join(f"{p}={out[p].pixels_per_clock}" for p in preds))
+            q_in = qs.pop()
+        demands[name] = q_in * spec.d_in
+        q_out = q_in * spec.spatial_ratio
+        out[name] = RatePoint(features_per_clock=q_out * spec.d_out,
+                              d=spec.d_out)
+    return demands, out
+
+
+# ==========================================================================
+# Per-node timing + join skew analysis
+# ==========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class NodeTiming:
+    """Affine steady-state timing of one node's output stream:
+    pixel m leaves at ``offset + (m+1)/q_out`` cycles."""
+
+    name: str
+    pass_cycles: Fraction      # C — cycles one pass over a pixel takes
+    fill_cycles: Fraction      # sliding-window row banking before 1st output
+    offset: Fraction           # stream intercept (cycles)
+    q_in: Fraction             # pixels/clock consumed
+    q_out: Fraction            # pixels/clock emitted
+
+
+def pass_cycles(impl: LayerImpl) -> Fraction:
+    """Cycles per pixel pass — mirrors schedule's discrete-event model."""
+    if impl.mults == 0:
+        return Fraction(max(1, impl.layer.d_in // max(1, impl.j)))
+    return Fraction(impl.configs)
+
+
+def fill_pixels(spec: LayerSpec) -> int:
+    """Input pixels a sliding window banks before its first valid output
+    ('same' padding: half a kernel of rows + half a row of columns).
+    gap is excluded — its whole-frame aggregation is already captured by
+    spatial decimation in the timing recurrence."""
+    if spec.kind in ("conv", "dwconv", "pool") and max(spec.kernel) > 1:
+        return (spec.kernel[0] - 1) // 2 * spec.in_hw[1] + (spec.kernel[1] - 1) // 2
+    return 0
+
+
+def decimation_keep(spec: LayerSpec) -> int:
+    """1-in-keep pixel survival through this node (1 for non-decimating)."""
+    ratio = 1 / spec.spatial_ratio
+    if ratio <= 1:
+        return 1
+    if ratio.denominator != 1:
+        raise GraphError(
+            f"{spec.name}: non-integer decimation {ratio} unsupported in "
+            f"graph timing (pad dims so in_px is a multiple of out_px)")
+    return int(ratio)
+
+
+def compute_timing(
+    graph: LayerGraph,
+    impls: Dict[str, LayerImpl],
+    input_rate: Fraction,
+) -> Dict[str, NodeTiming]:
+    """Solve the offset recurrence over topological order.
+
+    Derivation: with fluid arrivals t_in(n) = o_in + (n+1)/q_in and
+    output pixel m consuming input pixel m*keep + keep - 1,
+
+      t_out(m) = t_in(m*keep + keep - 1) + C + fill
+               = [o_in + C + fill] + (m+1)/(q_in/keep),
+
+    so offsets simply accumulate C + fill along the longest path.
+    """
+    timing: Dict[str, NodeTiming] = {}
+    for name in graph.topo_order():
+        spec = graph.spec(name)
+        preds = graph.preds(name)
+        if not preds:
+            o_in = Fraction(0)
+            q_in = Fraction(input_rate) / spec.d_in
+        else:
+            o_in = max(timing[p].offset for p in preds)
+            q_in = timing[preds[0]].q_out
+        c = pass_cycles(impls[name])
+        fill = Fraction(fill_pixels(spec)) / q_in if fill_pixels(spec) else Fraction(0)
+        timing[name] = NodeTiming(
+            name=name, pass_cycles=c, fill_cycles=fill,
+            offset=o_in + c + fill,
+            q_in=q_in, q_out=q_in * spec.spatial_ratio,
+        )
+    return timing
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinBuffer:
+    """Analytically sized skew FIFO on one in-edge of a join node."""
+
+    join: str
+    src: str                   # producer whose stream this FIFO parks
+    skew_cycles: Fraction      # slowest-branch offset minus this branch's
+    q: Fraction                # pixel rate through the join
+    d: int                     # channels per pixel on this edge
+    bound_pixels: int          # max pixels resident (the analytical bound)
+    width_bits: int            # FIFO word = one stream beat
+    depth_words: int
+
+    @property
+    def bits(self) -> int:
+        return self.width_bits * self.depth_words
+
+
+def join_buffers(
+    graph: LayerGraph,
+    impls: Dict[str, LayerImpl],
+    timing: Dict[str, NodeTiming],
+) -> List[JoinBuffer]:
+    """Size the skew FIFO on every join in-edge (see module docstring)."""
+    buffers: List[JoinBuffer] = []
+    for join in graph.joins():
+        preds = graph.preds(join)
+        o_max = max(timing[p].offset for p in preds)
+        q = timing[join].q_in
+        for p in preds:
+            skew = o_max - timing[p].offset
+            d = graph.spec(p).d_out
+            bound = math.floor(skew * q) + max(1, impls[join].p_raw)
+            r_edge = q * d                        # features/clock on the edge
+            lanes = max(1, math.ceil(r_edge))
+            width = 8 * lanes
+            depth = max(2, math.ceil(Fraction(bound * d, lanes)))
+            buffers.append(JoinBuffer(
+                join=join, src=p, skew_cycles=skew, q=q, d=d,
+                bound_pixels=bound, width_bits=width, depth_words=depth,
+            ))
+    return buffers
+
+
+# ==========================================================================
+# DAG-aware DSE
+# ==========================================================================
+
+@dataclasses.dataclass
+class GraphPlan:
+    """A complete hardware plan for a LayerGraph at one input rate."""
+
+    graph: LayerGraph
+    input_rate: Fraction
+    scheme: str
+    impls: "OrderedDict[str, LayerImpl]"
+    demands: Dict[str, Fraction]
+    out_points: Dict[str, RatePoint]
+    timing: Dict[str, NodeTiming]
+    buffers: List[JoinBuffer]
+
+    @property
+    def total_mults(self) -> int:
+        return sum(i.mults for i in self.impls.values())
+
+    @property
+    def total_units(self) -> int:
+        return sum(i.units for i in self.impls.values())
+
+    @property
+    def infeasible_nodes(self) -> List[str]:
+        """Nodes whose chosen capacity cannot absorb their demand — empty
+        for scheme 'ours' by construction (Eq. 9 holds on every branch);
+        [11]'s rounding can fail on awkward branch rates."""
+        return [n for n, i in self.impls.items() if not i.feasible]
+
+    @property
+    def continuous_flow(self) -> bool:
+        return not self.infeasible_nodes
+
+    def buffer_for(self, join: str, src: str) -> JoinBuffer:
+        for b in self.buffers:
+            if b.join == join and b.src == src:
+                return b
+        raise KeyError((join, src))
+
+
+def plan_graph(
+    graph: LayerGraph,
+    input_rate: Fraction,
+    *,
+    scheme: str = "ours",
+    prefer_large_h: bool = True,
+    objective: str = "max_h",
+) -> GraphPlan:
+    """Select an implementation for every node of a DAG.
+
+    The linear-graph specialization is *identical* to ``plan_network`` on
+    the equivalent chain (property-tested): demands propagate through
+    ``impl.rate_out`` exactly as the fluid recurrence, joins only add the
+    operand-consistency constraint and the skew analysis.
+    """
+    demands, out_points = propagate_graph(graph, input_rate)
+    impls: "OrderedDict[str, LayerImpl]" = OrderedDict()
+    for name in graph.topo_order():
+        impls[name] = select_impl(
+            graph.spec(name), demands[name], scheme=scheme,
+            prefer_large_h=prefer_large_h, objective=objective,
+        )
+    timing = compute_timing(graph, impls, input_rate)
+    return GraphPlan(
+        graph=graph, input_rate=Fraction(input_rate), scheme=scheme,
+        impls=impls, demands=demands, out_points=out_points,
+        timing=timing, buffers=join_buffers(graph, impls, timing),
+    )

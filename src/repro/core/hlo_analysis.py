@@ -21,6 +21,20 @@ from typing import Dict, Iterable, Optional
 
 from .hw_specs import TPUSpec, TPU_V5E
 
+def normalize_cost_analysis(cost) -> dict:
+    """Version-portable view of ``compiled.cost_analysis()``.
+
+    jax >= 0.6 returns a single per-device dict; jax <= 0.4 returns a
+    one-element list of per-computation dicts.  Callers always want the
+    entry-computation dict.
+    """
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        return dict(cost[0]) if cost else {}
+    return dict(cost)
+
+
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
     "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
@@ -218,7 +232,7 @@ def roofline_terms(
     *gathered* buffers; we scale by (n-1)/n per collective kind where the
     ring transfer volume differs (all-reduce moves ~2x the shard).
     """
-    ca = cost_analysis or {}
+    ca = normalize_cost_analysis(cost_analysis)
     flops = float(flops_override if flops_override is not None
                   else ca.get("flops", 0.0))
     hbm = float(bytes_override if bytes_override is not None

@@ -20,12 +20,17 @@ import math
 from fractions import Fraction
 from typing import Iterable, List, Optional, Sequence, Tuple
 
-LayerKind = str  # 'conv' | 'dwconv' | 'pointwise' | 'dense' | 'pool' | 'add' | 'gap'
+LayerKind = str
+# 'conv' | 'dwconv' | 'pointwise' | 'dense' | 'pool' | 'add' | 'gap' | 'concat'
+# 'add' and 'concat' are JOIN kinds: in a LayerGraph they may have several
+# producers (residual sums, inception-style concatenations).  For 'add',
+# d_in is the per-operand channel count; for 'concat' it is the sum over
+# operands.  Chains (the original API) never contain joins.
 
 
 @dataclasses.dataclass(frozen=True)
 class LayerSpec:
-    """Static description of one layer of the network graph (a chain)."""
+    """Static description of one layer of the network graph (chain or DAG)."""
 
     name: str
     kind: LayerKind
@@ -41,6 +46,12 @@ class LayerSpec:
     @property
     def k_taps(self) -> int:
         return self.kernel[0] * self.kernel[1]
+
+    @property
+    def spatial_ratio(self) -> Fraction:
+        """out_pixels / in_pixels — the pixel-rate decimation factor."""
+        return Fraction(self.out_hw[0] * self.out_hw[1],
+                        self.in_hw[0] * self.in_hw[1])
 
     @property
     def macs_per_pixel(self) -> int:
@@ -90,10 +101,7 @@ def propagate(rate_in: RatePoint, layer: LayerSpec) -> RatePoint:
         raise ValueError(
             f"{layer.name}: d_in={layer.d_in} but incoming rate has d={rate_in.d}"
         )
-    q_in = rate_in.pixels_per_clock
-    spatial = Fraction(layer.out_hw[0] * layer.out_hw[1],
-                       layer.in_hw[0] * layer.in_hw[1])
-    q_out = q_in * spatial
+    q_out = rate_in.pixels_per_clock * layer.spatial_ratio
     return RatePoint(features_per_clock=q_out * layer.d_out, d=layer.d_out)
 
 

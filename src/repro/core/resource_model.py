@@ -121,8 +121,7 @@ def _map_buffer(width_bits: int, depth: int) -> Tuple[float, float]:
 def output_lanes(impl: LayerImpl) -> int:
     """Parallel output wires = ceil of the layer's output-capacity rate."""
     lay = impl.layer
-    spatial = (lay.out_hw[0] * lay.out_hw[1]) / (lay.in_hw[0] * lay.in_hw[1])
-    cap_out = float(impl.capacity) / lay.d_in * spatial * lay.d_out
+    cap_out = float(impl.capacity * lay.spatial_ratio) / lay.d_in * lay.d_out
     return max(1, math.ceil(cap_out)) if impl.mults else 0
 
 
@@ -141,6 +140,9 @@ def estimate_layer(impl: LayerImpl, spec: FPGASpec = XCVU37P) -> ResourceEstimat
                                    max(1, (lay.in_hw[1] * rows) // max(1, impl.p_raw)))
                 est.bram36 += b
                 est.uram += u
+        elif lay.kind == "add":
+            # elementwise residual sum: one 8b adder per arriving feature lane
+            est.lut = 8.0 * max(1, math.ceil(impl.demand))
         return est
 
     dw = lay.kind == "dwconv"
@@ -212,4 +214,44 @@ def estimate_network(
     total = ResourceEstimate()
     for impl in impls:
         total = total + estimate_layer(impl, spec)
+    return total
+
+
+# --------------------------------------------------------------------------
+# DAG terms: join skew FIFOs (see core.graph)
+# --------------------------------------------------------------------------
+
+_FIFO_CTRL_LUT = 40.0     # read/write pointers, status flags, gray sync
+_FIFO_SRL_DEPTH = 64      # shallow FIFOs live in SRL shift registers
+
+
+def estimate_join_buffer(buf) -> ResourceEstimate:
+    """One skew FIFO (a ``core.graph.JoinBuffer``).
+
+    Shallow FIFOs (depth <= 64 words) map to SRL32 shift registers —
+    2 bits of width per LUT per 32 words of depth — which is how vendor
+    FIFO generators implement them; deeper ones take BRAM/URAM via the
+    same width-configurable mapping as the line buffers.
+    """
+    est = ResourceEstimate()
+    est.lut += _FIFO_CTRL_LUT
+    est.ff += 2.0 * math.ceil(math.log2(max(2, buf.depth_words)))
+    if buf.depth_words <= _FIFO_SRL_DEPTH:
+        est.lut += math.ceil(buf.depth_words / 32) * buf.width_bits / 2.0
+    else:
+        b, u = _map_buffer(buf.width_bits, buf.depth_words)
+        est.bram36 += b
+        est.uram += u
+    return est
+
+
+def estimate_graph(plan, spec: FPGASpec = XCVU37P) -> ResourceEstimate:
+    """Whole-DAG estimate: every node plus every join skew FIFO.
+
+    ``plan`` is a ``core.graph.GraphPlan`` (duck-typed to avoid an import
+    cycle: graph -> dse -> [lazy] resource_model).
+    """
+    total = estimate_network(list(plan.impls.values()), spec)
+    for buf in plan.buffers:
+        total = total + estimate_join_buffer(buf)
     return total

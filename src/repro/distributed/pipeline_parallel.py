@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.stage_partition import StagePlan, partition_blocks
+from repro import compat
 
 
 def microbatch_utilization(n_micro: int, n_stages: int) -> float:
@@ -61,10 +62,10 @@ def pipeline_forward(
         mb_shape = x_all.shape[1:]
         # carries are stage-varying (each stage holds different values):
         # annotate for shard_map's vma type system.
-        buf = jax.lax.pcast(jnp.zeros(mb_shape, x_all.dtype),
+        buf = compat.pcast(jnp.zeros(mb_shape, x_all.dtype),
+                           (stage_axis,), to="varying")
+        outs = compat.pcast(jnp.zeros((m,) + mb_shape, x_all.dtype),
                             (stage_axis,), to="varying")
-        outs = jax.lax.pcast(jnp.zeros((m,) + mb_shape, x_all.dtype),
-                             (stage_axis,), to="varying")
 
         def tick(carry, t):
             buf, outs = carry
@@ -92,7 +93,7 @@ def pipeline_forward(
         outs = jnp.where(stage_id == n_stages - 1, outs, 0)
         return jax.lax.psum(outs, stage_axis)
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         per_stage, mesh=mesh,
         in_specs=(P(stage_axis), P()),
         out_specs=P(),

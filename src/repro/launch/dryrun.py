@@ -34,7 +34,8 @@ from repro.configs.base import ModelConfig, active_param_count, param_count
 from repro.configs.registry import ARCHS, get_config
 from repro.configs.shapes import SHAPES, ShapeSuite, cell_enabled, skip_reason
 from repro.core.flops import scan_trips, step_flops, step_hbm_bytes
-from repro.core.hlo_analysis import collective_bytes, roofline_terms
+from repro.core.hlo_analysis import (collective_bytes, normalize_cost_analysis,
+                                     roofline_terms)
 from repro.distributed import sharding as shd
 from repro.launch.mesh import make_production_mesh
 from repro.launch.train import adam_config_for, build_train_step
@@ -138,7 +139,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         compiled = lowered.compile()
         t_compile = time.perf_counter() - t0 - t_lower
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = normalize_cost_analysis(compiled.cost_analysis())
         hlo = compiled.as_text()
 
     trips = scan_trips(cfg, shape)

@@ -22,25 +22,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.graph import LayerGraph
 from repro.core.rate import LayerSpec
+from repro.models.topology import conv_spec as _conv
 
 
 # ==========================================================================
 # LayerSpec chains (the DSE's view)
 # ==========================================================================
-
-def _ceil_div(a: int, b: int) -> int:
-    return -(-a // b)
-
-
-def _conv(name, kind, d_in, d_out, hw, k, s, cm=1):
-    out_hw = (_ceil_div(hw[0], s), _ceil_div(hw[1], s))
-    return (
-        LayerSpec(name=name, kind=kind, d_in=d_in, d_out=d_out,
-                  in_hw=hw, out_hw=out_hw, kernel=(k, k), stride=(s, s),
-                  channel_multiplier=cm),
-        out_hw,
-    )
 
 
 def mobilenet_v1_chain(
@@ -122,6 +111,54 @@ def mobilenet_v2_chain(
     return layers
 
 
+def mobilenet_v2_graph(
+    input_hw: Tuple[int, int] = (224, 224), alpha: float = 1.0,
+    num_classes: int = 1000,
+) -> LayerGraph:
+    """MobileNetV2 as a true DAG: inverted-residual blocks with stride 1
+    and matching channels get an explicit 'add' join between the project
+    output and the block input — the topology the FPGA dataflow actually
+    builds (the chain variant drops the residual edges, underestimating
+    both the skew FIFOs and the adders)."""
+    def c(ch):
+        ch = int(ch * alpha)
+        return max(8, (ch + 4) // 8 * 8)
+
+    g = LayerGraph()
+    hw = input_hw
+    spec, hw = _conv("conv1", "conv", 3, c(32), hw, 3, 2)
+    prev = g.add(spec)
+    d = c(32)
+    blk = 0
+    for t, ch, n, s in _V2_CFG:
+        for i in range(n):
+            blk += 1
+            stride = s if i == 0 else 1
+            exp = d * t
+            block_in = prev
+            if t != 1:
+                spec, hw = _conv(f"b{blk}_expand", "pointwise", d, exp, hw, 1, 1)
+                prev = g.add(spec, [prev])
+            spec, hw = _conv(f"b{blk}_dw", "dwconv", exp, exp, hw, 3, stride)
+            prev = g.add(spec, [prev])
+            spec, hw = _conv(f"b{blk}_project", "pointwise", exp, c(ch), hw, 1, 1)
+            prev = g.add(spec, [prev])
+            if stride == 1 and d == c(ch):
+                prev = g.add(
+                    LayerSpec(name=f"b{blk}_add", kind="add", d_in=c(ch),
+                              d_out=c(ch), in_hw=hw, out_hw=hw),
+                    [prev, block_in])
+            d = c(ch)
+    last = c(1280) if alpha > 1.0 else 1280
+    spec, hw = _conv("conv_last", "pointwise", d, last, hw, 1, 1)
+    prev = g.add(spec, [prev])
+    prev = g.add(LayerSpec(name="gap", kind="gap", d_in=last, d_out=last,
+                           in_hw=hw, out_hw=(1, 1), kernel=hw), [prev])
+    g.add(LayerSpec(name="fc", kind="dense", d_in=last, d_out=num_classes,
+                    in_hw=(1, 1), out_hw=(1, 1)), [prev])
+    return g
+
+
 # ==========================================================================
 # JAX model (NHWC, folded BN)
 # ==========================================================================
@@ -137,6 +174,13 @@ class MobileNetConfig:
     def chain(self) -> List[LayerSpec]:
         fn = mobilenet_v1_chain if self.version == 1 else mobilenet_v2_chain
         return fn(self.input_hw, self.alpha, self.num_classes)
+
+    def graph(self) -> LayerGraph:
+        """DAG view: v2 gets real residual joins; v1 is a linear graph."""
+        if self.version == 2:
+            return mobilenet_v2_graph(self.input_hw, self.alpha,
+                                      self.num_classes)
+        return LayerGraph.from_chain(self.chain())
 
 
 def init_params(cfg: MobileNetConfig, rng: jax.Array) -> Dict[str, Dict[str, jax.Array]]:

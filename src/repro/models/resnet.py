@@ -1,0 +1,87 @@
+"""ResNet-18/34 as ``LayerGraph`` DAGs for the data-rate-aware DSE.
+
+ResNet is the canonical branch-heavy CNN the chain-only rate calculus
+could not express: every basic block is a diamond — a two-conv trunk
+against an identity (or strided 1x1 projection) shortcut, re-converging
+in an elementwise add.  The shortcut is shallow, the trunk is two 3x3
+convolutions deep, so every join needs a skew FIFO sized by
+``core.graph.join_buffers``; ResNet-18 at 224x224 has 8 of them.
+
+Only the DSE-facing LayerSpec topology lives here (weights/inference for
+CNNs are exercised via the MobileNet JAX path and the Pallas kernels);
+the graphs drive DSE, resource estimation and the discrete-event
+validator, and are reported in benchmarks/table3_dag_buffers.py.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from repro.core.graph import LayerGraph
+from repro.core.rate import LayerSpec
+from repro.models.topology import ceil_div as _ceil_div, conv_spec
+
+_RESNET18_STAGES = [(64, 2), (128, 2), (256, 2), (512, 2)]
+_RESNET34_STAGES = [(64, 3), (128, 4), (256, 6), (512, 3)]
+
+
+def _conv(name: str, d_in: int, d_out: int, hw: Tuple[int, int],
+          k: int, s: int) -> Tuple[LayerSpec, Tuple[int, int]]:
+    return conv_spec(name, "conv", d_in, d_out, hw, k, s)
+
+
+def _basic_block(g: LayerGraph, prev: str, name: str, d_in: int, d_out: int,
+                 hw: Tuple[int, int], stride: int) -> Tuple[str, Tuple[int, int]]:
+    """conv3x3(s) -> conv3x3(1) summed with the shortcut (identity, or a
+    strided 1x1 projection when shape changes)."""
+    block_in = prev
+    spec, mid_hw = _conv(f"{name}_conv1", d_in, d_out, hw, 3, stride)
+    prev = g.add(spec, [prev])
+    spec, out_hw = _conv(f"{name}_conv2", d_out, d_out, mid_hw, 3, 1)
+    prev = g.add(spec, [prev])
+    if stride != 1 or d_in != d_out:
+        ds, ds_hw = _conv(f"{name}_down", d_in, d_out, hw, 1, stride)
+        assert ds_hw == out_hw
+        shortcut = g.add(ds, [block_in])
+    else:
+        shortcut = block_in
+    prev = g.add(
+        LayerSpec(name=f"{name}_add", kind="add", d_in=d_out, d_out=d_out,
+                  in_hw=out_hw, out_hw=out_hw),
+        [prev, shortcut])
+    return prev, out_hw
+
+
+def _resnet_graph(stages: List[Tuple[int, int]],
+                  input_hw: Tuple[int, int], num_classes: int) -> LayerGraph:
+    g = LayerGraph()
+    hw = input_hw
+    spec, hw = _conv("conv1", 3, 64, hw, 7, 2)
+    prev = g.add(spec)
+    pool_hw = (_ceil_div(hw[0], 2), _ceil_div(hw[1], 2))
+    prev = g.add(
+        LayerSpec(name="maxpool", kind="pool", d_in=64, d_out=64,
+                  in_hw=hw, out_hw=pool_hw, kernel=(3, 3), stride=(2, 2)),
+        [prev])
+    hw = pool_hw
+    d = 64
+    for si, (ch, blocks) in enumerate(stages, start=1):
+        for bi in range(blocks):
+            stride = 2 if (si > 1 and bi == 0) else 1
+            prev, hw = _basic_block(g, prev, f"l{si}b{bi + 1}", d, ch, hw,
+                                    stride)
+            d = ch
+    prev = g.add(LayerSpec(name="gap", kind="gap", d_in=d, d_out=d,
+                           in_hw=hw, out_hw=(1, 1), kernel=hw), [prev])
+    g.add(LayerSpec(name="fc", kind="dense", d_in=d, d_out=num_classes,
+                    in_hw=(1, 1), out_hw=(1, 1)), [prev])
+    return g
+
+
+def resnet18_graph(input_hw: Tuple[int, int] = (224, 224),
+                   num_classes: int = 1000) -> LayerGraph:
+    return _resnet_graph(_RESNET18_STAGES, input_hw, num_classes)
+
+
+def resnet34_graph(input_hw: Tuple[int, int] = (224, 224),
+                   num_classes: int = 1000) -> LayerGraph:
+    return _resnet_graph(_RESNET34_STAGES, input_hw, num_classes)

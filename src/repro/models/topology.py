@@ -1,0 +1,28 @@
+"""Shared LayerSpec-topology helpers for the CNN model builders.
+
+jax-free on purpose: the DSE-facing graph builders (resnet, the chain/
+graph halves of mobilenet) must stay importable without an accelerator
+stack.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+from repro.core.rate import LayerSpec
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def conv_spec(name: str, kind: str, d_in: int, d_out: int,
+              hw: Tuple[int, int], k: int, s: int,
+              cm: int = 1) -> Tuple[LayerSpec, Tuple[int, int]]:
+    """Square-kernel 'same'-padded conv-family LayerSpec + its out_hw."""
+    out_hw = (ceil_div(hw[0], s), ceil_div(hw[1], s))
+    return (
+        LayerSpec(name=name, kind=kind, d_in=d_in, d_out=d_out,
+                  in_hw=hw, out_hw=out_hw, kernel=(k, k), stride=(s, s),
+                  channel_multiplier=cm),
+        out_hw,
+    )

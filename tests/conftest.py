@@ -1,0 +1,175 @@
+"""Test-session bootstrap.
+
+1. Ensures ``src`` is importable even when pytest is launched without
+   ``PYTHONPATH=src`` and the package is not pip-installed (the
+   ``pythonpath`` ini option in pyproject.toml covers modern pytest;
+   this covers direct ``python -m pytest`` from odd CWDs).
+
+2. Provides a minimal **hypothesis shim** when the real library is
+   absent.  The seed image is a bare interpreter; rather than skipping
+   every property test we register a deterministic sampler that runs
+   each ``@given`` test over a fixed number of pseudo-random examples
+   (seeded per test, so failures are reproducible).  When the real
+   ``hypothesis`` is installed it is used untouched.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import random
+import sys
+from fractions import Fraction
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+
+def _install_hypothesis_stub() -> None:
+    import types
+
+    _DEFAULT_EXAMPLES = int(os.environ.get("REPRO_STUB_EXAMPLES", "25"))
+
+    class _Strategy:
+        """A draw function wrapper: ``sample(rng) -> value``."""
+
+        def __init__(self, sample):
+            self._sample = sample
+
+        def sample(self, rng: random.Random):
+            return self._sample(rng)
+
+    def sampled_from(elements):
+        elems = list(elements)
+        if not elems:
+            raise ValueError("sampled_from requires a non-empty sequence")
+        return _Strategy(lambda rng: rng.choice(elems))
+
+    def integers(min_value=0, max_value=2 ** 16):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def fractions(min_value=Fraction(0), max_value=Fraction(1), **_kw):
+        lo, hi = Fraction(min_value), Fraction(max_value)
+
+        def draw(rng: random.Random) -> Fraction:
+            # Denominators up to 64 cover the repo's rate sweeps (3/32 etc.)
+            for _ in range(64):
+                den = rng.choice([1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64])
+                n_lo = -(-lo.numerator * den // lo.denominator)   # ceil
+                n_hi = hi.numerator * den // hi.denominator       # floor
+                if n_lo <= n_hi:
+                    return Fraction(rng.randint(n_lo, n_hi), den)
+            return lo
+
+        return _Strategy(draw)
+
+    def lists(element, min_size=0, max_size=10, **_kw):
+        def draw(rng: random.Random):
+            k = rng.randint(min_size, max_size)
+            return [element.sample(rng) for _ in range(k)]
+
+        return _Strategy(draw)
+
+    def just(value):
+        return _Strategy(lambda _rng: value)
+
+    def one_of(*strategies):
+        strats = list(strategies)
+        return _Strategy(lambda rng: rng.choice(strats).sample(rng))
+
+    def tuples(*strategies):
+        return _Strategy(lambda rng: tuple(s.sample(rng) for s in strategies))
+
+    import inspect
+
+    def given(*arg_strats, **kw_strats):
+        def decorate(fn):
+            n_examples = getattr(fn, "_stub_max_examples", None)
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            # Strategy-bound params: keywords by name, positionals from the
+            # right (hypothesis semantics).  Whatever is left over must be
+            # pytest fixtures and stays in the visible signature.
+            remaining = [p for p in params if p.name not in kw_strats]
+            if arg_strats:
+                remaining = remaining[: -len(arg_strats)]
+
+            @functools.wraps(fn)
+            def wrapper(*fixture_args, **fixture_kwargs):
+                count = n_examples or getattr(
+                    wrapper, "_stub_max_examples", _DEFAULT_EXAMPLES
+                )
+                rng = random.Random(f"repro-stub:{fn.__module__}.{fn.__qualname__}")
+                for i in range(count):
+                    args = tuple(s.sample(rng) for s in arg_strats)
+                    kwargs = {k: s.sample(rng) for k, s in kw_strats.items()}
+                    kwargs.update(fixture_kwargs)
+                    try:
+                        fn(*fixture_args, *args, **kwargs)
+                    except Exception as e:  # annotate the failing example
+                        raise AssertionError(
+                            f"stub-hypothesis example #{i} failed: "
+                            f"args={args!r} kwargs={kwargs!r}"
+                        ) from e
+
+            wrapper.hypothesis_stub = True
+            del wrapper.__wrapped__  # keep pytest from introspecting fn's params
+            wrapper.__signature__ = sig.replace(parameters=remaining)
+            return wrapper
+
+        return decorate
+
+    def settings(max_examples=None, **_kw):
+        def decorate(fn):
+            if max_examples is not None:
+                # Cap stub runtime: the real library amortizes via shrinking
+                # and example DBs; the stub just runs fewer samples.
+                fn._stub_max_examples = min(max_examples, _DEFAULT_EXAMPLES)
+            return fn
+
+        return decorate
+
+    def assume(condition) -> bool:
+        if not condition:
+            raise _Rejected()
+        return True
+
+    class _Rejected(Exception):
+        pass
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.note = lambda *_a, **_k: None
+    hyp.HealthCheck = types.SimpleNamespace(too_slow=None, data_too_large=None,
+                                            filter_too_much=None)
+    hyp.__version__ = "0.0-repro-stub"
+    hyp.is_repro_stub = True
+
+    strat_mod = types.ModuleType("hypothesis.strategies")
+    strat_mod.sampled_from = sampled_from
+    strat_mod.integers = integers
+    strat_mod.booleans = booleans
+    strat_mod.floats = floats
+    strat_mod.fractions = fractions
+    strat_mod.lists = lists
+    strat_mod.just = just
+    strat_mod.one_of = one_of
+    strat_mod.tuples = tuples
+    hyp.strategies = strat_mod
+
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strat_mod
+
+
+try:  # pragma: no cover - exercised implicitly by every test import
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    _install_hypothesis_stub()

@@ -1,0 +1,284 @@
+"""DAG rate graph: structure, propagation, skew bounds, DAG DSE, and the
+chain/graph equivalence regression guard."""
+from fractions import Fraction as F
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    GraphError, LayerGraph, LayerSpec, estimate_graph, estimate_join_buffer,
+    estimate_network, plan_graph, plan_network, propagate_chain,
+    propagate_graph,
+)
+from repro.core.schedule import simulate_chain, simulate_graph
+
+rates = st.fractions(min_value=F(3, 32), max_value=F(6, 1))
+
+
+def _pw(name, d_in, d_out, hw=(8, 8)):
+    return LayerSpec(name=name, kind="pointwise", d_in=d_in, d_out=d_out,
+                     in_hw=hw, out_hw=hw)
+
+
+def _diamond(depth: int = 3, d: int = 16, hw=(8, 8)) -> LayerGraph:
+    """Branch at 'stem', a deep trunk vs identity shortcut, 'join' add."""
+    g = LayerGraph()
+    prev = g.add(_pw("stem", d, d, hw))
+    stem = prev
+    for i in range(depth):
+        prev = g.add(_pw(f"trunk{i}", d, d, hw), [prev])
+    g.add(LayerSpec(name="join", kind="add", d_in=d, d_out=d,
+                    in_hw=hw, out_hw=hw), [prev, stem])
+    return g
+
+
+# ---------------------------------------------------------------------------
+# structure
+# ---------------------------------------------------------------------------
+
+def test_graph_construction_and_accessors():
+    g = _diamond()
+    assert len(g) == 5
+    assert g.joins() == ["join"]
+    assert g.branches() == ["stem"]
+    assert g.input_nodes == ["stem"]
+    assert g.output_nodes == ["join"]
+    assert not g.is_linear()
+    assert g.topo_order()[0] == "stem" and g.topo_order()[-1] == "join"
+
+
+def test_graph_rejects_bad_wiring():
+    g = LayerGraph()
+    g.add(_pw("a", 8, 16))
+    with pytest.raises(GraphError):       # channel mismatch
+        g.add(_pw("b", 8, 8), ["a"])
+    with pytest.raises(GraphError):       # unknown producer
+        g.add(_pw("c", 16, 8), ["nope"])
+    with pytest.raises(GraphError):       # join with one operand
+        g.add(LayerSpec(name="j", kind="add", d_in=16, d_out=16,
+                        in_hw=(8, 8), out_hw=(8, 8)), ["a"])
+    g2 = LayerGraph()
+    g2.add(_pw("a", 8, 16))
+    g2.add(_pw("b", 16, 8), ["a"])
+    with pytest.raises(GraphError):       # add operands with unequal channels
+        g2.add(LayerSpec(name="j", kind="add", d_in=16, d_out=16,
+                         in_hw=(8, 8), out_hw=(8, 8)), ["a", "b"])
+
+
+def test_from_chain_roundtrip():
+    from repro.models.mobilenet import mobilenet_v1_chain
+    chain = mobilenet_v1_chain()
+    g = LayerGraph.from_chain(chain)
+    assert g.is_linear()
+    assert g.to_chain() == list(chain)
+    assert not g.joins() and not g.branches()
+
+
+# ---------------------------------------------------------------------------
+# chain/graph equivalence (the refactor's regression guard)
+# ---------------------------------------------------------------------------
+
+@given(rates, st.sampled_from(["ours", "ref11"]))
+@settings(max_examples=12, deadline=None)
+def test_linear_graph_equals_chain(r, scheme):
+    """A purely linear LayerGraph must produce identical rates, impl
+    selections, and mult counts to the chain path."""
+    from repro.models.mobilenet import mobilenet_v2_chain
+    chain = mobilenet_v2_chain()
+    g = LayerGraph.from_chain(chain)
+
+    chain_impls = plan_network(chain, r, scheme=scheme)
+    plan = plan_graph(g, r, scheme=scheme)
+
+    assert list(plan.impls) == [l.name for l in chain]
+    for lay, ci in zip(chain, chain_impls):
+        gi = plan.impls[lay.name]
+        assert (gi.j, gi.h, gi.p, gi.p_raw) == (ci.j, ci.h, ci.p, ci.p_raw)
+        assert gi.demand == ci.demand
+        assert gi.mults == ci.mults
+    assert plan.total_mults == sum(i.mults for i in chain_impls)
+    assert not plan.buffers   # no joins -> no skew FIFOs
+
+    # rates at every edge match rate.propagate_chain
+    pts = propagate_chain(r, chain)
+    for lay, pt in zip(chain, pts[1:]):
+        assert plan.out_points[lay.name].features_per_clock == \
+            pt.features_per_clock
+
+    # the resource estimate with zero joins is the chain estimate
+    eg = estimate_graph(plan).rounded()
+    ec = estimate_network(chain_impls).rounded()
+    assert eg == ec
+
+
+@given(rates)
+@settings(max_examples=10, deadline=None)
+def test_linear_graph_sim_equals_chain_sim(r):
+    layers = [_pw("a", 8, 16), _pw("b", 16, 32), _pw("c", 32, 8)]
+    g = LayerGraph.from_chain(layers)
+    plan = plan_graph(g, r)
+    impls = plan_network(layers, r)
+    q = r / 8
+    chain_traces = simulate_chain(impls, 64, q)
+    res = simulate_graph(plan, 64, q)
+    for ct, (name, gt) in zip(chain_traces, res.traces.items()):
+        assert ct.name == name
+        assert gt.stall_cycles == ct.stall_cycles
+        assert gt.busy_cycles == ct.busy_cycles
+
+
+# ---------------------------------------------------------------------------
+# DAG propagation
+# ---------------------------------------------------------------------------
+
+def test_join_requires_matching_pixel_rates():
+    g = LayerGraph()
+    g.add(_pw("stem", 8, 8))
+    # trunk decimates 8x8 -> 4x4, shortcut does not: q mismatch at join
+    g.add(LayerSpec(name="down", kind="conv", d_in=8, d_out=8,
+                    in_hw=(8, 8), out_hw=(4, 4), kernel=(3, 3),
+                    stride=(2, 2)), ["stem"])
+    g.add(LayerSpec(name="crop", kind="pool", d_in=8, d_out=8,
+                    in_hw=(8, 8), out_hw=(4, 4), kernel=(1, 1)), ["stem"])
+    # rewire crop to keep full rate: claim 4x4 out but from 8x8 pass-through
+    g.add(LayerSpec(name="j", kind="add", d_in=8, d_out=8,
+                    in_hw=(4, 4), out_hw=(4, 4)), ["down", "crop"])
+    # down halves q twice (4x decimation) and crop also 4x -> rates agree
+    demands, _ = propagate_graph(g, F(2))
+    assert demands["j"] == F(2) / 4
+
+    bad = LayerGraph()
+    bad.add(_pw("stem", 8, 8))
+    bad.add(LayerSpec(name="down", kind="conv", d_in=8, d_out=8,
+                      in_hw=(8, 8), out_hw=(4, 4), kernel=(3, 3),
+                      stride=(2, 2)), ["stem"])
+    bad.add(LayerSpec(name="same", kind="pool", d_in=8, d_out=8,
+                      in_hw=(8, 8), out_hw=(8, 8), kernel=(2, 2)), ["stem"])
+    with pytest.raises(GraphError):
+        bad.add(LayerSpec(name="j", kind="add", d_in=8, d_out=8,
+                          in_hw=(4, 4), out_hw=(4, 4)), ["down", "same"])
+
+
+def test_concat_join_rates_and_flow():
+    """Inception-style: two parallel convs concatenated channel-wise."""
+    g = LayerGraph()
+    g.add(_pw("stem", 8, 16))
+    g.add(_pw("b1", 16, 24), ["stem"])
+    g.add(_pw("b2", 16, 8), ["stem"])
+    g.add(LayerSpec(name="cat", kind="concat", d_in=32, d_out=32,
+                    in_hw=(8, 8), out_hw=(8, 8)), ["b1", "b2"])
+    g.add(_pw("head", 32, 8), ["cat"])
+    demands, out = propagate_graph(g, F(2))
+    # q = 2/8 everywhere (no decimation); concat demand = q * 32
+    assert demands["cat"] == F(2, 8) * 32
+    assert out["cat"].d == 32
+    plan = plan_graph(g, F(2))
+    assert plan.continuous_flow
+    res = simulate_graph(plan, 96)
+    assert res.stall_free and res.within_bounds
+
+
+# ---------------------------------------------------------------------------
+# skew buffers: analytical bound vs discrete-event measurement
+# ---------------------------------------------------------------------------
+
+@given(st.integers(min_value=1, max_value=6), rates)
+@settings(max_examples=15, deadline=None)
+def test_diamond_skew_bound_tight(depth, r):
+    """The fast branch's measured occupancy equals the analytical bound
+    (the fluid timing model is exact for feasible plans)."""
+    g = _diamond(depth=depth)
+    plan = plan_graph(g, r)
+    jb = plan.buffer_for("join", "stem")     # shortcut = fast branch
+    assert jb.skew_cycles > 0
+    res = simulate_graph(plan, 128)
+    occ = {(o.join, o.src): o for o in res.occupancy}
+    fast = occ[("join", "stem")]
+    slow = occ[("join", f"trunk{depth - 1}")]
+    assert res.stall_free
+    assert fast.max_pixels <= fast.bound_pixels
+    assert fast.max_pixels >= fast.bound_pixels - 1   # tight, not just safe
+    assert slow.max_pixels <= slow.bound_pixels
+
+
+def test_deeper_trunk_needs_deeper_buffer():
+    r = F(2)
+    bounds = []
+    for depth in (1, 3, 6):
+        plan = plan_graph(_diamond(depth=depth), r)
+        bounds.append(plan.buffer_for("join", "stem").bound_pixels)
+    assert bounds == sorted(bounds)
+    assert bounds[-1] > bounds[0]
+
+
+def test_join_buffer_resources_scale_with_skew():
+    shallow = plan_graph(_diamond(depth=1), F(2)).buffer_for("join", "stem")
+    deep = plan_graph(_diamond(depth=6), F(2)).buffer_for("join", "stem")
+    es, ed = estimate_join_buffer(shallow), estimate_join_buffer(deep)
+    assert ed.bram36 + ed.lut >= es.bram36 + es.lut
+    assert shallow.bits < deep.bits
+
+
+# ---------------------------------------------------------------------------
+# real models: the acceptance sweep
+# ---------------------------------------------------------------------------
+
+SWEEP = [F(6, 1), F(3, 1), F(3, 2), F(3, 4), F(3, 8), F(3, 16), F(3, 32)]
+
+
+@pytest.mark.parametrize("rate", SWEEP)
+def test_mobilenet_v2_graph_continuous_flow(rate):
+    from repro.models.mobilenet import mobilenet_v2_graph
+    g = mobilenet_v2_graph((16, 16))
+    plan = plan_graph(g, rate)
+    assert plan.continuous_flow
+    res = simulate_graph(plan, 256)           # one full frame
+    assert res.stall_free, res.stalled_nodes
+    assert res.within_bounds, [
+        (o.join, o.src, o.max_pixels, o.bound_pixels)
+        for o in res.occupancy if not o.within_bound]
+
+
+@pytest.mark.parametrize("rate", SWEEP)
+def test_resnet18_graph_continuous_flow(rate):
+    from repro.models.resnet import resnet18_graph
+    g = resnet18_graph((32, 32))
+    plan = plan_graph(g, rate)
+    assert plan.continuous_flow
+    res = simulate_graph(plan, 1024)          # one full frame
+    assert res.stall_free, res.stalled_nodes
+    assert res.within_bounds, [
+        (o.join, o.src, o.max_pixels, o.bound_pixels)
+        for o in res.occupancy if not o.within_bound]
+
+
+def test_mobilenet_v2_graph_structure():
+    from repro.models.mobilenet import mobilenet_v2_graph
+    g = mobilenet_v2_graph()
+    # torchvision MobileNetV2 has 10 residual connections
+    assert len(g.joins()) == 10
+    assert all(g.spec(j).kind == "add" for j in g.joins())
+    # every join's shortcut operand is the block input (a branch point)
+    assert set(g.branches()) == {g.preds(j)[1] for j in g.joins()}
+
+
+def test_resnet18_structure_and_macs():
+    from repro.models.resnet import resnet18_graph
+    g = resnet18_graph()
+    assert len(g.joins()) == 8                # 2 basic blocks x 4 stages
+    macs = sum(g.spec(n).total_macs for n in g.topo_order())
+    assert macs == pytest.approx(1.81e9, rel=0.02)   # the published ~1.8 GMACs
+
+
+def test_resnet18_dag_dse_resources():
+    """DAG plan: skew FIFOs add BRAM on top of the node estimate, and the
+    'ours' scheme needs no more mults than [11] on every branch."""
+    from repro.models.resnet import resnet18_graph
+    g = resnet18_graph()
+    plan = plan_graph(g, F(3))
+    ref = plan_graph(g, F(3), scheme="ref11")
+    assert plan.total_mults <= ref.total_mults
+    nodes_only = estimate_network(list(plan.impls.values()))
+    full = estimate_graph(plan)
+    assert full.bram36 > nodes_only.bram36    # the FIFOs are accounted
+    assert len(plan.buffers) == 16            # 2 in-edges per join

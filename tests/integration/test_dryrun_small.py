@@ -38,7 +38,8 @@ def test_cost_analysis_is_per_device():
         x = jax.ShapeDtypeStruct((64, 256), jnp.float32,
             sharding=NamedSharding(mesh, P("data", None)))
         c = jax.jit(lambda w, x: x @ w).lower(w, x).compile()
-        print(c.cost_analysis()["flops"])
+        from repro.core.hlo_analysis import normalize_cost_analysis
+        print(normalize_cost_analysis(c.cost_analysis())["flops"])
     """)
     flops = float(out.strip().splitlines()[-1])
     logical = 2 * 64 * 256 * 512
@@ -55,7 +56,7 @@ def test_small_mesh_train_cell_compiles():
         from repro.configs.registry import get_config, reduced
         from repro.configs.shapes import ShapeSuite
         from repro.launch.dryrun import build_cell
-        from repro.core.hlo_analysis import collective_bytes
+        from repro.core.hlo_analysis import collective_bytes, normalize_cost_analysis
 
         cfg = reduced(get_config("qwen2-7b"), layers=2, d_model=64, vocab=256)
         cfg = dataclasses.replace(cfg, grad_accum=2)
@@ -65,7 +66,7 @@ def test_small_mesh_train_cell_compiles():
         with mesh:
             compiled = jax.jit(fn, donate_argnums=(0, 1)).lower(*args).compile()
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            cost = normalize_cost_analysis(compiled.cost_analysis())
             hlo = compiled.as_text()
         st = collective_bytes(hlo)
         print(json.dumps({

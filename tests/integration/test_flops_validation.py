@@ -13,6 +13,7 @@ import pytest
 from repro.configs.registry import get_config, reduced
 from repro.configs.shapes import ShapeSuite
 from repro.core.flops import step_flops
+from repro.core.hlo_analysis import normalize_cost_analysis
 from repro.launch.train import adam_config_for, build_train_step
 from repro.models import registry as models
 from repro.optim import optimizers as opt
@@ -28,7 +29,7 @@ def _measured_train_flops(cfg, shape):
         models.train_batch_specs(cfg, shape))
     step = build_train_step(cfg, adam)
     compiled = jax.jit(step).lower(params, opt_state, batch).compile()
-    return float(compiled.cost_analysis()["flops"])
+    return float(normalize_cost_analysis(compiled.cost_analysis())["flops"])
 
 
 @pytest.mark.parametrize("arch", ["qwen2-7b", "starcoder2-15b"])
