@@ -1,0 +1,121 @@
+"""Benchmark-regression gate for the analytic tables (CI: bench-regression).
+
+The DSE/resource-model numbers in tables 1-3 are exact, deterministic
+functions of the paper's equations — any drift is a real behaviour
+change, so the gate is an **exact match** on the ``derived`` column (the
+``us`` timing column is machine-dependent and ignored).
+
+Usage:
+  python -m benchmarks.run --only table1,table2,table3 --json current.json
+  python -m benchmarks.check_regression \
+      --baseline benchmarks/baselines/analytic_tables.json \
+      --current current.json          # exits 1 on any drift
+  python -m benchmarks.check_regression --baseline ... --current ... \
+      --update                        # intentional change: rewrite baseline
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List
+
+
+def load_rows(path: str) -> Dict[str, List[str]]:
+    """name -> derived values (a list, to survive duplicate row names)."""
+    with open(path) as f:
+        rows = json.load(f)
+    out: Dict[str, List[str]] = {}
+    for row in rows:
+        out.setdefault(row["name"], []).append(row["derived"])
+    return out
+
+
+def compare(
+    baseline: Dict[str, List[str]],
+    current: Dict[str, List[str]],
+) -> List[str]:
+    """Human-readable drift report; empty means the gate passes."""
+    problems = []
+    for name, want in sorted(baseline.items()):
+        got = current.get(name)
+        if got is None:
+            problems.append(f"MISSING  {name}: baseline row not produced")
+        elif got != want:
+            report = f"DRIFT    {name}:\n  baseline: {want}\n  current:  {got}"
+            problems.append(report)
+    for name in sorted(set(current) - set(baseline)):
+        problems.append(f"NEW      {name}: not in baseline (--update if meant)")
+    return problems
+
+
+def update_baseline(baseline_path: str, current_path: str) -> int:
+    """Install the current run as the new baseline (timings zeroed).
+
+    Refuses an empty run, and refuses to *shrink* the gate: if the
+    existing baseline has row names the current run did not produce
+    (e.g. a benchmark module crashed mid-run but --json still wrote the
+    partial rows), overwriting would silently drop them from coverage.
+    """
+    with open(current_path) as f:
+        rows = json.load(f)
+    if not rows:
+        print(f"refusing to baseline empty run {current_path}", file=sys.stderr)
+        return 1
+    if os.path.exists(baseline_path):
+        lost = set(load_rows(baseline_path)) - {r["name"] for r in rows}
+        if lost:
+            print(
+                f"refusing to shrink baseline: current run is missing "
+                f"{len(lost)} row(s), e.g. {sorted(lost)[:3]} "
+                f"(delete {baseline_path} first if the removal is real)",
+                file=sys.stderr,
+            )
+            return 1
+    for row in rows:
+        row["us"] = 0.0  # machine-dependent; keep baseline diffs clean
+    with open(baseline_path, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"baseline updated from {current_path} ({len(rows)} rows)")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--baseline",
+        required=True,
+        help="committed baseline JSON (benchmarks/baselines/)",
+    )
+    ap.add_argument(
+        "--current",
+        required=True,
+        help="JSON produced by benchmarks.run --json",
+    )
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="overwrite the baseline with the current run",
+    )
+    args = ap.parse_args(argv)
+
+    if args.update:
+        return update_baseline(args.baseline, args.current)
+
+    problems = compare(load_rows(args.baseline), load_rows(args.current))
+    if problems:
+        print(
+            f"benchmark regression check FAILED ({len(problems)} problems):",
+            file=sys.stderr,
+        )
+        for p in problems:
+            print(p, file=sys.stderr)
+        return 1
+    n = sum(len(v) for v in load_rows(args.baseline).values())
+    print(f"benchmark regression check passed ({n} rows exact-match)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

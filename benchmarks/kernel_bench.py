@@ -13,7 +13,6 @@ from fractions import Fraction as F
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.tpu_tiles import select_tile
 from repro.kernels.fcu_matmul import fcu_matmul, fcu_matmul_ref

@@ -18,10 +18,8 @@ embed/unembed).
 from __future__ import annotations
 
 import time
-from fractions import Fraction as F
 
 from repro.configs.registry import get_config
-from repro.configs.shapes import SHAPES
 from repro.core.flops import step_flops
 from repro.core.hw_specs import TPU_V5E
 from repro.core.stage_partition import (allocate_chips,

@@ -7,9 +7,8 @@ CSV emitters; EXPERIMENTS.md §Roofline embeds the markdown.
 from __future__ import annotations
 
 import json
-import time
 from pathlib import Path
-from typing import List, Optional
+from typing import List
 
 RESULTS = Path("results/dryrun")
 

@@ -22,13 +22,11 @@ import sys
 def _main() -> None:
     import jax
     import jax.numpy as jnp
-    import numpy as np
 
     from repro.core.stage_partition import (partition_min_bottleneck,
                                             service_rates)
-    from repro.distributed.pipeline_parallel import (microbatch_utilization,
-                                                     pipeline_forward,
-                                                     stack_stage_params)
+    from repro.distributed.pipeline_parallel import (
+        microbatch_utilization, pipeline_forward)
 
     print("=== 1. rate-aware stage partition ===")
     # 16 layers; the back half is 4x cheaper (post-'pooling' rate drop)

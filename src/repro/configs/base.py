@@ -7,7 +7,6 @@ dispatch happens in models.registry.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 import jax.numpy as jnp
 

@@ -30,7 +30,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from fractions import Fraction
-from typing import List, Optional, Tuple
+from typing import List, Tuple
 
 from .rate import LayerSpec, divisors
 

@@ -21,8 +21,6 @@ Conventions:
 """
 from __future__ import annotations
 
-import math
-from fractions import Fraction
 
 from repro.configs.base import ModelConfig, param_count
 from repro.configs.shapes import ShapeSuite
@@ -244,6 +242,31 @@ def step_hbm_bytes(cfg: ModelConfig, shape: ShapeSuite,
             * kv_bytes / chips
     logits = b * cfg.vocab * 4.0 / chips
     return weights + cache + logits
+
+
+# ---------------------------------------------------------------------------
+# CNN workload accounting (LayerSpec chains and LayerGraph DAGs)
+# ---------------------------------------------------------------------------
+
+def chain_macs(layers) -> int:
+    """Total multiplies to process one frame through a LayerSpec chain."""
+    return sum(spec.total_macs for spec in layers)
+
+
+def graph_macs(graph) -> int:
+    """Total multiplies to process one frame through a ``LayerGraph``.
+
+    This is the analytic ground truth the executable CNNs (models/cnn.py)
+    assert against layer-by-layer: the graph drives the DSE, the same
+    graph is interpreted by ``apply_graph``, and this sum ties the two
+    views of the workload together.
+    """
+    return sum(graph.spec(name).total_macs for name in graph.topo_order())
+
+
+def graph_weight_count(graph) -> int:
+    """Parameters (weights + biases) of a ``LayerGraph`` network."""
+    return sum(graph.spec(n).weight_count for n in graph.topo_order())
 
 
 def scan_trips(cfg: ModelConfig, shape: ShapeSuite) -> int:

@@ -44,7 +44,7 @@ from collections import OrderedDict
 from fractions import Fraction
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from .dse import LayerImpl, NON_ARITH_KINDS, select_impl
+from .dse import LayerImpl, select_impl
 from .rate import LayerSpec, RatePoint
 
 JOIN_KINDS = ("add", "concat")

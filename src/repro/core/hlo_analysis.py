@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Iterable, Optional
+from typing import Dict, Optional
 
 from .hw_specs import TPUSpec, TPU_V5E
 

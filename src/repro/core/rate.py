@@ -16,9 +16,8 @@ arithmetic units per output.
 from __future__ import annotations
 
 import dataclasses
-import math
 from fractions import Fraction
-from typing import Iterable, List, Optional, Sequence, Tuple
+from typing import List, Sequence, Tuple
 
 LayerKind = str
 # 'conv' | 'dwconv' | 'pointwise' | 'dense' | 'pool' | 'add' | 'gap' | 'concat'
@@ -42,6 +41,12 @@ class LayerSpec:
     stride: Tuple[int, int] = (1, 1)
     channel_multiplier: int = 1       # depthwise only
     padding: str = "same"
+    # post-layer nonlinearity ('none' | 'relu' | 'relu6').  Irrelevant to
+    # the rate/DSE algebra (activations are free on the FPGA datapath) but
+    # carried on the spec so the executable JAX network (models/cnn.py) is
+    # generated from the *same* description as the DSE graph — topology
+    # and inference cannot drift.
+    activation: str = "none"
 
     @property
     def k_taps(self) -> int:

@@ -23,11 +23,8 @@ Two tools:
 from __future__ import annotations
 
 import dataclasses
-import math
-from fractions import Fraction
 from typing import List, Sequence, Tuple
 
-from .rate import divisors
 
 
 @dataclasses.dataclass(frozen=True)

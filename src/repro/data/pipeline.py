@@ -14,8 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from pathlib import Path
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

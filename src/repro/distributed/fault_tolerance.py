@@ -24,7 +24,7 @@ import dataclasses
 import json
 import time
 from pathlib import Path
-from typing import Callable, List, Optional, Sequence
+from typing import List, Optional, Sequence
 
 import jax
 import numpy as np

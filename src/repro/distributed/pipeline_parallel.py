@@ -16,12 +16,11 @@ with PP as the documented scale-out axis for >16k-chip fleets.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.stage_partition import StagePlan, partition_blocks
 from repro import compat

@@ -17,7 +17,6 @@ import re
 from typing import Any, Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 

@@ -1,2 +1,2 @@
-from .ops import dw_conv  # noqa: F401
+from .ops import dw_conv_impl, dw_conv  # noqa: F401
 from .ref import dw_conv_ref  # noqa: F401

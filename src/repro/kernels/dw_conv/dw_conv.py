@@ -18,7 +18,6 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 
 def _dw_kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int, stride: int):

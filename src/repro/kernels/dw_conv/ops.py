@@ -44,3 +44,20 @@ def dw_conv(
     bc = bc or _pick_bc(c, rate)
     return dw_conv_p(xp, w, out_hw=(ho, wo), stride=stride, bc=bc,
                      interpret=interpret)
+
+
+def dw_conv_impl(*, rate: Optional[Fraction] = None, interpret: bool = True):
+    """Adapter to the CNN executor's 'dwconv' signature (models/cnn.py).
+
+    The executor stores depthwise weights HWIO with I=1 (grouped-conv
+    layout, ``[kh, kw, 1, C]``); the kernel wants ``[kh, kw, C]``.
+    """
+    def impl(x, w, stride):
+        if w.shape[-1] != x.shape[-1]:
+            raise NotImplementedError(
+                f"dw_conv kernel supports channel_multiplier == 1 only "
+                f"(got weights for {w.shape[-1]} outputs on "
+                f"{x.shape[-1]} channels); use the lax dwconv impl")
+        return dw_conv(x, w[:, :, 0, :], stride=stride, rate=rate,
+                       interpret=interpret)
+    return impl

@@ -1,2 +1,2 @@
-from .ops import fcu_matmul  # noqa: F401
+from .ops import dense_impl, fcu_matmul, pointwise_impl  # noqa: F401
 from .ref import fcu_matmul_ref  # noqa: F401

@@ -12,7 +12,6 @@ from fractions import Fraction
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.tpu_tiles import select_tile
 from .fcu_matmul import fcu_matmul_p
@@ -54,3 +53,18 @@ def fcu_matmul(
         bm = _pick_bm(m, bm)
     out = fcu_matmul_p(xm, w, bm=bm, bk=bk, bn=bn, interpret=interpret)
     return out.reshape(*lead, d_out)
+
+
+def pointwise_impl(*, rate: Optional[Fraction] = None, interpret: bool = True):
+    """Adapter to the CNN executor's 'pointwise' signature (models/cnn.py):
+    a 1x1 conv is exactly the FCU matmul over the pixel axis."""
+    def impl(x, w):
+        return fcu_matmul(x, w, rate=rate, interpret=interpret)
+    return impl
+
+
+def dense_impl(*, rate: Optional[Fraction] = None, interpret: bool = True):
+    """Adapter to the CNN executor's 'dense' signature (models/cnn.py)."""
+    def impl(x, w):
+        return fcu_matmul(x, w, rate=rate, interpret=interpret)
+    return impl

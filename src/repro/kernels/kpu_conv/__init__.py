@@ -1,2 +1,2 @@
-from .ops import kpu_conv  # noqa: F401
+from .ops import conv_impl, kpu_conv  # noqa: F401
 from .ref import kpu_conv_ref  # noqa: F401

@@ -42,3 +42,11 @@ def kpu_conv(
         bco = bco or t.bn
     return kpu_conv_p(xp, w, out_hw=(ho, wo), stride=stride,
                       bci=bci, bco=bco, interpret=interpret)
+
+
+def conv_impl(*, rate: Optional[Fraction] = None, interpret: bool = True):
+    """Adapter to the CNN executor's 'conv' signature (models/cnn.py):
+    ``impl(x, w_hwio, stride) -> y`` with the KPU kernel underneath."""
+    def impl(x, w, stride):
+        return kpu_conv(x, w, stride=stride, rate=rate, interpret=interpret)
+    return impl

@@ -1,6 +1,4 @@
 """Pure-jnp oracle for the fused SSD chunk kernel."""
-import jax
-import jax.numpy as jnp
 
 
 def ssd_chunk_ref(x, dt, a, b, c, *, chunk: int):

@@ -7,10 +7,8 @@ resume, straggler watchdog, heartbeat, resumable data stream.
 """
 from __future__ import annotations
 
-import argparse
-import functools
 import time
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,1 +1,6 @@
-"""Model zoo: the paper's CNNs + the 10 assigned LM-family architectures."""
+"""Model zoo: the paper's CNNs + the 10 assigned LM-family architectures.
+
+CNNs (mobilenet, resnet) share one inference machinery — models/cnn.py
+interprets each family's ``LayerGraph``, the same description the DSE
+plans — and are served uniformly via ``registry.get_cnn_api``.
+"""

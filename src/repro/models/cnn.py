@@ -1,0 +1,337 @@
+"""Unified CNN inference machinery: execute a ``LayerGraph`` in JAX.
+
+Every CNN family in the repo (MobileNetV1/V2, ResNet-18/34) describes
+itself **once**, as the ``LayerSpec`` DAG consumed by the data-rate DSE
+(core.graph).  This module is the other half of that contract: a generic
+interpreter that runs the *same* graph as a JAX network —
+
+  * ``init_graph_params``  — He-init weights + folded-BN bias per node,
+  * ``apply_graph``        — topological forward pass (NHWC),
+  * ``quantize_params`` / ``apply_int8`` — the paper's 8-bit datapath,
+  * ``default_impls`` / ``kernel_impls`` — XLA ops vs the Pallas KPU /
+    FCU / DW kernels, swappable per layer kind.
+
+Because topology and inference share one description they cannot drift:
+``apply_graph(check=True)`` re-derives each node's output shape and MAC
+count from the live arrays and asserts they equal the spec's analytic
+values (``LayerSpec.total_macs`` — the numbers ``core.flops.graph_macs``
+feeds to the DSE and the benchmark tables).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dse import NON_ARITH_KINDS
+from repro.core.graph import JOIN_KINDS, LayerGraph
+from repro.core.rate import LayerSpec
+
+Impl = Callable[..., jax.Array]
+Params = Dict[str, Dict[str, jax.Array]]
+
+# Weighted kinds — the complement of the DSE-owned partition
+# (core.dse.NON_ARITH_KINDS).  Membership checks below go through
+# NON_ARITH_KINDS directly so a kind added on the DSE side cannot be
+# silently treated as parameterless wiring here: it reaches
+# ``_weight_shape``, which raises for layouts it does not know.
+ARITH_KINDS = ("conv", "dwconv", "pointwise", "dense")
+
+
+def _is_arith(spec: LayerSpec) -> bool:
+    return spec.kind not in NON_ARITH_KINDS
+
+
+class GraphExecutionError(ValueError):
+    """The executable network disagrees with its LayerGraph description."""
+
+
+_ACTIVATIONS: Dict[str, Callable[[jax.Array], jax.Array]] = {
+    "none": lambda x: x,
+    "relu": jax.nn.relu,
+    "relu6": lambda x: jnp.clip(x, 0.0, 6.0),
+}
+
+
+# ==========================================================================
+# Default (XLA) implementations of the arithmetic kinds
+# ==========================================================================
+
+
+def _conv(x: jax.Array, w: jax.Array, stride: int) -> jax.Array:
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _dwconv(x: jax.Array, w: jax.Array, stride: int) -> jax.Array:
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=x.shape[-1],
+    )
+
+
+def _pointwise(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.einsum("bhwc,cd->bhwd", x, w)
+
+
+def _dense(x: jax.Array, w: jax.Array) -> jax.Array:
+    return x @ w
+
+
+def default_impls() -> Dict[str, Impl]:
+    """Pure-XLA implementations (the lax fallback; runs anywhere)."""
+    return {
+        "conv": _conv,
+        "dwconv": _dwconv,
+        "pointwise": _pointwise,
+        "dense": _dense,
+    }
+
+
+def kernel_impls(*, interpret: bool = True) -> Dict[str, Impl]:
+    """Pallas-kernel-backed implementations (KPU / DW / FCU).
+
+    Imported lazily so graph-only callers never pay for (or break on)
+    the Pallas stack; ``interpret=True`` runs the kernels in interpreter
+    mode on CPU.
+    """
+    from repro.kernels.dw_conv.ops import dw_conv_impl
+    from repro.kernels.fcu_matmul.ops import dense_impl, pointwise_impl
+    from repro.kernels.kpu_conv.ops import conv_impl
+
+    return {
+        "conv": conv_impl(interpret=interpret),
+        "dwconv": dw_conv_impl(interpret=interpret),
+        "pointwise": pointwise_impl(interpret=interpret),
+        "dense": dense_impl(interpret=interpret),
+    }
+
+
+# ==========================================================================
+# Parameters
+# ==========================================================================
+
+
+def _weight_shape(spec: LayerSpec) -> tuple:
+    if spec.kind == "conv":
+        return (*spec.kernel, spec.d_in, spec.d_out)
+    if spec.kind == "dwconv":
+        # HWIO for grouped conv: I = 1 (per-group), O = C * multiplier
+        return (*spec.kernel, 1, spec.d_in * spec.channel_multiplier)
+    if spec.kind in ("pointwise", "dense"):
+        return (spec.d_in, spec.d_out)
+    raise GraphExecutionError(
+        f"{spec.name}: no weight layout for kind {spec.kind!r}"
+    )
+
+
+def _fan_in(spec: LayerSpec) -> int:
+    if spec.kind == "conv":
+        return spec.d_in * spec.k_taps
+    if spec.kind == "dwconv":
+        return spec.k_taps
+    return spec.d_in
+
+
+def init_graph_params(
+    graph: LayerGraph, rng: jax.Array, dtype=jnp.float32
+) -> Params:
+    """He-init weights + folded-BN bias for every arithmetic node."""
+    params: Params = {}
+    for name in graph.topo_order():
+        spec = graph.spec(name)
+        if not _is_arith(spec):
+            continue
+        rng, k1 = jax.random.split(rng)
+        w = jax.random.normal(k1, _weight_shape(spec), dtype) * np.sqrt(
+            2.0 / _fan_in(spec)
+        )
+        params[name] = {"w": w, "b": jnp.zeros((spec.d_out,), dtype)}
+    return params
+
+
+# ==========================================================================
+# Forward pass
+# ==========================================================================
+
+
+def _node_forward(
+    spec: LayerSpec,
+    operands: List[jax.Array],
+    p: Optional[Dict[str, jax.Array]],
+    impls: Dict[str, Impl],
+) -> jax.Array:
+    # LayerGraph.add enforces this too; re-assert so a graph built any
+    # other way cannot silently drop an in-edge the DSE planned for.
+    if len(operands) > 1 and spec.kind not in JOIN_KINDS:
+        raise GraphExecutionError(
+            f"{spec.name}: kind {spec.kind!r} got {len(operands)} operands"
+        )
+    x = operands[0]
+    if spec.kind == "conv":
+        y = impls["conv"](x, p["w"], spec.stride[0]) + p["b"]
+    elif spec.kind == "dwconv":
+        y = impls["dwconv"](x, p["w"], spec.stride[0]) + p["b"]
+    elif spec.kind == "pointwise":
+        y = impls["pointwise"](x, p["w"]) + p["b"]
+    elif spec.kind == "dense":
+        y = impls["dense"](x, p["w"]) + p["b"]
+    elif spec.kind == "pool":
+        y = jax.lax.reduce_window(
+            x,
+            -jnp.inf,
+            jax.lax.max,
+            window_dimensions=(1, *spec.kernel, 1),
+            window_strides=(1, *spec.stride, 1),
+            padding="SAME",
+        )
+    elif spec.kind == "gap":
+        y = jnp.mean(x, axis=(1, 2))
+    elif spec.kind == "add":
+        y = x
+        for other in operands[1:]:
+            y = y + other
+    elif spec.kind == "concat":
+        y = jnp.concatenate(operands, axis=-1)
+    else:
+        raise GraphExecutionError(f"{spec.name}: unknown kind {spec.kind!r}")
+    try:
+        act = _ACTIVATIONS[spec.activation]
+    except KeyError:
+        raise GraphExecutionError(
+            f"{spec.name}: unknown activation {spec.activation!r}"
+        ) from None
+    return act(y)
+
+
+def _macs_from_arrays(
+    spec: LayerSpec, p: Optional[Dict[str, jax.Array]], y: jax.Array
+) -> int:
+    """Re-derive the node's MAC count from live array shapes alone."""
+    if not _is_arith(spec):
+        return 0
+    out_px = y.shape[1] * y.shape[2] if y.ndim == 4 else 1
+    w = p["w"]
+    if spec.kind == "conv":
+        kh, kw, ci, co = w.shape
+        return kh * kw * ci * co * out_px
+    if spec.kind == "dwconv":
+        kh, kw, _, co = w.shape
+        return kh * kw * co * out_px
+    ci, co = w.shape  # pointwise / dense
+    return ci * co * out_px
+
+
+def _check_node(
+    spec: LayerSpec, p: Optional[Dict[str, jax.Array]], y: jax.Array
+) -> None:
+    n = y.shape[0]
+    if spec.kind in ("gap", "dense"):
+        expect = (n, spec.d_out)
+    else:
+        expect = (n, *spec.out_hw, spec.d_out)
+    if tuple(y.shape) != expect:
+        raise GraphExecutionError(
+            f"{spec.name}: executable shape {tuple(y.shape)} != "
+            f"LayerGraph shape {expect}"
+        )
+    macs = _macs_from_arrays(spec, p, y)
+    if macs != spec.total_macs:
+        raise GraphExecutionError(
+            f"{spec.name}: executable MACs {macs} != "
+            f"LayerSpec.total_macs {spec.total_macs}"
+        )
+
+
+def apply_graph(
+    params: Params,
+    x: jax.Array,
+    graph: LayerGraph,
+    *,
+    impls: Optional[Dict[str, Impl]] = None,
+    dtype=jnp.float32,
+    check: bool = True,
+) -> jax.Array:
+    """Forward pass of a LayerGraph network.  ``x``: [N, H, W, d_in].
+
+    ``impls`` overrides any of {'conv', 'dwconv', 'pointwise', 'dense'}
+    with kernel-backed implementations (see ``kernel_impls``).  With
+    ``check=True`` (trace-time only — free under jit) every node's output
+    shape and MAC count are asserted against its ``LayerSpec``.
+    """
+    inputs = graph.input_nodes
+    outputs = graph.output_nodes
+    if len(inputs) != 1 or len(outputs) != 1:
+        raise GraphExecutionError(
+            f"apply_graph needs a single-input/single-output graph, got "
+            f"inputs={inputs}, outputs={outputs}"
+        )
+    table = default_impls()
+    if impls:
+        table.update(impls)
+
+    x = x.astype(dtype)
+    values: Dict[str, jax.Array] = {}
+    for name in graph.topo_order():
+        spec = graph.spec(name)
+        preds = graph.preds(name)
+        operands = [values[pr] for pr in preds] if preds else [x]
+        p = params.get(name)
+        if _is_arith(spec) and p is None:
+            raise GraphExecutionError(f"{name}: missing parameters")
+        y = _node_forward(spec, operands, p, table)
+        if check:
+            _check_node(spec, p, y)
+        values[name] = y
+    return values[outputs[0]]
+
+
+# ==========================================================================
+# int8 simulated-quantization path (paper runs an 8-bit datapath)
+# ==========================================================================
+
+
+def quantize_params(params: Params, bits: int = 8):
+    """Per-tensor symmetric int8 weights; returns (q_params, scales)."""
+    qmax = 2 ** (bits - 1) - 1
+    q, scales = {}, {}
+    for name, p in params.items():
+        s = jnp.maximum(jnp.max(jnp.abs(p["w"])), 1e-8) / qmax
+        q[name] = {"w": jnp.round(p["w"] / s).astype(jnp.int8), "b": p["b"]}
+        scales[name] = s
+    return q, scales
+
+
+def dequantize_params(q_params, scales, dtype=jnp.float32) -> Params:
+    return {
+        name: {"w": p["w"].astype(dtype) * scales[name], "b": p["b"]}
+        for name, p in q_params.items()
+    }
+
+
+def apply_int8(
+    q_params,
+    scales,
+    x: jax.Array,
+    graph: LayerGraph,
+    *,
+    impls: Optional[Dict[str, Impl]] = None,
+    dtype=jnp.float32,
+    check: bool = True,
+) -> jax.Array:
+    """Inference with int8 weights dequantized on the fly (sim of the
+    FPGA's int8 datapath; activations stay float — activation quant is
+    exercised in the kernels' int8 mode)."""
+    deq = dequantize_params(q_params, scales, dtype)
+    return apply_graph(deq, x, graph, impls=impls, dtype=dtype, check=check)

@@ -11,7 +11,7 @@ calculus allocates chips across it via core.stage_partition.allocate_chips
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

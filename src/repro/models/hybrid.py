@@ -11,7 +11,7 @@ Caches: SSM state per layer + ONE KV cache per shared-attention *site*
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,7 @@ the architectural reason the shape suite routes 512k decode to SSM).
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -1,30 +1,34 @@
 """MobileNetV1/V2 — the paper's evaluation models.
 
-Two faces:
+Two faces, generated from one block description:
 
 1. ``mobilenet_v1_chain()`` / ``mobilenet_v2_chain()`` — the ``LayerSpec``
-   chains consumed by the core DSE + resource model (Tables I & II).
-2. ``init_params`` / ``apply`` — a full JAX inference implementation
-   (NHWC, bf16/fp32, optional int8 simulated quantization to honour the
-   paper's 8-bit datapath), used end-to-end by the examples and as the
-   integration target for the Pallas kernels (a ``conv_impls`` mapping
-   lets the caller swap XLA convs for kernel-backed ones).
+   chains consumed by the core DSE + resource model (Tables I & II), and
+   ``mobilenet_v2_graph()`` — the true DAG with residual joins.
+2. ``init_params`` / ``apply`` — JAX inference (NHWC, folded BN,
+   optional int8 simulated quantization to honour the paper's 8-bit
+   datapath) via the shared ``LayerGraph`` executor in models/cnn.py.
+   A ``conv_impls`` mapping lets the caller swap XLA convs for the
+   Pallas KPU/FCU/DW kernels (repro.kernels.*.ops).
 
+The executor interprets the same graph the DSE plans, asserting per-node
+shapes/MACs against the specs, so topology and inference cannot drift.
 BatchNorm is folded into conv scale/bias (inference-time, as on the FPGA).
 """
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.graph import LayerGraph
 from repro.core.rate import LayerSpec
-from repro.models.topology import conv_spec as _conv
+from repro.models import cnn
+from repro.models.topology import (
+    add_spec, conv_spec as _conv, dense_spec, gap_spec,
+)
 
 
 # ==========================================================================
@@ -41,7 +45,7 @@ def mobilenet_v1_chain(
 
     layers: List[LayerSpec] = []
     hw = input_hw
-    spec, hw = _conv("conv1", "conv", 3, c(32), hw, 3, 2)
+    spec, hw = _conv("conv1", "conv", 3, c(32), hw, 3, 2, act="relu6")
     layers.append(spec)
     # (dw stride, pw out channels)
     cfg = [(1, 64), (2, 128), (1, 128), (2, 256), (1, 256), (2, 512),
@@ -49,15 +53,14 @@ def mobilenet_v1_chain(
            (2, 1024), (1, 1024)]
     d = c(32)
     for i, (s, out) in enumerate(cfg):
-        spec, hw = _conv(f"dw{i+1}", "dwconv", d, d, hw, 3, s)
+        spec, hw = _conv(f"dw{i+1}", "dwconv", d, d, hw, 3, s, act="relu6")
         layers.append(spec)
-        spec, hw = _conv(f"pw{i+1}", "pointwise", d, c(out), hw, 1, 1)
+        spec, hw = _conv(f"pw{i+1}", "pointwise", d, c(out), hw, 1, 1,
+                         act="relu6")
         layers.append(spec)
         d = c(out)
-    layers.append(LayerSpec(name="gap", kind="gap", d_in=d, d_out=d,
-                            in_hw=hw, out_hw=(1, 1), kernel=hw))
-    layers.append(LayerSpec(name="fc", kind="dense", d_in=d,
-                            d_out=num_classes, in_hw=(1, 1), out_hw=(1, 1)))
+    layers.append(gap_spec("gap", d, hw))
+    layers.append(dense_spec("fc", d, num_classes))
     return layers
 
 
@@ -73,18 +76,58 @@ _V2_CFG = [
 ]
 
 
-def mobilenet_v2_chain(
-    input_hw: Tuple[int, int] = (224, 224), alpha: float = 1.0,
-    num_classes: int = 1000,
-) -> List[LayerSpec]:
+def _v2_channels(alpha: float):
     def c(ch):
         ch = int(ch * alpha)
         return max(8, (ch + 4) // 8 * 8)
+    return c
 
-    layers: List[LayerSpec] = []
+
+class _ChainSink:
+    """Collects the linear LayerSpec sequence; residual edges are dropped
+    (the chain view the paper's Tables I/II are computed on)."""
+
+    def __init__(self) -> None:
+        self.layers: List[LayerSpec] = []
+
+    def start_block(self) -> None:
+        pass
+
+    def layer(self, spec: LayerSpec) -> None:
+        self.layers.append(spec)
+
+    def join(self, name: str, d: int, hw: Tuple[int, int]) -> None:
+        pass
+
+
+class _GraphSink:
+    """Builds the true DAG: an explicit 'add' join per residual block."""
+
+    def __init__(self) -> None:
+        self.g = LayerGraph()
+        self.prev: Optional[str] = None
+        self.block_in: Optional[str] = None
+
+    def start_block(self) -> None:
+        self.block_in = self.prev
+
+    def layer(self, spec: LayerSpec) -> None:
+        self.prev = self.g.add(spec,
+                               [self.prev] if self.prev is not None else [])
+
+    def join(self, name: str, d: int, hw: Tuple[int, int]) -> None:
+        self.prev = self.g.add(add_spec(name, d, hw),
+                               [self.prev, self.block_in])
+
+
+def _v2_body(sink, input_hw, alpha):
+    """Walk the V2 block description once, emitting into ``sink`` — the
+    single source both the DSE topology and the executable net derive
+    from.  Returns (final channels, final hw)."""
+    c = _v2_channels(alpha)
     hw = input_hw
-    spec, hw = _conv("conv1", "conv", 3, c(32), hw, 3, 2)
-    layers.append(spec)
+    spec, hw = _conv("conv1", "conv", 3, c(32), hw, 3, 2, act="relu6")
+    sink.layer(spec)
     d = c(32)
     blk = 0
     for t, ch, n, s in _V2_CFG:
@@ -92,23 +135,36 @@ def mobilenet_v2_chain(
             blk += 1
             stride = s if i == 0 else 1
             exp = d * t
+            sink.start_block()
             if t != 1:
-                spec, hw = _conv(f"b{blk}_expand", "pointwise", d, exp, hw, 1, 1)
-                layers.append(spec)
-            spec, hw = _conv(f"b{blk}_dw", "dwconv", exp, exp, hw, 3, stride)
-            layers.append(spec)
-            spec, hw = _conv(f"b{blk}_project", "pointwise", exp, c(ch), hw, 1, 1)
-            layers.append(spec)
+                spec, hw = _conv(f"b{blk}_expand", "pointwise", d, exp, hw,
+                                 1, 1, act="relu6")
+                sink.layer(spec)
+            spec, hw = _conv(f"b{blk}_dw", "dwconv", exp, exp, hw, 3, stride,
+                             act="relu6")
+            sink.layer(spec)
+            # linear bottleneck: no activation on the projection
+            spec, hw = _conv(f"b{blk}_project", "pointwise", exp, c(ch), hw,
+                             1, 1, act="none")
+            sink.layer(spec)
+            if stride == 1 and d == c(ch):
+                sink.join(f"b{blk}_add", c(ch), hw)
             d = c(ch)
-    spec, hw = _conv("conv_last", "pointwise", d, c(1280) if alpha > 1.0 else 1280,
-                     hw, 1, 1)
-    layers.append(spec)
-    d = 1280 if alpha <= 1.0 else c(1280)
-    layers.append(LayerSpec(name="gap", kind="gap", d_in=d, d_out=d,
-                            in_hw=hw, out_hw=(1, 1), kernel=hw))
-    layers.append(LayerSpec(name="fc", kind="dense", d_in=d,
-                            d_out=num_classes, in_hw=(1, 1), out_hw=(1, 1)))
-    return layers
+    last = c(1280) if alpha > 1.0 else 1280
+    spec, hw = _conv("conv_last", "pointwise", d, last, hw, 1, 1, act="relu6")
+    sink.layer(spec)
+    return last, hw
+
+
+def mobilenet_v2_chain(
+    input_hw: Tuple[int, int] = (224, 224), alpha: float = 1.0,
+    num_classes: int = 1000,
+) -> List[LayerSpec]:
+    sink = _ChainSink()
+    d, hw = _v2_body(sink, input_hw, alpha)
+    sink.layers.append(gap_spec("gap", d, hw))
+    sink.layers.append(dense_spec("fc", d, num_classes))
+    return sink.layers
 
 
 def mobilenet_v2_graph(
@@ -120,47 +176,15 @@ def mobilenet_v2_graph(
     output and the block input — the topology the FPGA dataflow actually
     builds (the chain variant drops the residual edges, underestimating
     both the skew FIFOs and the adders)."""
-    def c(ch):
-        ch = int(ch * alpha)
-        return max(8, (ch + 4) // 8 * 8)
-
-    g = LayerGraph()
-    hw = input_hw
-    spec, hw = _conv("conv1", "conv", 3, c(32), hw, 3, 2)
-    prev = g.add(spec)
-    d = c(32)
-    blk = 0
-    for t, ch, n, s in _V2_CFG:
-        for i in range(n):
-            blk += 1
-            stride = s if i == 0 else 1
-            exp = d * t
-            block_in = prev
-            if t != 1:
-                spec, hw = _conv(f"b{blk}_expand", "pointwise", d, exp, hw, 1, 1)
-                prev = g.add(spec, [prev])
-            spec, hw = _conv(f"b{blk}_dw", "dwconv", exp, exp, hw, 3, stride)
-            prev = g.add(spec, [prev])
-            spec, hw = _conv(f"b{blk}_project", "pointwise", exp, c(ch), hw, 1, 1)
-            prev = g.add(spec, [prev])
-            if stride == 1 and d == c(ch):
-                prev = g.add(
-                    LayerSpec(name=f"b{blk}_add", kind="add", d_in=c(ch),
-                              d_out=c(ch), in_hw=hw, out_hw=hw),
-                    [prev, block_in])
-            d = c(ch)
-    last = c(1280) if alpha > 1.0 else 1280
-    spec, hw = _conv("conv_last", "pointwise", d, last, hw, 1, 1)
-    prev = g.add(spec, [prev])
-    prev = g.add(LayerSpec(name="gap", kind="gap", d_in=last, d_out=last,
-                           in_hw=hw, out_hw=(1, 1), kernel=hw), [prev])
-    g.add(LayerSpec(name="fc", kind="dense", d_in=last, d_out=num_classes,
-                    in_hw=(1, 1), out_hw=(1, 1)), [prev])
-    return g
+    sink = _GraphSink()
+    d, hw = _v2_body(sink, input_hw, alpha)
+    prev = sink.g.add(gap_spec("gap", d, hw), [sink.prev])
+    sink.g.add(dense_spec("fc", d, num_classes), [prev])
+    return sink.g
 
 
 # ==========================================================================
-# JAX model (NHWC, folded BN)
+# JAX model (NHWC, folded BN) — the shared executor on the same graph
 # ==========================================================================
 
 @dataclasses.dataclass(frozen=True)
@@ -183,128 +207,35 @@ class MobileNetConfig:
         return LayerGraph.from_chain(self.chain())
 
 
-def init_params(cfg: MobileNetConfig, rng: jax.Array) -> Dict[str, Dict[str, jax.Array]]:
-    """He-init weights + folded-BN bias for every layer in the chain."""
-    params: Dict[str, Dict[str, jax.Array]] = {}
-    for spec in cfg.chain():
-        if spec.kind in ("gap", "add", "pool"):
-            continue
-        rng, k1, k2 = jax.random.split(rng, 3)
-        if spec.kind == "conv":
-            shape = (*spec.kernel, spec.d_in, spec.d_out)
-            fan_in = spec.d_in * spec.k_taps
-        elif spec.kind == "dwconv":
-            # HWIO for grouped conv: I = 1 (per-group), O = C * multiplier
-            shape = (*spec.kernel, 1, spec.d_in * spec.channel_multiplier)
-            fan_in = spec.k_taps
-        else:  # pointwise / dense
-            shape = (spec.d_in, spec.d_out)
-            fan_in = spec.d_in
-        w = jax.random.normal(k1, shape, cfg.dtype) * np.sqrt(2.0 / fan_in)
-        b = jnp.zeros((spec.d_out,), cfg.dtype)
-        params[spec.name] = {"w": w, "b": b}
-    return params
-
-
-def _relu6(x):
-    return jnp.clip(x, 0.0, 6.0)
-
-
-ConvImpl = Callable[..., jax.Array]
-
-
-def _default_conv(x, w, stride):
-    return jax.lax.conv_general_dilated(
-        x, w, window_strides=(stride, stride), padding="SAME",
-        dimension_numbers=("NHWC", "HWIO", "NHWC"),
-    )
-
-
-def _default_dwconv(x, w, stride):
-    c = x.shape[-1]
-    return jax.lax.conv_general_dilated(
-        x, w, window_strides=(stride, stride), padding="SAME",
-        dimension_numbers=("NHWC", "HWIO", "NHWC"),
-        feature_group_count=c,
-    )
-
-
-def _default_pointwise(x, w):
-    return jnp.einsum("bhwc,cd->bhwd", x, w)
+def init_params(cfg: MobileNetConfig, rng: jax.Array) -> cnn.Params:
+    """He-init weights + folded-BN bias for every layer in the graph."""
+    return cnn.init_graph_params(cfg.graph(), rng, cfg.dtype)
 
 
 def apply(
-    params: Dict[str, Dict[str, jax.Array]],
+    params: cnn.Params,
     x: jax.Array,
     cfg: MobileNetConfig,
     *,
-    conv_impls: Optional[Dict[str, ConvImpl]] = None,
+    conv_impls: Optional[Dict[str, cnn.Impl]] = None,
+    check: bool = True,
 ) -> jax.Array:
     """Forward pass.  ``x``: [N, H, W, 3].  Returns logits [N, classes].
 
-    ``conv_impls`` may override {'conv', 'dwconv', 'pointwise'} with
-    kernel-backed implementations (see repro.kernels.*.ops).
+    ``conv_impls`` may override {'conv', 'dwconv', 'pointwise', 'dense'}
+    with kernel-backed implementations (see repro.kernels.*.ops and
+    ``cnn.kernel_impls``).
     """
-    impls = {"conv": _default_conv, "dwconv": _default_dwconv,
-             "pointwise": _default_pointwise}
-    if conv_impls:
-        impls.update(conv_impls)
-
-    chain = cfg.chain()
-    residual: Optional[jax.Array] = None
-    block_in: Optional[jax.Array] = None
-    x = x.astype(cfg.dtype)
-
-    for spec in chain:
-        if spec.kind == "gap":
-            x = jnp.mean(x, axis=(1, 2))
-            continue
-        p = params[spec.name]
-        if spec.kind == "conv":
-            x = impls["conv"](x, p["w"], spec.stride[0]) + p["b"]
-            x = _relu6(x)
-        elif spec.kind == "dwconv":
-            x = impls["dwconv"](x, p["w"], spec.stride[0]) + p["b"]
-            x = _relu6(x)
-        elif spec.kind == "pointwise":
-            is_project = cfg.version == 2 and spec.name.endswith("_project")
-            is_expand = cfg.version == 2 and spec.name.endswith("_expand")
-            if is_expand:
-                block_in = x
-            x = impls["pointwise"](x, p["w"]) + p["b"]
-            if is_project:
-                # linear bottleneck: no activation; residual when shapes match
-                if block_in is not None and block_in.shape == x.shape:
-                    x = x + block_in
-                block_in = None
-            else:
-                x = _relu6(x)
-        elif spec.kind == "dense":
-            x = x @ p["w"] + p["b"]
-    return x
+    return cnn.apply_graph(params, x, cfg.graph(), impls=conv_impls,
+                           dtype=cfg.dtype, check=check)
 
 
-# ==========================================================================
-# int8 simulated-quantization path (paper runs an 8-bit datapath)
-# ==========================================================================
-
-def quantize_params(params, bits: int = 8):
-    """Per-tensor symmetric int8 weights; returns (q_params, scales)."""
-    qmax = 2 ** (bits - 1) - 1
-    q, scales = {}, {}
-    for name, p in params.items():
-        s = jnp.maximum(jnp.max(jnp.abs(p["w"])), 1e-8) / qmax
-        q[name] = {"w": jnp.round(p["w"] / s).astype(jnp.int8), "b": p["b"]}
-        scales[name] = s
-    return q, scales
+# the paper's 8-bit datapath — shared with every CNN family
+quantize_params = cnn.quantize_params
 
 
 def apply_int8(q_params, scales, x, cfg: MobileNetConfig) -> jax.Array:
     """Inference with int8 weights dequantized on the fly (sim of the
     FPGA's int8 datapath; activations stay float — activation quant is
     exercised in the kernels' int8 mode)."""
-    deq = {
-        name: {"w": p["w"].astype(cfg.dtype) * scales[name], "b": p["b"]}
-        for name, p in q_params.items()
-    }
-    return apply(deq, x, cfg)
+    return cnn.apply_int8(q_params, scales, x, cfg.graph(), dtype=cfg.dtype)

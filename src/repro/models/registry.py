@@ -1,6 +1,6 @@
-"""Uniform model API across the five families + abstract input specs.
+"""Uniform model API across the five LM families + the CNN registry.
 
-Everything the launcher / dry-run needs:
+LM side — everything the launcher / dry-run needs:
   api = get_api(cfg)
   api.init(cfg, rng) -> params
   api.loss_fn(params, batch, cfg) -> (loss, metrics)
@@ -9,19 +9,27 @@ Everything the launcher / dry-run needs:
   api.decode(params, state, batch, pos, cfg) -> (logits, state)
   train_batch_specs(cfg, shape) / serve_specs(cfg, shape) ->
       jax.ShapeDtypeStruct pytrees (no allocation — dry-run safe).
+
+CNN side — the paper's workloads, same lookup shape:
+  api = get_cnn_api("resnet18")          # or mobilenet_v1/v2, resnet34
+  cfg = api.make_config(input_hw=(32, 32), num_classes=10)
+  params = api.init(cfg, rng)
+  logits = api.apply(params, x, cfg)     # conv_impls= swaps in Pallas
+  q, s = api.quantize(params); api.apply_int8(q, s, x, cfg)
+  api.graph(cfg) -> the LayerGraph the DSE plans (same description).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.configs.shapes import ShapeSuite
-from repro.models import encdec, hybrid, lm, mamba, vlm
+from repro.models import encdec, hybrid, lm, mamba, mobilenet, resnet, vlm
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,6 +126,74 @@ _FAMILIES = {
 
 def get_api(cfg: ModelConfig) -> ModelAPI:
     return _FAMILIES[cfg.family]()
+
+
+# --------------------------------------------------------------------------
+# CNN registry (the paper's workloads: shared apply machinery, models/cnn.py)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CNNApi:
+    """Uniform surface over the CNN families (mirrors ModelAPI's shape).
+
+    All apply machinery is shared (models/cnn.py interprets the family's
+    LayerGraph); a family contributes only its config type and its graph
+    builder, so adding one is a ~10-line registration below.
+    """
+
+    family: str
+    make_config: Callable            # (**overrides) -> cfg dataclass
+    init: Callable                   # (cfg, rng) -> params
+    apply: Callable                  # (params, x, cfg, *, conv_impls=None)
+    quantize: Callable               # (params, bits=8) -> (q_params, scales)
+    apply_int8: Callable             # (q_params, scales, x, cfg) -> logits
+    graph: Callable                  # (cfg) -> LayerGraph (the DSE's view)
+
+
+def _mobilenet_api(version: int) -> CNNApi:
+    return CNNApi(
+        family=f"mobilenet_v{version}",
+        make_config=functools.partial(mobilenet.MobileNetConfig,
+                                      version=version),
+        init=mobilenet.init_params,
+        apply=mobilenet.apply,
+        quantize=mobilenet.quantize_params,
+        apply_int8=mobilenet.apply_int8,
+        graph=lambda cfg: cfg.graph(),
+    )
+
+
+def _resnet_api(depth: int) -> CNNApi:
+    return CNNApi(
+        family=f"resnet{depth}",
+        make_config=functools.partial(resnet.ResNetConfig, depth=depth),
+        init=resnet.init_params,
+        apply=resnet.apply,
+        quantize=resnet.quantize_params,
+        apply_int8=resnet.apply_int8,
+        graph=lambda cfg: cfg.graph(),
+    )
+
+
+_CNN_FAMILIES: Dict[str, Callable[[], CNNApi]] = {
+    "mobilenet_v1": functools.partial(_mobilenet_api, 1),
+    "mobilenet_v2": functools.partial(_mobilenet_api, 2),
+    "resnet18": functools.partial(_resnet_api, 18),
+    "resnet34": functools.partial(_resnet_api, 34),
+}
+
+
+def cnn_families() -> Tuple[str, ...]:
+    return tuple(sorted(_CNN_FAMILIES))
+
+
+def get_cnn_api(name: str) -> CNNApi:
+    try:
+        return _CNN_FAMILIES[name]()
+    except KeyError:
+        raise KeyError(
+            f"unknown CNN family {name!r}; known: {', '.join(cnn_families())}"
+        ) from None
 
 
 # --------------------------------------------------------------------------

@@ -1,4 +1,4 @@
-"""ResNet-18/34 as ``LayerGraph`` DAGs for the data-rate-aware DSE.
+"""ResNet-18/34: LayerGraph DAGs for the DSE **and** the executable net.
 
 ResNet is the canonical branch-heavy CNN the chain-only rate calculus
 could not express: every basic block is a diamond — a two-conv trunk
@@ -7,62 +7,70 @@ in an elementwise add.  The shortcut is shallow, the trunk is two 3x3
 convolutions deep, so every join needs a skew FIFO sized by
 ``core.graph.join_buffers``; ResNet-18 at 224x224 has 8 of them.
 
-Only the DSE-facing LayerSpec topology lives here (weights/inference for
-CNNs are exercised via the MobileNet JAX path and the Pallas kernels);
-the graphs drive DSE, resource estimation and the discrete-event
-validator, and are reported in benchmarks/table3_dag_buffers.py.
+Both faces are generated from the *same* block description:
+
+1. ``resnet18_graph()`` / ``resnet34_graph()`` — the ``LayerGraph``
+   driving DSE, resource estimation, the discrete-event validator and
+   benchmarks/table3_dag_buffers.py.
+2. ``init_params`` / ``apply`` / ``quantize_params`` / ``apply_int8`` —
+   JAX inference (NHWC, folded BN, optional Pallas kernels) via the
+   shared executor in models/cnn.py, which *interprets that same graph*
+   and asserts per-node shapes/MACs against it.  Topology and inference
+   cannot drift.
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
 
 from repro.core.graph import LayerGraph
-from repro.core.rate import LayerSpec
-from repro.models.topology import ceil_div as _ceil_div, conv_spec
+from repro.models import cnn
+from repro.models.topology import (
+    add_spec, conv_spec, dense_spec, gap_spec, pool_spec,
+)
 
-_RESNET18_STAGES = [(64, 2), (128, 2), (256, 2), (512, 2)]
-_RESNET34_STAGES = [(64, 3), (128, 4), (256, 6), (512, 3)]
+_RESNET_STAGES = {
+    18: [(64, 2), (128, 2), (256, 2), (512, 2)],
+    34: [(64, 3), (128, 4), (256, 6), (512, 3)],
+}
 
 
 def _conv(name: str, d_in: int, d_out: int, hw: Tuple[int, int],
-          k: int, s: int) -> Tuple[LayerSpec, Tuple[int, int]]:
-    return conv_spec(name, "conv", d_in, d_out, hw, k, s)
+          k: int, s: int, act: str) -> Tuple:
+    return conv_spec(name, "conv", d_in, d_out, hw, k, s, act=act)
 
 
 def _basic_block(g: LayerGraph, prev: str, name: str, d_in: int, d_out: int,
                  hw: Tuple[int, int], stride: int) -> Tuple[str, Tuple[int, int]]:
-    """conv3x3(s) -> conv3x3(1) summed with the shortcut (identity, or a
-    strided 1x1 projection when shape changes)."""
+    """conv3x3(s)+relu -> conv3x3(1) summed with the shortcut (identity,
+    or a strided 1x1 projection when shape changes), relu after the add —
+    the post-activation ResNet-v1 arrangement with BN folded away."""
     block_in = prev
-    spec, mid_hw = _conv(f"{name}_conv1", d_in, d_out, hw, 3, stride)
+    spec, mid_hw = _conv(f"{name}_conv1", d_in, d_out, hw, 3, stride, "relu")
     prev = g.add(spec, [prev])
-    spec, out_hw = _conv(f"{name}_conv2", d_out, d_out, mid_hw, 3, 1)
+    spec, out_hw = _conv(f"{name}_conv2", d_out, d_out, mid_hw, 3, 1, "none")
     prev = g.add(spec, [prev])
     if stride != 1 or d_in != d_out:
-        ds, ds_hw = _conv(f"{name}_down", d_in, d_out, hw, 1, stride)
+        ds, ds_hw = _conv(f"{name}_down", d_in, d_out, hw, 1, stride, "none")
         assert ds_hw == out_hw
         shortcut = g.add(ds, [block_in])
     else:
         shortcut = block_in
-    prev = g.add(
-        LayerSpec(name=f"{name}_add", kind="add", d_in=d_out, d_out=d_out,
-                  in_hw=out_hw, out_hw=out_hw),
-        [prev, shortcut])
+    prev = g.add(add_spec(f"{name}_add", d_out, out_hw, act="relu"),
+                 [prev, shortcut])
     return prev, out_hw
 
 
 def _resnet_graph(stages: List[Tuple[int, int]],
                   input_hw: Tuple[int, int], num_classes: int) -> LayerGraph:
     g = LayerGraph()
-    hw = input_hw
-    spec, hw = _conv("conv1", 3, 64, hw, 7, 2)
+    spec, hw = _conv("conv1", 3, 64, input_hw, 7, 2, "relu")
     prev = g.add(spec)
-    pool_hw = (_ceil_div(hw[0], 2), _ceil_div(hw[1], 2))
-    prev = g.add(
-        LayerSpec(name="maxpool", kind="pool", d_in=64, d_out=64,
-                  in_hw=hw, out_hw=pool_hw, kernel=(3, 3), stride=(2, 2)),
-        [prev])
-    hw = pool_hw
+    spec, hw = pool_spec("maxpool", 64, hw, 3, 2)
+    prev = g.add(spec, [prev])
     d = 64
     for si, (ch, blocks) in enumerate(stages, start=1):
         for bi in range(blocks):
@@ -70,18 +78,65 @@ def _resnet_graph(stages: List[Tuple[int, int]],
             prev, hw = _basic_block(g, prev, f"l{si}b{bi + 1}", d, ch, hw,
                                     stride)
             d = ch
-    prev = g.add(LayerSpec(name="gap", kind="gap", d_in=d, d_out=d,
-                           in_hw=hw, out_hw=(1, 1), kernel=hw), [prev])
-    g.add(LayerSpec(name="fc", kind="dense", d_in=d, d_out=num_classes,
-                    in_hw=(1, 1), out_hw=(1, 1)), [prev])
+    prev = g.add(gap_spec("gap", d, hw), [prev])
+    g.add(dense_spec("fc", d, num_classes), [prev])
     return g
 
 
 def resnet18_graph(input_hw: Tuple[int, int] = (224, 224),
                    num_classes: int = 1000) -> LayerGraph:
-    return _resnet_graph(_RESNET18_STAGES, input_hw, num_classes)
+    return _resnet_graph(_RESNET_STAGES[18], input_hw, num_classes)
 
 
 def resnet34_graph(input_hw: Tuple[int, int] = (224, 224),
                    num_classes: int = 1000) -> LayerGraph:
-    return _resnet_graph(_RESNET34_STAGES, input_hw, num_classes)
+    return _resnet_graph(_RESNET_STAGES[34], input_hw, num_classes)
+
+
+# ==========================================================================
+# JAX model (NHWC, folded BN) — the shared executor on the same graph
+# ==========================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    depth: int = 18                       # 18 | 34
+    input_hw: Tuple[int, int] = (224, 224)
+    num_classes: int = 1000
+    dtype: jnp.dtype = jnp.float32
+
+    def __post_init__(self):
+        if self.depth not in _RESNET_STAGES:
+            raise ValueError(f"unsupported ResNet depth {self.depth}")
+
+    def graph(self) -> LayerGraph:
+        return _resnet_graph(_RESNET_STAGES[self.depth], self.input_hw,
+                             self.num_classes)
+
+
+def init_params(cfg: ResNetConfig, rng: jax.Array) -> cnn.Params:
+    return cnn.init_graph_params(cfg.graph(), rng, cfg.dtype)
+
+
+def apply(
+    params: cnn.Params,
+    x: jax.Array,
+    cfg: ResNetConfig,
+    *,
+    conv_impls: Optional[Dict[str, cnn.Impl]] = None,
+    check: bool = True,
+) -> jax.Array:
+    """Forward pass.  ``x``: [N, H, W, 3].  Returns logits [N, classes].
+
+    ``conv_impls`` may override {'conv', 'dwconv', 'pointwise', 'dense'}
+    with kernel-backed implementations (see ``cnn.kernel_impls``).
+    """
+    return cnn.apply_graph(params, x, cfg.graph(), impls=conv_impls,
+                           dtype=cfg.dtype, check=check)
+
+
+quantize_params = cnn.quantize_params
+
+
+def apply_int8(q_params, scales, x, cfg: ResNetConfig) -> jax.Array:
+    return cnn.apply_int8(q_params, scales, x, cfg.graph(), dtype=cfg.dtype)

@@ -1,0 +1,98 @@
+"""The bench-regression gate + benchmarks.run CLI plumbing (jax-free)."""
+import json
+import pathlib
+
+import pytest
+
+from benchmarks.check_regression import compare, load_rows, main
+from benchmarks.run import parse_only
+
+
+def _rows(*pairs):
+    return [{"name": n, "us": 1.0, "derived": d} for n, d in pairs]
+
+
+def _write(path, rows):
+    path.write_text(json.dumps(rows))
+    return str(path)
+
+
+def test_compare_passes_on_identical_derived():
+    base = {"a": ["x"], "b": ["y", "y2"]}
+    assert compare(base, {"a": ["x"], "b": ["y", "y2"]}) == []
+
+
+def test_compare_ignores_timing_column(tmp_path):
+    base = _write(tmp_path / "b.json", _rows(("a", "x")))
+    cur = [{"name": "a", "us": 99999.0, "derived": "x"}]
+    current = _write(tmp_path / "c.json", cur)
+    assert compare(load_rows(base), load_rows(current)) == []
+
+
+def test_compare_reports_drift_missing_and_new():
+    base = {"a": ["x"], "gone": ["y"]}
+    cur = {"a": ["CHANGED"], "new": ["z"]}
+    report = "\n".join(compare(base, cur))
+    assert "DRIFT" in report and "a" in report
+    assert "MISSING" in report and "gone" in report
+    assert "NEW" in report and "new" in report
+
+
+def test_main_exit_codes_and_update(tmp_path):
+    base = _write(tmp_path / "base.json", _rows(("a", "x")))
+    same = _write(tmp_path / "same.json", _rows(("a", "x")))
+    drift = _write(tmp_path / "drift.json", _rows(("a", "CHANGED")))
+    assert main(["--baseline", base, "--current", same]) == 0
+    assert main(["--baseline", base, "--current", drift]) == 1
+    assert main(["--baseline", base, "--current", drift, "--update"]) == 0
+    assert main(["--baseline", base, "--current", drift]) == 0  # rebaselined
+
+
+def test_parse_only_normalizes_case_and_whitespace():
+    assert parse_only(" Table1 , TABLE2,table3 ") == {
+        "table1", "table2", "table3"}
+    assert parse_only("table4") == {"table4"}
+
+
+def test_parse_only_rejects_unknown_names():
+    with pytest.raises(SystemExit, match="tabel1"):
+        parse_only("tabel1,table2")
+    with pytest.raises(SystemExit, match="unknown"):
+        parse_only(" , bogus")
+
+
+def test_parse_only_rejects_empty_selection():
+    """A malformed --only must fail loudly, never run zero benchmarks."""
+    for value in (",", " , ", ",,"):
+        with pytest.raises(SystemExit, match="no module names"):
+            parse_only(value)
+
+
+def test_update_refuses_to_shrink_baseline(tmp_path):
+    """A partial run (module crashed mid-way) must not narrow the gate."""
+    base = _write(tmp_path / "base.json", _rows(("a", "x"), ("b", "y")))
+    partial = _write(tmp_path / "partial.json", _rows(("a", "x2")))
+    assert main(["--baseline", base, "--current", partial, "--update"]) == 1
+    assert json.loads((tmp_path / "base.json").read_text()) == _rows(
+        ("a", "x"), ("b", "y"))  # untouched
+
+
+def test_update_refuses_empty_run_and_strips_timing(tmp_path):
+    base = _write(tmp_path / "base.json", _rows(("a", "x")))
+    empty = _write(tmp_path / "empty.json", [])
+    assert main(["--baseline", base, "--current", empty, "--update"]) == 1
+    cur = _write(tmp_path / "cur.json", [
+        {"name": "a", "us": 123.4, "derived": "y"}])
+    assert main(["--baseline", base, "--current", cur, "--update"]) == 0
+    rebased = json.loads((tmp_path / "base.json").read_text())
+    assert rebased == [{"name": "a", "us": 0.0, "derived": "y"}]
+
+
+def test_committed_baseline_is_selfconsistent():
+    """The committed baseline parses and covers the three analytic tables."""
+    repo = pathlib.Path(__file__).resolve().parents[2]
+    rows = load_rows(str(repo / "benchmarks" / "baselines"
+                         / "analytic_tables.json"))
+    prefixes = {name.split("/")[0] for name in rows}
+    assert {"table1", "table2", "table3"} <= prefixes
+    assert sum(len(v) for v in rows.values()) >= 70

@@ -1,7 +1,6 @@
 """Property + unit tests for the (j,h) design-space exploration (Eqs. 1-11)."""
 from fractions import Fraction as F
 
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

@@ -4,7 +4,7 @@ import math
 from hypothesis import given, strategies as st
 
 from repro.core.multipixel import (
-    PhasePlan, pad_select, phase_tap_routes, plan_phases, window_assignment,
+    pad_select, phase_tap_routes, plan_phases, window_assignment,
 )
 
 ps = st.integers(min_value=1, max_value=6)

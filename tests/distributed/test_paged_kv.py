@@ -1,5 +1,4 @@
 """Paged KV cache: allocator invariants + data-plane roundtrip."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

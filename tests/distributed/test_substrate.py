@@ -1,14 +1,12 @@
 """Substrate tests: optimizer, data, checkpointing, fault tolerance,
 gradient compression, pipeline parallelism."""
-import math
-import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.optim.optimizers import (AdamWConfig, AdamWState, accumulate_grads,
+from repro.optim.optimizers import (AdamWConfig, accumulate_grads,
                                     apply_updates, init as adam_init)
 
 
@@ -90,7 +88,7 @@ def test_synthetic_deterministic_and_resumable():
     from repro.data.pipeline import SyntheticLM
     a = SyntheticLM(vocab=64, seq_len=8, batch=2, seed=7)
     b1 = next(a)
-    b2 = next(a)
+    next(a)                     # advance past batch 2
     st = a.state_dict()
     b3 = next(a)
     fresh = SyntheticLM(vocab=64, seq_len=8, batch=2, seed=7)
@@ -179,7 +177,7 @@ def test_preemption_drill(tmp_path):
                 return params       # simulate preemption
         return params
 
-    p_crash = train(10, crash_at=5)
+    train(10, crash_at=5)       # writes checkpoints, then 'crashes'
     p_resumed = train(10, resume_dir=True)
     p_straight = None
     import shutil
@@ -236,7 +234,6 @@ def test_compressed_psum_error_feedback_converges():
     """Mean of int8-compressed psum across a 4-way axis tracks the true
     mean, and error feedback drives the bias to ~0 over steps."""
     from repro.distributed.collectives import compressed_psum
-    import functools
 
     grads = jax.random.normal(jax.random.key(0), (4, 64))  # 4 workers
     true_mean = jnp.mean(grads, axis=0)

@@ -7,7 +7,6 @@ in prefill equals the token-by-token recurrence used in decode.
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.nn.attention import AttnSpec, attention, init_attention
