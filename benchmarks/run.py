@@ -4,7 +4,9 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
   table1_mnv1_resources — paper Table I (MNv1 ours vs [11])
   table2_mnv2_rates     — paper Table II (MNv2 across 7 data rates)
   table3_dag_buffers    — DAG skew FIFOs + DAG DSE (MNv2 + ResNet-18)
-  table4_resnet_e2e     — ResNet E2E inference vs its analytic DSE view
+  table4_resnet_e2e     — CNN E2E inference vs the analytic DSE for all
+                          four families, incl. uniform-vs-rate-matched
+                          Pallas tiling GMAC/s and a batch sweep
   rate_aware_serving    — the technique applied to LM serving (DESIGN §3)
   kernel_bench          — Pallas kernels vs oracles + tile stats
   roofline              — 40-cell roofline summary (needs dry-run JSONs)

@@ -1,22 +1,34 @@
-"""Table IV (beyond-paper): ResNet end-to-end inference vs the analytic DSE.
+"""Table IV (beyond-paper): CNN end-to-end inference vs the analytic DSE.
 
-The rate-graph claims for ResNet (table3) were, until this table, purely
-analytic.  Here the *same* ``LayerGraph`` that drives the DSE is executed
-as a JAX network (models/cnn.py lax fallback — runs on CPU), so every
-row cross-checks a paper-model quantity against real inference:
+The rate-graph claims (table3) were, until this table, purely analytic.
+Here the *same* ``LayerGraph`` that drives the DSE is executed as a JAX
+network, so every row cross-checks a paper-model quantity against real
+inference — now for all four CNN families (ResNet-18/34, MobileNet
+v1/v2), in both kernel-tiling modes:
 
-  * analytic    — node/join counts, total MACs (core.flops.graph_macs),
-                  parameter count for ResNet-18/34 at 224x224;
-  * dse         — DAG DSE mult counts at r = 3 ('ours' vs [11]), plus the
-                  throughput the FPGA model predicts at 400 MHz;
-  * e2e         — jitted forward-pass latency of ResNet-18 (batch 1,
-                  float32) and the implied software GMAC/s; the executor
-                  runs with check=True, so per-layer shapes/MACs are
-                  asserted against the LayerGraph on every trace;
-  * parity      — executed-vs-analytic MAC agreement, stated explicitly.
+  * analytic     — node/join counts, total MACs (core.flops.graph_macs),
+                   parameter count per family at 224x224;
+  * dse          — DAG DSE mult counts at r = 3 ('ours' vs [11]), plus
+                   the throughput the FPGA model predicts at 400 MHz;
+  * tiling_modes — the tentpole measurement: the Pallas kernel path run
+                   twice at 32x32 — once with the **uniform** tiling
+                   (one global ``select_tile``) and once **rate-matched**
+                   (per-node ``ImplPlan`` tiles from
+                   ``GraphPlan.kernel_plan``, with the executor's
+                   executed-tile-==-plan assertion active) — reporting
+                   the software GMAC/s of each and their delta;
+  * e2e          — jitted forward-pass latency of ResNet-18 (batch 1,
+                   224x224, float32, lax fallback) and the implied
+                   software GMAC/s;
+  * batch_sweep  — the lax path at several batch sizes (112x112), so the
+                   software-vs-FPGA-model GMAC/s gap is tracked as batch
+                   amortizes Python/dispatch overhead;
+  * parity       — executed-vs-analytic MAC agreement, stated explicitly.
 
 Timing rows vary run-to-run; the bench-regression gate only pins the
-analytic tables (1-3), not this one.
+analytic tables (1-3), not this one.  Interpret-mode Pallas timings are
+*schedule* comparisons, not hardware speed: both modes run the same
+arithmetic on CPU, so the delta isolates tiling/grid overhead.
 """
 from __future__ import annotations
 
@@ -28,20 +40,22 @@ import jax
 from repro.core import plan_graph
 from repro.core.flops import graph_macs, graph_weight_count
 from repro.core.rate import fps
+from repro.models import cnn
 from repro.models.registry import get_cnn_api
 
+FAMILIES = ("resnet18", "resnet34", "mobilenet_v1", "mobilenet_v2")
 
-def run() -> list:
-    rows = []
-    for depth in (18, 34):
-        api = get_cnn_api(f"resnet{depth}")
+
+def _analytic_and_dse_rows(rows: list) -> None:
+    for family in FAMILIES:
+        api = get_cnn_api(family)
         cfg = api.make_config()
         t0 = time.perf_counter()
         graph = api.graph(cfg)
         macs = graph_macs(graph)
         dt = (time.perf_counter() - t0) * 1e6
         rows.append((
-            f"table4/resnet{depth}/analytic", dt,
+            f"table4/{family}/analytic", dt,
             f"{len(graph)} nodes, {len(graph.joins())} joins, "
             f"{macs / 1e9:.3f} GMACs, "
             f"{graph_weight_count(graph) / 1e6:.2f} M params"))
@@ -51,11 +65,56 @@ def run() -> list:
         dt = (time.perf_counter() - t0) * 1e6
         model_fps = fps(cfg.input_hw, F(3, 3), 400e6)
         rows.append((
-            f"table4/resnet{depth}/dse", dt,
+            f"table4/{family}/dse", dt,
             f"mults ours {ours.total_mults} vs ref11 {ref.total_mults} "
             f"({100 * (ours.total_mults - ref.total_mults) / ref.total_mults:+.1f}%), "
             f"model {model_fps:.0f} FPS @400MHz r=3"))
 
+
+def _tiling_mode_rows(rows: list) -> None:
+    """Uniform vs rate-matched Pallas tiling, per family (the tentpole).
+
+    32x32 inputs keep interpret mode tractable; the executor still runs
+    check=True (shapes/MACs vs the LayerGraph) and, on the rate-matched
+    side, the per-node executed-tile-==-ImplPlan assertion.
+    """
+    for family in FAMILIES:
+        api = get_cnn_api(family)
+        cfg = api.make_config(input_hw=(32, 32), num_classes=10)
+        graph = api.graph(cfg)
+        macs = graph_macs(graph)
+        params = api.init(cfg, jax.random.key(0))
+        x = jax.random.normal(jax.random.key(1), (1, 32, 32, 3))
+        kp = api.plan(cfg, F(3))
+
+        # warm both modes first: the rate-matched side jit-caches one
+        # kernel variant per node vs 4 kind-level entries for uniform,
+        # and that compile-count asymmetry must not pollute the delta
+        uniform = cnn.kernel_impls()
+        jax.block_until_ready(api.apply(params, x, cfg, conv_impls=uniform))
+        jax.block_until_ready(api.apply(params, x, cfg, plan=kp))
+
+        t0 = time.perf_counter()
+        y_uni = api.apply(params, x, cfg, conv_impls=uniform)
+        jax.block_until_ready(y_uni)
+        t_uni = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        y_rm = api.apply(params, x, cfg, plan=kp)
+        jax.block_until_ready(y_rm)
+        t_rm = time.perf_counter() - t0
+
+        n_planned = sum(1 for p in kp.values() if p.has_kernel)
+        g_uni = macs / t_uni / 1e9
+        g_rm = macs / t_rm / 1e9
+        rows.append((
+            f"table4/{family}/tiling_modes", t_rm * 1e6,
+            f"uniform {g_uni:.3f} vs rate-matched {g_rm:.3f} GMAC/s sw "
+            f"({100 * (g_rm - g_uni) / g_uni:+.1f}%), {n_planned} nodes "
+            f"tiled per-plan, executed==plan asserted"))
+
+
+def _e2e_rows(rows: list) -> None:
     # E2E: ResNet-18, batch 1, float32, lax fallback (CPU-safe).  The
     # executor's check=True re-derives per-layer MACs from live arrays.
     api = get_cnn_api("resnet18")
@@ -84,6 +143,39 @@ def run() -> list:
         "table4/resnet18/parity", 0.0,
         f"executed shapes+MACs == LayerGraph on all {len(graph)} nodes "
         f"(apply_graph check=True), total {macs} MACs"))
+
+
+def _batch_sweep_rows(rows: list) -> None:
+    """Software GMAC/s as batch grows: dispatch overhead amortizes, the
+    gap to the FPGA model's continuous-flow throughput narrows."""
+    api = get_cnn_api("resnet18")
+    cfg = api.make_config(input_hw=(112, 112))
+    macs = graph_macs(api.graph(cfg))
+    params = api.init(cfg, jax.random.key(0))
+    fwd = jax.jit(lambda p, a: api.apply(p, a, cfg))
+    parts = []
+    t_total = 0.0
+    for batch in (1, 2, 4):
+        x = jax.random.normal(jax.random.key(batch), (batch, 112, 112, 3))
+        jax.block_until_ready(fwd(params, x))  # compile
+        iters = 2
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            jax.block_until_ready(fwd(params, x))
+        dt = (time.perf_counter() - t0) / iters
+        t_total += dt
+        parts.append(f"b{batch} {batch * macs / dt / 1e9:.1f}")
+    rows.append((
+        "table4/resnet18/batch_sweep", t_total * 1e6,
+        "GMAC/s sw at 112x112: " + ", ".join(parts)))
+
+
+def run() -> list:
+    rows: list = []
+    _analytic_and_dse_rows(rows)
+    _tiling_mode_rows(rows)
+    _e2e_rows(rows)
+    _batch_sweep_rows(rows)
     return rows
 
 

@@ -3,31 +3,60 @@
 Public surface:
   rate          — data-rate algebra (exact fractions), LayerSpec, propagation
   graph         — DAG rate graph: branch/join propagation, skew-buffer
-                  sizing, DAG-aware DSE (plan_graph)
+                  sizing, DAG-aware DSE (plan_graph), and the per-node
+                  ImplPlan contract consumed by the kernel executor
   dse           — (j,h) design-space exploration, Eqs. (1)-(11), both schemes
   multipixel    — §II-E phase analysis: tap routing, stride pruning
   schedule      — discrete-event continuous-flow validation (chain + DAG)
   resource_model— analytical FPGA model reproducing Tables I & II,
                   plus DAG skew-FIFO terms (estimate_graph)
-  tpu_tiles     — the TPU adaptation: (j,h) -> Pallas BlockSpec tiles
+  tpu_tiles     — the TPU adaptation: (j,h) -> Pallas BlockSpec tiles,
+                  uniform (select_tile) and rate-matched per-layer
+                  (select_tile_for_impl)
   stage_partition — rate-aware pipeline-stage partitioning (TPU analogue)
   hlo_analysis  — roofline term extraction from compiled HLO
   hw_specs      — hardware constants (TPU v5e + xcvu37p)
 """
+
 from .rate import (  # noqa: F401
-    LayerSpec, RatePoint, propagate, propagate_chain, divisors,
-    frame_cycles, fps,
+    LayerSpec,
+    RatePoint,
+    divisors,
+    fps,
+    frame_cycles,
+    propagate,
+    propagate_chain,
 )
 from .dse import (  # noqa: F401
-    LayerImpl, NON_ARITH_KINDS, hj_set, best_rate, pixel_phases,
-    surviving_phases, select_impl, select_ours, select_ref11, plan_network,
+    NON_ARITH_KINDS,
+    LayerImpl,
+    best_rate,
+    hj_set,
+    pixel_phases,
+    plan_network,
+    select_impl,
+    select_ours,
+    select_ref11,
+    surviving_phases,
 )
 from .graph import (  # noqa: F401
-    GraphError, GraphPlan, JoinBuffer, LayerGraph, NodeTiming,
-    compute_timing, join_buffers, plan_graph, propagate_graph,
+    GraphError,
+    GraphPlan,
+    ImplPlan,
+    JoinBuffer,
+    LayerGraph,
+    NodeTiming,
+    compute_timing,
+    join_buffers,
+    plan_graph,
+    propagate_graph,
 )
-from .hw_specs import TPU_V5E, XCVU37P, TPUSpec, FPGASpec  # noqa: F401
+from .tpu_tiles import TileChoice, select_tile, select_tile_for_impl  # noqa: F401
+from .hw_specs import TPU_V5E, XCVU37P, FPGASpec, TPUSpec  # noqa: F401
 from .resource_model import (  # noqa: F401
-    ResourceEstimate, estimate_graph, estimate_join_buffer, estimate_layer,
+    ResourceEstimate,
+    estimate_graph,
+    estimate_join_buffer,
+    estimate_layer,
     estimate_network,
 )

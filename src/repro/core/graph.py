@@ -35,6 +35,22 @@ Timing model (exact fractions, validated by ``schedule.simulate_graph``):
 
   (P = the join's pixel phases; P extra slots cover multi-pixel intake).
   ``simulate_graph`` asserts the measured occupancy never exceeds this.
+
+Plan-threading contract (who produces what, who consumes it):
+
+  ``plan_graph`` is the single producer of per-node kernel plans: its
+  ``GraphPlan.kernel_plan()`` lowers every node's chosen ``LayerImpl``
+  — the (j, h), phases, and decimation-adjusted demand the DAG DSE
+  settled on — into an ``ImplPlan`` carrying a concrete Pallas tile
+  (``core.tpu_tiles.select_tile_for_impl``).  The sole consumer is the
+  graph executor ``models/cnn.py``: ``apply_graph(plan=...)`` dispatches
+  each arithmetic node's kernel with its own tile instead of one global
+  rate, and asserts at trace time that the tile the kernel *executed*
+  equals the tile planned here.  Invariants: plan keys == graph node
+  names; every non-wiring node (kind outside ``core.dse.
+  NON_ARITH_KINDS``) carries a tile whose dimensions divide the node's
+  (d_in, d_out); for feasible impls the tile preserves Eq. 9
+  (capacity >= demand) under the MXU-alignment growth.
 """
 from __future__ import annotations
 
@@ -44,8 +60,10 @@ from collections import OrderedDict
 from fractions import Fraction
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from .dse import LayerImpl, select_impl
+from .dse import NON_ARITH_KINDS, LayerImpl, select_impl
+from .hw_specs import TPU_V5E, TPUSpec
 from .rate import LayerSpec, RatePoint
+from .tpu_tiles import TileChoice, select_tile_for_impl
 
 JOIN_KINDS = ("add", "concat")
 
@@ -347,6 +365,33 @@ def join_buffers(
 # DAG-aware DSE
 # ==========================================================================
 
+@dataclasses.dataclass(frozen=True)
+class ImplPlan:
+    """Per-node contract handed from the DSE to the kernel executor.
+
+    Produced only by ``GraphPlan.kernel_plan()``; consumed only by the
+    graph executor (``models/cnn.py``), which dispatches each node's
+    Pallas call with ``tile`` and asserts the executed tiling matches it.
+    ``demand`` is the decimation-adjusted rate this node must absorb
+    (features/clock after every upstream stride/pool has thinned the
+    stream) — the r its (j, h) was chosen against, not the network input
+    rate.
+    """
+
+    name: str
+    kind: str
+    j: int                     # input features/clock per phase (Eq. 9)
+    h: int                     # outputs time-multiplexed per unit
+    p: int                     # pixel phases after stride pruning
+    demand: Fraction           # decimation-adjusted features/clock
+    q_in: Fraction             # pixels/clock entering the node
+    tile: Optional[TileChoice]  # None for non-arithmetic (wiring) kinds
+
+    @property
+    def has_kernel(self) -> bool:
+        return self.tile is not None
+
+
 @dataclasses.dataclass
 class GraphPlan:
     """A complete hardware plan for a LayerGraph at one input rate."""
@@ -384,6 +429,44 @@ class GraphPlan:
             if b.join == join and b.src == src:
                 return b
         raise KeyError((join, src))
+
+    def kernel_plan(
+        self,
+        *,
+        dtype_bytes: int = 4,
+        tpu: TPUSpec = TPU_V5E,
+        vmem_fraction: float = 0.5,
+    ) -> "OrderedDict[str, ImplPlan]":
+        """Lower this hardware plan to the executor's per-node contract.
+
+        Every node gets an ``ImplPlan``; arithmetic nodes additionally
+        carry the concrete Pallas tile derived from their (j, h) by
+        ``core.tpu_tiles.select_tile_for_impl`` (j -> bk floor,
+        d_out/h -> bn floor, grown to MXU alignment — capacity only ever
+        increases, so Eq. 9 survives).  Keys preserve topological order.
+        """
+        plans: "OrderedDict[str, ImplPlan]" = OrderedDict()
+        for name, impl in self.impls.items():
+            spec = self.graph.spec(name)
+            tile = None
+            if spec.kind not in NON_ARITH_KINDS:
+                tile = select_tile_for_impl(
+                    impl,
+                    dtype_bytes=dtype_bytes,
+                    spec=tpu,
+                    vmem_fraction=vmem_fraction,
+                )
+            plans[name] = ImplPlan(
+                name=name,
+                kind=spec.kind,
+                j=impl.j,
+                h=impl.h,
+                p=impl.p,
+                demand=impl.demand,
+                q_in=self.timing[name].q_in,
+                tile=tile,
+            )
+        return plans
 
 
 def plan_graph(

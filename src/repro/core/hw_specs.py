@@ -7,6 +7,7 @@ Two targets coexist:
     xcvu37p-fsvh2892-3-e), used only by the analytical resource model that
     reproduces the paper's Tables I/II.
 """
+
 from __future__ import annotations
 
 import dataclasses

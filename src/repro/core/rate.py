@@ -13,6 +13,7 @@ Pooling and strided convolutions reduce ``q`` — exactly the effect the
 paper's data-rate-aware design exploits: downstream layers need fewer
 arithmetic units per output.
 """
+
 from __future__ import annotations
 
 import dataclasses
@@ -55,8 +56,9 @@ class LayerSpec:
     @property
     def spatial_ratio(self) -> Fraction:
         """out_pixels / in_pixels — the pixel-rate decimation factor."""
-        return Fraction(self.out_hw[0] * self.out_hw[1],
-                        self.in_hw[0] * self.in_hw[1])
+        return Fraction(
+            self.out_hw[0] * self.out_hw[1], self.in_hw[0] * self.in_hw[1]
+        )
 
     @property
     def macs_per_pixel(self) -> int:

@@ -17,9 +17,21 @@ Extra constraints that exist on TPU but not on the FPGA:
   * VMEM capacity: the working set  bm*bk + bk*bn + bm*bn  elements
     (x dtype bytes x double-buffering) must fit the per-core VMEM budget.
 
-`select_tile` runs the same BestRate search over the constrained HJ set.
-This is what `kernels/*/ops.py` call to pick their BlockSpecs.
+Two selection paths share those constraints:
+
+  * ``select_tile``          — the *uniform* path: one rate (or none) for
+    the whole network, the original BestRate search over the constrained
+    HJ set.  This is what ``kernels/*/ops.py`` fall back to when no plan
+    is threaded through.
+  * ``select_tile_for_impl`` — the *rate-matched* path: maps one node's
+    DSE choice (a ``core.dse.LayerImpl`` from ``plan_graph``) onto a
+    concrete tiling.  ``j`` becomes the bk floor and ``d_out/h`` the bn
+    floor; both grow only upward (to the nearest lane-aligned divisor),
+    so the continuous-flow inequality ``j/h >= r`` survives the
+    adjustment.  ``GraphPlan.kernel_plan`` calls this per node to build
+    the ``ImplPlan`` table the executor (models/cnn.py) dispatches on.
 """
+
 from __future__ import annotations
 
 import dataclasses
@@ -27,7 +39,8 @@ import math
 from fractions import Fraction
 from typing import Optional, Tuple
 
-from .hw_specs import TPUSpec, TPU_V5E
+from .dse import LayerImpl
+from .hw_specs import TPU_V5E, TPUSpec
 from .rate import divisors
 
 
@@ -35,11 +48,11 @@ from .rate import divisors
 class TileChoice:
     """A concrete matmul-style tiling for one layer."""
 
-    bm: int          # output-position (pixel) tile — the multi-pixel P
-    bk: int          # contraction tile  (the paper's j)
-    bn: int          # output-channel tile (d_out / h)
+    bm: int  # output-position (pixel) tile — the multi-pixel P
+    bk: int  # contraction tile  (the paper's j)
+    bn: int  # output-channel tile (d_out / h)
     grid_m: int
-    grid_k: int      # the paper's C: weight "reconfigurations"
+    grid_k: int  # the paper's C: weight "reconfigurations"
     grid_n: int
     vmem_bytes: int
     mxu_aligned: bool
@@ -76,8 +89,8 @@ def select_tile(
     highest-intensity aligned tile is chosen.
     """
     budget = int(spec.vmem_bytes * vmem_fraction)
-    lane = spec.lanes      # 128
-    sub = spec.sublanes    # 8
+    lane = spec.lanes  # 128
+    sub = spec.sublanes  # 8
 
     best: Optional[Tuple] = None
     for bk in divisors(d_in):
@@ -102,8 +115,9 @@ def select_tile(
                 continue
             # strict alignment: a dim is aligned if the tile is a lane
             # multiple OR the whole dim is too small to ever align.
-            aligned = ((bk % lane == 0 or d_in < lane)
-                       and (bn % lane == 0 or d_out < lane))
+            aligned = (bk % lane == 0 or d_in < lane) and (
+                bn % lane == 0 or d_out < lane
+            )
             # TPU tie-break (the compressor-tree argument, MXU edition):
             # deep K accumulation per pass (big bk), output tile wide
             # enough to fill lanes but small enough to keep h large
@@ -118,10 +132,116 @@ def select_tile(
     else:
         _, bm, bk, bn = best
     return TileChoice(
-        bm=bm, bk=bk, bn=bn,
+        bm=bm,
+        bk=bk,
+        bn=bn,
         grid_m=math.ceil(m / bm),
         grid_k=max(1, d_in // bk),
         grid_n=max(1, d_out // bn),
+        vmem_bytes=(bm * bk + bk * bn + bm * bn) * dtype_bytes * 2,
+        mxu_aligned=_align_ok(bk, lane) and _align_ok(bn, lane),
+    )
+
+
+# ==========================================================================
+# Rate-matched per-layer path: one node's DSE choice -> one tiling
+# ==========================================================================
+
+
+def plan_dim_tile(dim: int, floor: int, lane: int) -> int:
+    """Smallest divisor of ``dim`` that is >= ``floor``, lane-aligned
+    whenever ``dim`` itself is lane-divisible.
+
+    This is the deterministic (j, h) -> (bk, bn) adjustment rule: growing
+    a tile dimension only ever *adds* capacity, so the continuous-flow
+    inequality the DSE established (Eq. 9) survives the MXU alignment.
+    """
+    for d in divisors(dim):
+        if d >= floor and (dim % lane or d % lane == 0):
+            return d
+    return dim
+
+
+def select_tile_for_impl(
+    impl: LayerImpl,
+    *,
+    dtype_bytes: int = 4,
+    spec: TPUSpec = TPU_V5E,
+    vmem_fraction: float = 0.5,
+) -> TileChoice:
+    """Map one node's DSE implementation onto its Pallas tiling.
+
+    This is the per-layer half of the paper's claim: the tile each kernel
+    runs with is derived from *that node's* ``(j, h)`` and decimation-
+    adjusted demand, not from one global rate.  The mapping:
+
+      * conv / pointwise / dense — ``bk`` = smallest aligned divisor of
+        ``d_in`` >= j; ``bn`` = smallest aligned divisor of ``d_out`` >=
+        ``d_out / h``; ``bm`` shrinks from 512 to fit VMEM.
+      * dwconv — the channel tile ``bk`` = smallest aligned divisor of
+        ``d_in`` >= j (h = 1 per §II-B: the channel multiplier replaces
+        d_out); ``bn`` is reported as 1.
+
+    When the impl's own (j, h) satisfy Eq. 9 — always true for scheme
+    'ours' — the resulting tile provably still satisfies
+    ``bk / (d_out // bn) >= r_phase`` (both adjustments only grow
+    capacity); this is re-checked here and the executor re-asserts the
+    executed tile against the plan at apply time.  [11] impls carry
+    bookkeeping (j, h) decoupled from their capacity formula (and can be
+    outright infeasible); those are mapped best-effort with no
+    feasibility claim.
+
+    VMEM: the conv/pointwise/dense path shrinks bm to fit the budget
+    (best-effort — it floors at ``spec.sublanes``); the dwconv path
+    reports its working set but cannot enforce the budget (the kernel
+    streams the whole padded frame per grid step; spatial blocking is a
+    ROADMAP follow-on).
+    """
+    lay = impl.layer
+    if lay.kind not in ("conv", "dwconv", "pointwise", "dense"):
+        raise ValueError(
+            f"{lay.name}: kind {lay.kind!r} has no kernel tiling "
+            f"(non-arithmetic nodes carry no tile in an ImplPlan)"
+        )
+    lane = spec.lanes
+    m = lay.out_hw[0] * lay.out_hw[1]
+    r_phase = impl.demand / impl.p_raw
+
+    if lay.kind == "dwconv":
+        bc = plan_dim_tile(lay.d_in, min(impl.j, lay.d_in), lane)
+        return TileChoice(
+            bm=m,
+            bk=bc,
+            bn=1,
+            grid_m=1,
+            grid_k=max(1, lay.d_in // bc),
+            grid_n=1,
+            vmem_bytes=2 * m * bc * dtype_bytes,
+            mxu_aligned=_align_ok(bc, lane),
+        )
+
+    bk = plan_dim_tile(lay.d_in, min(impl.j, lay.d_in), lane)
+    bn = plan_dim_tile(lay.d_out, max(1, lay.d_out // impl.h), lane)
+    budget = int(spec.vmem_bytes * vmem_fraction)
+    bm = min(m, 512)
+    while bm > spec.sublanes:
+        if (bm * bk + bk * bn + bm * bn) * dtype_bytes * 2 <= budget:
+            break
+        bm //= 2
+    h_tile = max(1, lay.d_out // bn)
+    jh_holds_eq9 = Fraction(impl.j, max(1, impl.h)) >= r_phase
+    if jh_holds_eq9 and Fraction(bk, h_tile) < r_phase:
+        raise AssertionError(  # unreachable: growth preserves Eq. 9
+            f"{lay.name}: tile (bk={bk}, h={h_tile}) lost continuous flow "
+            f"for per-phase rate {r_phase}"
+        )
+    return TileChoice(
+        bm=bm,
+        bk=bk,
+        bn=bn,
+        grid_m=math.ceil(m / bm),
+        grid_k=max(1, lay.d_in // bk),
+        grid_n=max(1, lay.d_out // bn),
         vmem_bytes=(bm * bk + bk * bn + bm * bn) * dtype_bytes * 2,
         mxu_aligned=_align_ok(bk, lane) and _align_ok(bn, lane),
     )

@@ -2,9 +2,11 @@
 from __future__ import annotations
 
 import functools
+from typing import Callable, Optional
 
 import jax
 
+from repro.core.tpu_tiles import TileChoice
 from .flash_attention import flash_attention_p
 
 
@@ -28,3 +30,30 @@ def flash_attention(
         causal=causal, block_q=block_q, block_k=block_k, interpret=interpret,
     )
     return out.reshape(b, h, sq, d)
+
+
+def attention_impl(
+    *,
+    causal: bool = True,
+    interpret: bool = True,
+    tile: Optional[TileChoice] = None,
+    record: Optional[Callable[..., None]] = None,
+):
+    """Adapter with the same tile/record protocol as the CNN ops.
+
+    Attention is not part of the CNN LayerGraph, but rate-aware serving
+    (benchmarks/rate_aware_serving.py) mixes both worlds; giving every
+    kernel adapter one protocol keeps the executed-tile audit uniform.
+    ``tile`` maps bm -> block_q and bk -> block_k (the q/k stream tiles);
+    ``record(block_q=..., block_k=...)`` reports the executed blocking.
+    """
+    block_q = tile.bm if tile is not None else 128
+    block_k = tile.bk if tile is not None else 128
+
+    def impl(q, k, v):
+        y = flash_attention(q, k, v, causal=causal, block_q=block_q,
+                            block_k=block_k, interpret=interpret)
+        if record is not None:
+            record(block_q=block_q, block_k=block_k, seq=q.shape[2])
+        return y
+    return impl

@@ -1,14 +1,24 @@
-"""jit'd wrapper for the depthwise kernel: SAME padding + j-tile choice."""
+"""jit'd wrapper for the depthwise kernel: SAME padding + j-tile choice.
+
+The channel tile (the paper's j, with h = 1 — §II-B: the channel
+multiplier replaces d_out for depthwise) is chosen either uniformly
+(``_pick_bc`` from one global ``rate``) or per node from a plan-derived
+``TileChoice`` (``dw_conv_impl(tile=...)``; ``tile.bk`` is the channel
+tile picked by ``core.tpu_tiles.select_tile_for_impl``).  The optional
+``record`` callback reports the executed tile back to the caller
+(models/cnn.py asserts it against the plan per node).
+"""
 from __future__ import annotations
 
 import functools
 from fractions import Fraction
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.rate import divisors
+from repro.core.tpu_tiles import TileChoice
 from .dw_conv import dw_conv_p
 
 
@@ -46,11 +56,20 @@ def dw_conv(
                      interpret=interpret)
 
 
-def dw_conv_impl(*, rate: Optional[Fraction] = None, interpret: bool = True):
+def dw_conv_impl(
+    *,
+    rate: Optional[Fraction] = None,
+    interpret: bool = True,
+    tile: Optional[TileChoice] = None,
+    record: Optional[Callable[..., None]] = None,
+):
     """Adapter to the CNN executor's 'dwconv' signature (models/cnn.py).
 
     The executor stores depthwise weights HWIO with I=1 (grouped-conv
     layout, ``[kh, kw, 1, C]``); the kernel wants ``[kh, kw, C]``.
+    ``tile`` pins the channel tile to a plan's choice; ``record`` is
+    called with ``bk`` = the executed channel tile (bn is always 1 —
+    depthwise has no cross-channel output tiling).
     """
     def impl(x, w, stride):
         if w.shape[-1] != x.shape[-1]:
@@ -58,6 +77,10 @@ def dw_conv_impl(*, rate: Optional[Fraction] = None, interpret: bool = True):
                 f"dw_conv kernel supports channel_multiplier == 1 only "
                 f"(got weights for {w.shape[-1]} outputs on "
                 f"{x.shape[-1]} channels); use the lax dwconv impl")
-        return dw_conv(x, w[:, :, 0, :], stride=stride, rate=rate,
-                       interpret=interpret)
+        bc = tile.bk if tile is not None else None
+        y = dw_conv(x, w[:, :, 0, :], stride=stride, rate=rate,
+                    interpret=interpret, bc=bc)
+        if record is not None:
+            record(bk=bc, bn=1, d_in=x.shape[-1], d_out=x.shape[-1])
+        return y
     return impl

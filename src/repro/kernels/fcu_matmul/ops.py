@@ -2,18 +2,27 @@
 
 ``fcu_matmul`` is the drop-in for pointwise convolutions and dense layers
 (flattens leading dims to the pixel/m axis).  The BlockSpec tiling comes
-from the paper's HJ exploration (core.tpu_tiles.select_tile), optionally
-constrained by a stream ``rate`` for rate-matched serving pipelines.
+from the paper's HJ exploration, two ways:
+
+  * uniform — ``core.tpu_tiles.select_tile`` with one (optional) global
+    stream ``rate`` shared by every layer;
+  * rate-matched — ``pointwise_impl(tile=...)`` / ``dense_impl(tile=...)``
+    receive one node's plan-derived ``TileChoice``
+    (``GraphPlan.kernel_plan``) and execute exactly that (bk, bn); the
+    pixel tile bm re-fits the runtime m (batch and spatial dims are
+    flattened together, so m varies with batch while bk/bn do not).  The
+    optional ``record`` callback reports the executed tile back to the
+    caller (models/cnn.py asserts it against the plan per node).
 """
 from __future__ import annotations
 
 import functools
 from fractions import Fraction
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 
-from repro.core.tpu_tiles import select_tile
+from repro.core.tpu_tiles import TileChoice, select_tile
 from .fcu_matmul import fcu_matmul_p
 
 
@@ -55,16 +64,46 @@ def fcu_matmul(
     return out.reshape(*lead, d_out)
 
 
-def pointwise_impl(*, rate: Optional[Fraction] = None, interpret: bool = True):
+def _fcu_impl(
+    rate: Optional[Fraction],
+    interpret: bool,
+    tile: Optional[TileChoice],
+    record: Optional[Callable[..., None]],
+):
+    def impl(x, w):
+        if tile is None:
+            return fcu_matmul(x, w, rate=rate, interpret=interpret)
+        m = 1
+        for s in x.shape[:-1]:
+            m *= s
+        bm = _pick_bm(m, tile.bm)
+        y = fcu_matmul(x, w, interpret=interpret,
+                       bm=bm, bk=tile.bk, bn=tile.bn)
+        if record is not None:
+            record(bk=tile.bk, bn=tile.bn, bm=bm,
+                   d_in=x.shape[-1], d_out=w.shape[-1], m=m)
+        return y
+    return impl
+
+
+def pointwise_impl(
+    *,
+    rate: Optional[Fraction] = None,
+    interpret: bool = True,
+    tile: Optional[TileChoice] = None,
+    record: Optional[Callable[..., None]] = None,
+):
     """Adapter to the CNN executor's 'pointwise' signature (models/cnn.py):
     a 1x1 conv is exactly the FCU matmul over the pixel axis."""
-    def impl(x, w):
-        return fcu_matmul(x, w, rate=rate, interpret=interpret)
-    return impl
+    return _fcu_impl(rate, interpret, tile, record)
 
 
-def dense_impl(*, rate: Optional[Fraction] = None, interpret: bool = True):
+def dense_impl(
+    *,
+    rate: Optional[Fraction] = None,
+    interpret: bool = True,
+    tile: Optional[TileChoice] = None,
+    record: Optional[Callable[..., None]] = None,
+):
     """Adapter to the CNN executor's 'dense' signature (models/cnn.py)."""
-    def impl(x, w):
-        return fcu_matmul(x, w, rate=rate, interpret=interpret)
-    return impl
+    return _fcu_impl(rate, interpret, tile, record)

@@ -1,14 +1,25 @@
-"""jit'd wrapper: SAME padding + DSE-derived channel tiling."""
+"""jit'd wrapper: SAME padding + DSE-derived channel tiling.
+
+Two ways to pick the (bci, bco) channel tiles:
+
+  * uniform — no ``tile``: ``select_tile`` runs the BestRate search with
+    one (optional) global ``rate`` for every layer;
+  * rate-matched — ``conv_impl(tile=...)`` receives one node's
+    plan-derived ``TileChoice`` (``GraphPlan.kernel_plan``) and executes
+    exactly that tiling; the optional ``record`` callback reports the
+    executed tile back to the caller (models/cnn.py asserts it against
+    the plan per node).
+"""
 from __future__ import annotations
 
 import functools
 from fractions import Fraction
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.tpu_tiles import select_tile
+from repro.core.tpu_tiles import TileChoice, select_tile
 from .kpu_conv import kpu_conv_p
 
 
@@ -44,9 +55,27 @@ def kpu_conv(
                       bci=bci, bco=bco, interpret=interpret)
 
 
-def conv_impl(*, rate: Optional[Fraction] = None, interpret: bool = True):
+def conv_impl(
+    *,
+    rate: Optional[Fraction] = None,
+    interpret: bool = True,
+    tile: Optional[TileChoice] = None,
+    record: Optional[Callable[..., None]] = None,
+):
     """Adapter to the CNN executor's 'conv' signature (models/cnn.py):
-    ``impl(x, w_hwio, stride) -> y`` with the KPU kernel underneath."""
+    ``impl(x, w_hwio, stride) -> y`` with the KPU kernel underneath.
+
+    ``tile`` pins the channel tiling to a plan's choice (rate-matched
+    path); without it ``rate`` parameterizes the uniform search.
+    ``record(bk=..., bn=..., d_in=..., d_out=...)`` is called with the
+    executed tile at trace time.
+    """
     def impl(x, w, stride):
-        return kpu_conv(x, w, stride=stride, rate=rate, interpret=interpret)
+        bci = tile.bk if tile is not None else None
+        bco = tile.bn if tile is not None else None
+        y = kpu_conv(x, w, stride=stride, rate=rate, interpret=interpret,
+                     bci=bci, bco=bco)
+        if record is not None:
+            record(bk=bci, bn=bco, d_in=x.shape[-1], d_out=w.shape[-1])
+        return y
     return impl

@@ -16,17 +16,32 @@ Because topology and inference share one description they cannot drift:
 count from the live arrays and asserts they equal the spec's analytic
 values (``LayerSpec.total_macs`` — the numbers ``core.flops.graph_macs``
 feeds to the DSE and the benchmark tables).
+
+Plan-threading contract (the rate-matched execution path):
+
+  ``core.graph.plan_graph(...).kernel_plan()`` is the producer: a
+  per-node ``ImplPlan`` table mapping each arithmetic node to the Pallas
+  tile derived from *its own* DSE choice (j, h, decimation-adjusted
+  demand).  This module is the consumer: ``apply_graph(plan=...)`` (or
+  ``kernel_impls(plan=...)`` directly) builds one kernel impl per node,
+  keyed by node *name*, each pinned to its planned tile — no single
+  global ``rate`` is involved on this path.  Invariants asserted at
+  apply time (trace time — free under jit): every graph node has a plan
+  entry; every planned kernel reports the tile it executed via the ops
+  adapters' ``record`` callback; the executed (bk, bn) equals the
+  plan's; tile dims divide the live array dims.  Violations raise
+  ``GraphExecutionError``, same as the shape/MAC cross-checks.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Mapping, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dse import NON_ARITH_KINDS
-from repro.core.graph import JOIN_KINDS, LayerGraph
+from repro.core.graph import JOIN_KINDS, ImplPlan, LayerGraph
 from repro.core.rate import LayerSpec
 
 Impl = Callable[..., jax.Array]
@@ -99,23 +114,68 @@ def default_impls() -> Dict[str, Impl]:
     }
 
 
-def kernel_impls(*, interpret: bool = True) -> Dict[str, Impl]:
+def kernel_impls(
+    *,
+    interpret: bool = True,
+    rate=None,
+    plan: Optional[Mapping[str, ImplPlan]] = None,
+    executed: Optional[Dict[str, Dict[str, int]]] = None,
+) -> Dict[str, Impl]:
     """Pallas-kernel-backed implementations (KPU / DW / FCU).
 
     Imported lazily so graph-only callers never pay for (or break on)
     the Pallas stack; ``interpret=True`` runs the kernels in interpreter
     mode on CPU.
+
+    Without ``plan`` this is the **uniform** path: four kind-level impls
+    whose tiles come from ``select_tile`` under one global ``rate``
+    (or the max-intensity tile when ``rate`` is None).
+
+    With ``plan`` (a ``GraphPlan.kernel_plan()`` table) this is the
+    **rate-matched** path: the returned dict additionally carries one
+    impl per arithmetic *node name*, each pinned to that node's planned
+    tile.  ``apply_graph`` dispatches name-first, so every node runs its
+    own (j, h)-derived tiling.  When ``executed`` is given, each node
+    impl records the tile it actually ran into ``executed[name]`` at
+    trace time (``apply_graph(plan=...)`` uses this for its per-node
+    plan-vs-executed assertion).
     """
     from repro.kernels.dw_conv.ops import dw_conv_impl
     from repro.kernels.fcu_matmul.ops import dense_impl, pointwise_impl
     from repro.kernels.kpu_conv.ops import conv_impl
 
-    return {
-        "conv": conv_impl(interpret=interpret),
-        "dwconv": dw_conv_impl(interpret=interpret),
-        "pointwise": pointwise_impl(interpret=interpret),
-        "dense": dense_impl(interpret=interpret),
+    factories = {
+        "conv": conv_impl,
+        "dwconv": dw_conv_impl,
+        "pointwise": pointwise_impl,
+        "dense": dense_impl,
     }
+    table: Dict[str, Impl] = {
+        kind: make(rate=rate, interpret=interpret)
+        for kind, make in factories.items()
+    }
+    if plan is None:
+        return table
+    for name, node_plan in plan.items():
+        if not node_plan.has_kernel:
+            continue  # pool / add / gap / concat: wiring, no kernel
+        if name in factories:
+            raise GraphExecutionError(
+                f"node name {name!r} collides with an impl kind key"
+            )
+        record = None
+        if executed is not None:
+            record = _tile_recorder(executed, name)
+        table[name] = factories[node_plan.kind](
+            interpret=interpret, tile=node_plan.tile, record=record
+        )
+    return table
+
+
+def _tile_recorder(executed: Dict[str, Dict[str, int]], name: str):
+    def record(**tile):
+        executed[name] = tile
+    return record
 
 
 # ==========================================================================
@@ -179,14 +239,19 @@ def _node_forward(
             f"{spec.name}: kind {spec.kind!r} got {len(operands)} operands"
         )
     x = operands[0]
+    # per-node impls (rate-matched plans) take precedence over kind-level
+    # defaults; kernel_impls(plan=...) registers them under the node name.
+    def fn(kind):
+        return impls.get(spec.name) or impls[kind]
+
     if spec.kind == "conv":
-        y = impls["conv"](x, p["w"], spec.stride[0]) + p["b"]
+        y = fn("conv")(x, p["w"], spec.stride[0]) + p["b"]
     elif spec.kind == "dwconv":
-        y = impls["dwconv"](x, p["w"], spec.stride[0]) + p["b"]
+        y = fn("dwconv")(x, p["w"], spec.stride[0]) + p["b"]
     elif spec.kind == "pointwise":
-        y = impls["pointwise"](x, p["w"]) + p["b"]
+        y = fn("pointwise")(x, p["w"]) + p["b"]
     elif spec.kind == "dense":
-        y = impls["dense"](x, p["w"]) + p["b"]
+        y = fn("dense")(x, p["w"]) + p["b"]
     elif spec.kind == "pool":
         y = jax.lax.reduce_window(
             x,
@@ -254,12 +319,57 @@ def _check_node(
         )
 
 
+def _check_planned_tile(
+    spec: LayerSpec,
+    node_plan: Optional[ImplPlan],
+    got: Optional[Dict[str, int]],
+) -> None:
+    """Assert one node's *executed* tile equals its ``ImplPlan`` tile.
+
+    ``got`` is what the ops adapter's ``record`` callback reported at
+    trace time.  The pixel tile bm is allowed to re-fit the runtime m
+    (batch is flattened into it); the channel tiles (bk, bn) — the
+    paper's j and d_out/h images — must match the plan exactly and
+    divide the live array dims.
+    """
+    if node_plan is None:
+        raise GraphExecutionError(
+            f"{spec.name}: node missing from the kernel plan"
+        )
+    if not node_plan.has_kernel:
+        return
+    if got is None:
+        raise GraphExecutionError(
+            f"{spec.name}: planned kernel did not report an executed tile"
+        )
+    t = node_plan.tile
+    if (got.get("bk"), got.get("bn")) != (t.bk, t.bn):
+        raise GraphExecutionError(
+            f"{spec.name}: executed tile (bk={got.get('bk')}, "
+            f"bn={got.get('bn')}) != ImplPlan tile (bk={t.bk}, bn={t.bn})"
+        )
+    d_in, d_out = got.get("d_in"), got.get("d_out")
+    if (d_in, d_out) != (spec.d_in, spec.d_out):
+        raise GraphExecutionError(
+            f"{spec.name}: kernel saw dims ({d_in}, {d_out}) != LayerSpec "
+            f"({spec.d_in}, {spec.d_out})"
+        )
+    if d_in % t.bk or (spec.kind != "dwconv" and d_out % t.bn):
+        raise GraphExecutionError(
+            f"{spec.name}: planned tile (bk={t.bk}, bn={t.bn}) does not "
+            f"divide live dims ({d_in}, {d_out})"
+        )
+
+
 def apply_graph(
     params: Params,
     x: jax.Array,
     graph: LayerGraph,
     *,
     impls: Optional[Dict[str, Impl]] = None,
+    plan: Optional[Mapping[str, ImplPlan]] = None,
+    interpret: bool = True,
+    executed: Optional[Dict[str, Dict[str, int]]] = None,
     dtype=jnp.float32,
     check: bool = True,
 ) -> jax.Array:
@@ -269,6 +379,22 @@ def apply_graph(
     with kernel-backed implementations (see ``kernel_impls``).  With
     ``check=True`` (trace-time only — free under jit) every node's output
     shape and MAC count are asserted against its ``LayerSpec``.
+
+    ``plan`` switches to rate-matched execution: a per-node ``ImplPlan``
+    table (``core.graph.GraphPlan.kernel_plan()``) from which one Pallas
+    impl per arithmetic node is built (``kernel_impls(plan=...)``,
+    honouring ``interpret``), each dispatching its node's own
+    (j, h)-derived tile.  After each planned node executes, the tile the
+    kernel reported is asserted equal to the plan's (see
+    ``_check_planned_tile``) — the executable network provably follows
+    the DSE.  With ``plan``, the per-node impls win on every arithmetic
+    node (``kernel_plan`` tiles all of them), so kind-level ``impls``
+    overrides are shadowed there — pass one or the other, not both;
+    node-name-keyed ``impls`` entries must record into ``executed``
+    themselves (pass the same dict to ``kernel_impls``) or the plan
+    assertion fails.  ``executed``, when given, receives each node's
+    executed tile (an out-param for introspection; a fresh private dict
+    is used otherwise).
     """
     inputs = graph.input_nodes
     outputs = graph.output_nodes
@@ -278,6 +404,12 @@ def apply_graph(
             f"inputs={inputs}, outputs={outputs}"
         )
     table = default_impls()
+    if executed is None:
+        executed = {}
+    if plan is not None:
+        table.update(
+            kernel_impls(interpret=interpret, plan=plan, executed=executed)
+        )
     if impls:
         table.update(impls)
 
@@ -293,6 +425,8 @@ def apply_graph(
         y = _node_forward(spec, operands, p, table)
         if check:
             _check_node(spec, p, y)
+        if plan is not None:
+            _check_planned_tile(spec, plan.get(name), executed.get(name))
         values[name] = y
     return values[outputs[0]]
 
@@ -327,11 +461,15 @@ def apply_int8(
     graph: LayerGraph,
     *,
     impls: Optional[Dict[str, Impl]] = None,
+    plan: Optional[Mapping[str, ImplPlan]] = None,
+    interpret: bool = True,
     dtype=jnp.float32,
     check: bool = True,
 ) -> jax.Array:
     """Inference with int8 weights dequantized on the fly (sim of the
     FPGA's int8 datapath; activations stay float — activation quant is
-    exercised in the kernels' int8 mode)."""
+    exercised in the kernels' int8 mode).  ``plan`` threads the same
+    rate-matched per-node tiling as ``apply_graph``."""
     deq = dequantize_params(q_params, scales, dtype)
-    return apply_graph(deq, x, graph, impls=impls, dtype=dtype, check=check)
+    return apply_graph(deq, x, graph, impls=impls, plan=plan,
+                       interpret=interpret, dtype=dtype, check=check)

@@ -218,15 +218,20 @@ def apply(
     cfg: MobileNetConfig,
     *,
     conv_impls: Optional[Dict[str, cnn.Impl]] = None,
+    plan=None,
+    interpret: bool = True,
     check: bool = True,
 ) -> jax.Array:
     """Forward pass.  ``x``: [N, H, W, 3].  Returns logits [N, classes].
 
     ``conv_impls`` may override {'conv', 'dwconv', 'pointwise', 'dense'}
     with kernel-backed implementations (see repro.kernels.*.ops and
-    ``cnn.kernel_impls``).
+    ``cnn.kernel_impls``); ``plan`` (a ``GraphPlan.kernel_plan()``
+    table) runs the rate-matched path instead — each node's Pallas call
+    tiled per its own DSE choice.
     """
     return cnn.apply_graph(params, x, cfg.graph(), impls=conv_impls,
+                           plan=plan, interpret=interpret,
                            dtype=cfg.dtype, check=check)
 
 
@@ -234,8 +239,10 @@ def apply(
 quantize_params = cnn.quantize_params
 
 
-def apply_int8(q_params, scales, x, cfg: MobileNetConfig) -> jax.Array:
+def apply_int8(q_params, scales, x, cfg: MobileNetConfig, *,
+               plan=None, interpret: bool = True) -> jax.Array:
     """Inference with int8 weights dequantized on the fly (sim of the
     FPGA's int8 datapath; activations stay float — activation quant is
     exercised in the kernels' int8 mode)."""
-    return cnn.apply_int8(q_params, scales, x, cfg.graph(), dtype=cfg.dtype)
+    return cnn.apply_int8(q_params, scales, x, cfg.graph(), plan=plan,
+                          interpret=interpret, dtype=cfg.dtype)

@@ -17,6 +17,8 @@ CNN side — the paper's workloads, same lookup shape:
   logits = api.apply(params, x, cfg)     # conv_impls= swaps in Pallas
   q, s = api.quantize(params); api.apply_int8(q, s, x, cfg)
   api.graph(cfg) -> the LayerGraph the DSE plans (same description).
+  kp = api.plan(cfg, input_rate)         # per-node ImplPlan table
+  logits = api.apply(params, x, cfg, plan=kp)   # rate-matched tiling
 """
 from __future__ import annotations
 
@@ -139,15 +141,31 @@ class CNNApi:
     All apply machinery is shared (models/cnn.py interprets the family's
     LayerGraph); a family contributes only its config type and its graph
     builder, so adding one is a ~10-line registration below.
+
+    ``plan(cfg, input_rate, **dse_kwargs)`` runs the DAG DSE on the
+    family's graph and lowers it to the per-node ``ImplPlan`` table
+    (``core.graph.GraphPlan.kernel_plan``); pass the result to
+    ``apply(..., plan=kp)`` / ``apply_int8(..., plan=kp)`` for
+    rate-matched per-layer Pallas tiling (vs the uniform
+    ``conv_impls=cnn.kernel_impls()`` path).
     """
 
     family: str
     make_config: Callable            # (**overrides) -> cfg dataclass
     init: Callable                   # (cfg, rng) -> params
-    apply: Callable                  # (params, x, cfg, *, conv_impls=None)
+    apply: Callable                  # (params, x, cfg, *, conv_impls, plan)
     quantize: Callable               # (params, bits=8) -> (q_params, scales)
     apply_int8: Callable             # (q_params, scales, x, cfg) -> logits
     graph: Callable                  # (cfg) -> LayerGraph (the DSE's view)
+    plan: Callable                   # (cfg, input_rate, **kw) -> ImplPlan table
+
+
+def _kernel_plan(cfg, input_rate, **dse_kwargs):
+    """DSE + lowering for one family config: graph -> GraphPlan -> the
+    per-node ImplPlan table the executor dispatches on."""
+    from repro.core.graph import plan_graph
+
+    return plan_graph(cfg.graph(), input_rate, **dse_kwargs).kernel_plan()
 
 
 def _mobilenet_api(version: int) -> CNNApi:
@@ -160,6 +178,7 @@ def _mobilenet_api(version: int) -> CNNApi:
         quantize=mobilenet.quantize_params,
         apply_int8=mobilenet.apply_int8,
         graph=lambda cfg: cfg.graph(),
+        plan=_kernel_plan,
     )
 
 
@@ -172,6 +191,7 @@ def _resnet_api(depth: int) -> CNNApi:
         quantize=resnet.quantize_params,
         apply_int8=resnet.apply_int8,
         graph=lambda cfg: cfg.graph(),
+        plan=_kernel_plan,
     )
 
 

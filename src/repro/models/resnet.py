@@ -124,19 +124,26 @@ def apply(
     cfg: ResNetConfig,
     *,
     conv_impls: Optional[Dict[str, cnn.Impl]] = None,
+    plan=None,
+    interpret: bool = True,
     check: bool = True,
 ) -> jax.Array:
     """Forward pass.  ``x``: [N, H, W, 3].  Returns logits [N, classes].
 
     ``conv_impls`` may override {'conv', 'dwconv', 'pointwise', 'dense'}
-    with kernel-backed implementations (see ``cnn.kernel_impls``).
+    with kernel-backed implementations (see ``cnn.kernel_impls``);
+    ``plan`` (a ``GraphPlan.kernel_plan()`` table) runs the rate-matched
+    path instead — each node's Pallas call tiled per its own DSE choice.
     """
     return cnn.apply_graph(params, x, cfg.graph(), impls=conv_impls,
+                           plan=plan, interpret=interpret,
                            dtype=cfg.dtype, check=check)
 
 
 quantize_params = cnn.quantize_params
 
 
-def apply_int8(q_params, scales, x, cfg: ResNetConfig) -> jax.Array:
-    return cnn.apply_int8(q_params, scales, x, cfg.graph(), dtype=cfg.dtype)
+def apply_int8(q_params, scales, x, cfg: ResNetConfig, *,
+               plan=None, interpret: bool = True) -> jax.Array:
+    return cnn.apply_int8(q_params, scales, x, cfg.graph(), plan=plan,
+                          interpret=interpret, dtype=cfg.dtype)

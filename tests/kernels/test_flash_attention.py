@@ -63,3 +63,23 @@ def test_flash_numerical_stability_large_logits():
                          v.reshape(1, 64, 32)).reshape(1, 1, 64, 32)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-4, atol=1e-4)
+
+
+def test_attention_impl_tile_record_protocol():
+    """The ops adapter shares the CNN adapters' tile/record protocol:
+    a TileChoice pins (block_q, block_k) and the executed blocking is
+    reported through the record callback."""
+    from repro.core.tpu_tiles import TileChoice
+    from repro.kernels.attention.ops import attention_impl
+
+    q, k, v = _qkv(jax.random.key(3), 1, 2, 64, 64, 32)
+    tile = TileChoice(bm=32, bk=64, bn=1, grid_m=2, grid_k=1, grid_n=1,
+                      vmem_bytes=0, mxu_aligned=False)
+    seen = {}
+    impl = attention_impl(causal=True, tile=tile,
+                          record=lambda **kw: seen.update(kw))
+    got = impl(q, k, v)
+    want = flash_attention(q, k, v, causal=True, block_q=32, block_k=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+    assert seen == {"block_q": 32, "block_k": 64, "seq": 64}

@@ -1,0 +1,160 @@
+"""Plan threading: the executor provably follows the DAG DSE per node.
+
+Covers the rate-matched tiling contract end to end:
+  * analytic — ``GraphPlan.kernel_plan()`` derives every arithmetic
+    node's tile from *that node's* (j, h) and decimation-adjusted
+    demand, preserving the divisibility and continuous-flow invariants;
+  * runtime — the tile each Pallas kernel actually executes (reported
+    via the ops adapters' ``record`` hook) equals the planned tile on
+    every node, and a tampered plan is detected;
+  * equivalence — rate-matched and uniform kernel modes produce the
+    same outputs (fp32 and int8): tiling choices change the schedule,
+    never the math.
+"""
+import dataclasses
+from fractions import Fraction as F
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import plan_graph
+from repro.core.dse import NON_ARITH_KINDS
+from repro.models import cnn
+from repro.models.registry import get_cnn_api
+
+FAMILIES = ("resnet18", "mobilenet_v2")
+RATE = F(3)  # 3 features/clock at d_in=3 == 1 pixel/clock
+
+
+def _setup(family):
+    api = get_cnn_api(family)
+    cfg = api.make_config(input_hw=(32, 32), num_classes=10)
+    return api, cfg
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_kernel_plan_tiles_follow_each_nodes_dse_choice(family):
+    """Analytic half: tile floors come from (j, h); growth never breaks
+    divisibility or Eq. 9 (capacity >= the node's own demand)."""
+    api, cfg = _setup(family)
+    graph = api.graph(cfg)
+    gp = plan_graph(graph, RATE)
+    kp = gp.kernel_plan()
+    assert list(kp) == graph.topo_order()
+    n_tiles = 0
+    for name, node in kp.items():
+        spec = graph.spec(name)
+        impl = gp.impls[name]
+        assert node.demand == impl.demand  # decimation-adjusted, per node
+        if spec.kind in NON_ARITH_KINDS:
+            assert node.tile is None
+            continue
+        n_tiles += 1
+        t = node.tile
+        assert spec.d_in % t.bk == 0
+        assert t.bk >= min(impl.j, spec.d_in)
+        if spec.kind == "dwconv":
+            assert t.bn == 1
+            continue
+        assert spec.d_out % t.bn == 0
+        assert t.bn >= max(1, spec.d_out // impl.h)
+        # continuous flow survives the MXU-alignment growth
+        r_phase = impl.demand / impl.p_raw
+        assert F(t.bk, max(1, spec.d_out // t.bn)) >= r_phase
+    assert n_tiles > 10  # the whole conv stack is planned, not a corner
+
+
+def test_plans_differ_across_nodes_no_global_rate():
+    """The point of the paper: per-node demand differs, so tiles differ —
+    the rate-matched path is not one global configuration in disguise."""
+    api, cfg = _setup("resnet18")
+    kp = api.plan(cfg, RATE)
+    demands = {p.demand for p in kp.values() if p.has_kernel}
+    tiles = {(p.tile.bk, p.tile.bn) for p in kp.values() if p.has_kernel}
+    assert len(demands) > 1
+    assert len(tiles) > 1
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_executed_tile_matches_plan_on_every_node(family):
+    """Runtime half: run the real Pallas kernels (interpret mode) under a
+    plan; every arithmetic node must report exactly the planned tile
+    (apply_graph raises otherwise), and the report must cover all of
+    them."""
+    api, cfg = _setup(family)
+    graph = api.graph(cfg)
+    kp = api.plan(cfg, RATE)
+    params = api.init(cfg, jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (1, 32, 32, 3))
+    executed = {}
+    y = cnn.apply_graph(params, x, graph, plan=kp, executed=executed)
+    assert y.shape == (1, 10)
+    planned = {n for n, p in kp.items() if p.has_kernel}
+    assert set(executed) == planned
+    for name in planned:
+        t = kp[name].tile
+        assert executed[name]["bk"] == t.bk
+        assert executed[name]["bn"] == t.bn
+
+
+def test_tampered_plan_is_detected():
+    """If execution disagrees with the plan (here: kernels pinned to the
+    real plan, but a tampered table passed as the contract), the
+    per-node assertion must fire."""
+    api, cfg = _setup("resnet18")
+    graph = api.graph(cfg)
+    kp = api.plan(cfg, RATE)
+    params = api.init(cfg, jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (1, 32, 32, 3))
+    victim = "l1b1_conv1"
+    t = kp[victim].tile
+    bad_tile = dataclasses.replace(t, bk=max(1, t.bk // 2))
+    tampered = dict(kp)
+    tampered[victim] = dataclasses.replace(kp[victim], tile=bad_tile)
+    executed = {}
+    real_impls = cnn.kernel_impls(plan=kp, executed=executed)
+    with pytest.raises(cnn.GraphExecutionError, match=victim):
+        cnn.apply_graph(params, x, graph, impls=real_impls, plan=tampered,
+                        executed=executed)
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_rate_matched_equals_uniform_fp32_and_int8(family):
+    """Equivalence: per-layer tiling follows the DSE but the arithmetic
+    is unchanged — rate-matched and uniform kernel modes agree, in fp32
+    and through the int8 weight path."""
+    api, cfg = _setup(family)
+    graph = api.graph(cfg)
+    kp = api.plan(cfg, RATE)
+    params = api.init(cfg, jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (1, 32, 32, 3))
+
+    rm = api.apply(params, x, cfg, plan=kp)
+    uni = api.apply(params, x, cfg, conv_impls=cnn.kernel_impls())
+    np.testing.assert_allclose(np.asarray(rm), np.asarray(uni),
+                               rtol=2e-4, atol=2e-4)
+    assert bool(jnp.all(jnp.isfinite(rm)))
+
+    q, scales = api.quantize(params)
+    rm8 = api.apply_int8(q, scales, x, cfg, plan=kp)
+    uni8 = cnn.apply_int8(q, scales, x, graph, impls=cnn.kernel_impls())
+    np.testing.assert_allclose(np.asarray(rm8), np.asarray(uni8),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ref11_plans_lower_without_feasibility_claim():
+    """[11]'s (j, h) are bookkeeping decoupled from its capacity formula
+    (and can be infeasible outright); kernel_plan must still lower every
+    node best-effort instead of tripping the Eq.-9 consistency guard."""
+    api, cfg = _setup("resnet18")
+    graph = api.graph(cfg)
+    kp = plan_graph(graph, RATE, scheme="ref11").kernel_plan()
+    for name, node in kp.items():
+        spec = graph.spec(name)
+        if spec.kind in NON_ARITH_KINDS:
+            continue
+        assert spec.d_in % node.tile.bk == 0
+        if spec.kind != "dwconv":
+            assert spec.d_out % node.tile.bn == 0
