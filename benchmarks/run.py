@@ -7,6 +7,9 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
   table4_resnet_e2e     — CNN E2E inference vs the analytic DSE for all
                           four families, incl. uniform-vs-rate-matched
                           Pallas tiling GMAC/s and a batch sweep
+  table5_partition      — multi-chip DAG stage partitioning: bottleneck,
+                          balance, cut-crossing stream buffers, chain-DP
+                          baseline for all four families at S in {2,3,4}
   rate_aware_serving    — the technique applied to LM serving (DESIGN §3)
   kernel_bench          — Pallas kernels vs oracles + tile stats
   roofline              — 40-cell roofline summary (needs dry-run JSONs)
@@ -33,6 +36,7 @@ MODULES = [
     ("table2", "benchmarks.table2_mnv2_rates"),
     ("table3", "benchmarks.table3_dag_buffers"),
     ("table4", "benchmarks.table4_resnet_e2e"),
+    ("table5", "benchmarks.table5_partition"),
     ("rate_aware", "benchmarks.rate_aware_serving"),
     ("kernels", "benchmarks.kernel_bench"),
     ("roofline", "benchmarks.roofline"),

@@ -13,7 +13,9 @@ Public surface:
   tpu_tiles     — the TPU adaptation: (j,h) -> Pallas BlockSpec tiles,
                   uniform (select_tile) and rate-matched per-layer
                   (select_tile_for_impl)
-  stage_partition — rate-aware pipeline-stage partitioning (TPU analogue)
+  stage_partition — rate-aware pipeline-stage partitioning: chain DP
+                  (TPU analogue) + DAG cuts (partition_graph) with
+                  inter-chip stream buffers (stream_buffers)
   hlo_analysis  — roofline term extraction from compiled HLO
   hw_specs      — hardware constants (TPU v5e + xcvu37p)
 """
@@ -34,10 +36,21 @@ from .dse import (  # noqa: F401
     hj_set,
     pixel_phases,
     plan_network,
+    plan_partitioned,
     select_impl,
     select_ours,
     select_ref11,
     surviving_phases,
+)
+from .stage_partition import (  # noqa: F401
+    GraphStagePlan,
+    StagePlan,
+    StreamBuffer,
+    allocate_chips,
+    partition_graph,
+    partition_min_bottleneck,
+    plan_node_costs,
+    stream_buffers,
 )
 from .graph import (  # noqa: F401
     GraphError,
@@ -59,4 +72,6 @@ from .resource_model import (  # noqa: F401
     estimate_join_buffer,
     estimate_layer,
     estimate_network,
+    estimate_stages,
+    estimate_stream_buffer,
 )

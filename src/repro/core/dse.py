@@ -45,16 +45,16 @@ class LayerImpl:
     """A chosen hardware implementation of one layer (see module docstring)."""
 
     layer: LayerSpec
-    j: int                 # input features per clock per phase
-    h: int                 # outputs time-multiplexed per unit
-    p: int                 # pixel phases after stride pruning
-    p_raw: int             # pixel phases before pruning
-    configs: int           # C — weight configurations per unit (Eq. 4)
-    units: int             # total units instantiated (all phases)
-    mults: int             # total multipliers (drives DSP / MXU work)
-    scheme: str            # 'ours' | 'ref11'
-    demand: Fraction       # the input rate r this layer must sustain
-    capacity: Fraction     # features/clock the implementation can absorb
+    j: int  # input features per clock per phase
+    h: int  # outputs time-multiplexed per unit
+    p: int  # pixel phases after stride pruning
+    p_raw: int  # pixel phases before pruning
+    configs: int  # C — weight configurations per unit (Eq. 4)
+    units: int  # total units instantiated (all phases)
+    mults: int  # total multipliers (drives DSP / MXU work)
+    scheme: str  # 'ours' | 'ref11'
+    demand: Fraction  # the input rate r this layer must sustain
+    capacity: Fraction  # features/clock the implementation can absorb
     pad_waste: Fraction = Fraction(0)  # [11]: fraction of padded/invalid lanes
 
     @property
@@ -101,6 +101,7 @@ class LayerImpl:
 # --------------------------------------------------------------------------
 # Shared helpers
 # --------------------------------------------------------------------------
+
 
 def hj_set(d_in: int, h_domain: int, r: Fraction) -> List[Tuple[int, int]]:
     """Eq. (9): viable (j, h) with j | d_in, h | h_domain, j/h >= r."""
@@ -160,6 +161,7 @@ def _mults_per_unit(layer: LayerSpec, j: int) -> int:
 # Paper's scheme (Eqs. 7-11)
 # --------------------------------------------------------------------------
 
+
 def select_ours(
     layer: LayerSpec,
     r: Fraction,
@@ -190,10 +192,19 @@ def select_ours(
         # resource model but no (j,h) exploration is needed.
         stride = max(layer.stride)
         p = surviving_phases(p_raw, stride) if layer.kind == "pool" else p_raw
-        return LayerImpl(layer=layer, j=min(d_in, max(1, r_phase.__ceil__())),
-                         h=1, p=p, p_raw=p_raw, configs=1, units=p,
-                         mults=0, scheme="ours", demand=r,
-                         capacity=Fraction(d_in * p_raw))
+        return LayerImpl(
+            layer=layer,
+            j=min(d_in, max(1, r_phase.__ceil__())),
+            h=1,
+            p=p,
+            p_raw=p_raw,
+            configs=1,
+            units=p,
+            mults=0,
+            scheme="ours",
+            demand=r,
+            capacity=Fraction(d_in * p_raw),
+        )
 
     hd = _h_domain(layer)
     hj = hj_set(d_in, hd, r_phase)
@@ -212,9 +223,17 @@ def select_ours(
         units = _units_per_phase(layer, h) * p
         mults = units * _mults_per_unit(layer, j)
         return LayerImpl(
-            layer=layer, j=j, h=h, p=p, p_raw=p_raw,
-            configs=max(1, (h * d_in) // j), units=units, mults=mults,
-            scheme="ours", demand=r, capacity=Fraction(j, h) * p_raw,
+            layer=layer,
+            j=j,
+            h=h,
+            p=p,
+            p_raw=p_raw,
+            configs=max(1, (h * d_in) // j),
+            units=units,
+            mults=mults,
+            scheme="ours",
+            demand=r,
+            capacity=Fraction(j, h) * p_raw,
         )
 
     if objective in ("resources", "pareto"):
@@ -246,6 +265,7 @@ def select_ours(
 # [11] baseline (Eqs. 1-3) — the paper's comparison target
 # --------------------------------------------------------------------------
 
+
 def select_ref11(layer: LayerSpec, r: Fraction) -> LayerImpl:
     """The prior work's direct derivation.
 
@@ -270,10 +290,19 @@ def select_ref11(layer: LayerSpec, r: Fraction) -> LayerImpl:
     p = p_raw  # no stride-pruning insight in [11]
 
     if layer.kind in NON_ARITH_KINDS:
-        return LayerImpl(layer=layer, j=min(d_in, max(1, r_phase.__ceil__())),
-                         h=1, p=p, p_raw=p_raw, configs=1, units=p,
-                         mults=0, scheme="ref11", demand=r,
-                         capacity=Fraction(d_in * p_raw))
+        return LayerImpl(
+            layer=layer,
+            j=min(d_in, max(1, r_phase.__ceil__())),
+            h=1,
+            p=p,
+            p_raw=p_raw,
+            configs=1,
+            units=p,
+            mults=0,
+            scheme="ref11",
+            demand=r,
+            capacity=Fraction(d_in * p_raw),
+        )
 
     if layer.kind in ("conv", "dwconv"):
         c = min(math.ceil(d_in / r_phase), d_in * d_out)
@@ -289,9 +318,20 @@ def select_ref11(layer: LayerSpec, r: Fraction) -> LayerImpl:
         j = min(d_in, units_per_phase)
         h = max(1, cm // max(1, units_per_phase // max(1, min(d_in, units_per_phase))))
         capacity = Fraction(d_in, c) * p  # one pixel per C clocks per phase
-        return LayerImpl(layer=layer, j=j, h=min(h, cm), p=p, p_raw=p_raw,
-                         configs=c, units=units, mults=mults, scheme="ref11",
-                         demand=r, capacity=capacity, pad_waste=pad)
+        return LayerImpl(
+            layer=layer,
+            j=j,
+            h=min(h, cm),
+            p=p,
+            p_raw=p_raw,
+            configs=c,
+            units=units,
+            mults=mults,
+            scheme="ref11",
+            demand=r,
+            capacity=capacity,
+            pad_waste=pad,
+        )
 
     # pointwise / dense
     j_max, h_max = r_phase.numerator, r_phase.denominator
@@ -304,15 +344,26 @@ def select_ref11(layer: LayerSpec, r: Fraction) -> LayerImpl:
         pad = Fraction(padded - d_in, padded)
     units = (d_out // h) * p
     mults = units * j
-    return LayerImpl(layer=layer, j=j, h=h, p=p, p_raw=p_raw,
-                     configs=max(1, math.ceil(h * d_in / j)), units=units,
-                     mults=mults, scheme="ref11", demand=r,
-                     capacity=Fraction(j, h) * p, pad_waste=pad)
+    return LayerImpl(
+        layer=layer,
+        j=j,
+        h=h,
+        p=p,
+        p_raw=p_raw,
+        configs=max(1, math.ceil(h * d_in / j)),
+        units=units,
+        mults=mults,
+        scheme="ref11",
+        demand=r,
+        capacity=Fraction(j, h) * p,
+        pad_waste=pad,
+    )
 
 
 # --------------------------------------------------------------------------
 # Whole-network DSE
 # --------------------------------------------------------------------------
+
 
 def select_impl(
     layer: LayerSpec,
@@ -324,8 +375,7 @@ def select_impl(
 ) -> LayerImpl:
     """Scheme dispatch shared by chain planning and the DAG planner."""
     if scheme == "ours":
-        return select_ours(layer, r, prefer_large_h=prefer_large_h,
-                           objective=objective)
+        return select_ours(layer, r, prefer_large_h=prefer_large_h, objective=objective)
     if scheme == "ref11":
         return select_ref11(layer, r)
     raise ValueError(f"unknown scheme {scheme!r}")
@@ -350,8 +400,29 @@ def plan_network(
     impls: List[LayerImpl] = []
     r = input_rate
     for lay in layers:
-        impl = select_impl(lay, r, scheme=scheme,
-                           prefer_large_h=prefer_large_h, objective=objective)
+        impl = select_impl(
+            lay,
+            r,
+            scheme=scheme,
+            prefer_large_h=prefer_large_h,
+            objective=objective,
+        )
         impls.append(impl)
         r = impl.rate_out
     return impls
+
+
+def plan_partitioned(graph, input_rate: Fraction, n_stages: int, **kwargs):
+    """Stage-aware DSE over a ``LayerGraph``: select (j, h) per node AND
+    cut the DAG into ``n_stages`` chips, with every cut-crossing edge
+    sized as an inter-chip stream buffer.
+
+    A convenience front door for DSE-level callers; the work lives in
+    ``core.graph.plan_graph(..., n_stages=...)`` (imported lazily —
+    graph imports this module).  Returns the ``GraphPlan`` with
+    ``stage_plan`` / ``stream_bufs`` populated; ``kwargs`` pass through
+    (scheme, objective, chain_cuts, stage_cost_key, link_cycles).
+    """
+    from .graph import plan_graph
+
+    return plan_graph(graph, input_rate, n_stages=n_stages, **kwargs)

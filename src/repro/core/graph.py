@@ -63,6 +63,14 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from .dse import NON_ARITH_KINDS, LayerImpl, select_impl
 from .hw_specs import TPU_V5E, TPUSpec
 from .rate import LayerSpec, RatePoint
+from .stage_partition import (
+    DEFAULT_LINK_CYCLES,
+    GraphStagePlan,
+    StreamBuffer,
+    partition_graph,
+    plan_node_costs,
+    stream_buffers,
+)
 from .tpu_tiles import TileChoice, select_tile_for_impl
 
 JOIN_KINDS = ("add", "concat")
@@ -75,6 +83,7 @@ class GraphError(ValueError):
 # ==========================================================================
 # Graph structure
 # ==========================================================================
+
 
 class LayerGraph:
     """A DAG of ``LayerSpec`` nodes with producer→consumer edges.
@@ -112,38 +121,49 @@ class LayerGraph:
     def _check_shapes(self, spec: LayerSpec, preds: List[str]) -> None:
         if spec.kind in JOIN_KINDS:
             if len(preds) < 2:
-                raise GraphError(f"{spec.name}: join kind {spec.kind!r} "
-                                 f"needs >=2 producers, got {len(preds)}")
+                raise GraphError(
+                    f"{spec.name}: join kind {spec.kind!r} "
+                    f"needs >=2 producers, got {len(preds)}"
+                )
             for p in preds:
                 if self._specs[p].out_hw != spec.in_hw:
                     raise GraphError(
                         f"{spec.name}: producer {p} emits {self._specs[p].out_hw}"
-                        f" but join expects {spec.in_hw}")
+                        f" but join expects {spec.in_hw}"
+                    )
             d_ops = [self._specs[p].d_out for p in preds]
             if spec.kind == "add":
                 if any(d != spec.d_in for d in d_ops) or spec.d_out != spec.d_in:
                     raise GraphError(
                         f"{spec.name}: add needs equal operand channels "
                         f"(=d_in=d_out), got operands {d_ops}, "
-                        f"d_in={spec.d_in}, d_out={spec.d_out}")
+                        f"d_in={spec.d_in}, d_out={spec.d_out}"
+                    )
             else:  # concat
                 if sum(d_ops) != spec.d_in or spec.d_out != spec.d_in:
                     raise GraphError(
                         f"{spec.name}: concat d_in must equal sum of operand "
                         f"channels {sum(d_ops)}, got d_in={spec.d_in}, "
-                        f"d_out={spec.d_out}")
+                        f"d_out={spec.d_out}"
+                    )
         else:
             if len(preds) > 1:
-                raise GraphError(f"{spec.name}: kind {spec.kind!r} takes at "
-                                 f"most one producer, got {len(preds)}")
+                raise GraphError(
+                    f"{spec.name}: kind {spec.kind!r} takes at "
+                    f"most one producer, got {len(preds)}"
+                )
             if preds:
                 pred = self._specs[preds[0]]
                 if pred.d_out != spec.d_in:
-                    raise GraphError(f"{spec.name}: d_in={spec.d_in} but "
-                                     f"producer {pred.name} has d_out={pred.d_out}")
+                    raise GraphError(
+                        f"{spec.name}: d_in={spec.d_in} but "
+                        f"producer {pred.name} has d_out={pred.d_out}"
+                    )
                 if pred.out_hw != spec.in_hw:
-                    raise GraphError(f"{spec.name}: in_hw={spec.in_hw} but "
-                                     f"producer {pred.name} emits {pred.out_hw}")
+                    raise GraphError(
+                        f"{spec.name}: in_hw={spec.in_hw} but "
+                        f"producer {pred.name} emits {pred.out_hw}"
+                    )
 
     @classmethod
     def from_chain(cls, layers: Sequence[LayerSpec]) -> "LayerGraph":
@@ -188,8 +208,10 @@ class LayerGraph:
         return [n for n in self._specs if len(self._succs[n]) > 1]
 
     def is_linear(self) -> bool:
-        return all(len(self._preds[n]) <= 1 and len(self._succs[n]) <= 1
-                   for n in self._specs)
+        return all(
+            len(self._preds[n]) <= 1 and len(self._succs[n]) <= 1
+            for n in self._specs
+        )
 
     def to_chain(self) -> List[LayerSpec]:
         if not self.is_linear() or len(self.input_nodes) != 1:
@@ -200,6 +222,7 @@ class LayerGraph:
 # ==========================================================================
 # Rate propagation (the DAG lift of rate.propagate_chain)
 # ==========================================================================
+
 
 def propagate_graph(
     graph: LayerGraph, input_rate: Fraction
@@ -227,12 +250,12 @@ def propagate_graph(
             if len(qs) > 1:
                 raise GraphError(
                     f"{name}: operand pixel rates disagree: "
-                    + ", ".join(f"{p}={out[p].pixels_per_clock}" for p in preds))
+                    + ", ".join(f"{p}={out[p].pixels_per_clock}" for p in preds)
+                )
             q_in = qs.pop()
         demands[name] = q_in * spec.d_in
         q_out = q_in * spec.spatial_ratio
-        out[name] = RatePoint(features_per_clock=q_out * spec.d_out,
-                              d=spec.d_out)
+        out[name] = RatePoint(features_per_clock=q_out * spec.d_out, d=spec.d_out)
     return demands, out
 
 
@@ -240,17 +263,18 @@ def propagate_graph(
 # Per-node timing + join skew analysis
 # ==========================================================================
 
+
 @dataclasses.dataclass(frozen=True)
 class NodeTiming:
     """Affine steady-state timing of one node's output stream:
     pixel m leaves at ``offset + (m+1)/q_out`` cycles."""
 
     name: str
-    pass_cycles: Fraction      # C — cycles one pass over a pixel takes
-    fill_cycles: Fraction      # sliding-window row banking before 1st output
-    offset: Fraction           # stream intercept (cycles)
-    q_in: Fraction             # pixels/clock consumed
-    q_out: Fraction            # pixels/clock emitted
+    pass_cycles: Fraction  # C — cycles one pass over a pixel takes
+    fill_cycles: Fraction  # sliding-window row banking before 1st output
+    offset: Fraction  # stream intercept (cycles)
+    q_in: Fraction  # pixels/clock consumed
+    q_out: Fraction  # pixels/clock emitted
 
 
 def pass_cycles(impl: LayerImpl) -> Fraction:
@@ -278,7 +302,8 @@ def decimation_keep(spec: LayerSpec) -> int:
     if ratio.denominator != 1:
         raise GraphError(
             f"{spec.name}: non-integer decimation {ratio} unsupported in "
-            f"graph timing (pad dims so in_px is a multiple of out_px)")
+            f"graph timing (pad dims so in_px is a multiple of out_px)"
+        )
     return int(ratio)
 
 
@@ -310,9 +335,12 @@ def compute_timing(
         c = pass_cycles(impls[name])
         fill = Fraction(fill_pixels(spec)) / q_in if fill_pixels(spec) else Fraction(0)
         timing[name] = NodeTiming(
-            name=name, pass_cycles=c, fill_cycles=fill,
+            name=name,
+            pass_cycles=c,
+            fill_cycles=fill,
             offset=o_in + c + fill,
-            q_in=q_in, q_out=q_in * spec.spatial_ratio,
+            q_in=q_in,
+            q_out=q_in * spec.spatial_ratio,
         )
     return timing
 
@@ -322,12 +350,12 @@ class JoinBuffer:
     """Analytically sized skew FIFO on one in-edge of a join node."""
 
     join: str
-    src: str                   # producer whose stream this FIFO parks
-    skew_cycles: Fraction      # slowest-branch offset minus this branch's
-    q: Fraction                # pixel rate through the join
-    d: int                     # channels per pixel on this edge
-    bound_pixels: int          # max pixels resident (the analytical bound)
-    width_bits: int            # FIFO word = one stream beat
+    src: str  # producer whose stream this FIFO parks
+    skew_cycles: Fraction  # slowest-branch offset minus this branch's
+    q: Fraction  # pixel rate through the join
+    d: int  # channels per pixel on this edge
+    bound_pixels: int  # max pixels resident (the analytical bound)
+    width_bits: int  # FIFO word = one stream beat
     depth_words: int
 
     @property
@@ -350,20 +378,29 @@ def join_buffers(
             skew = o_max - timing[p].offset
             d = graph.spec(p).d_out
             bound = math.floor(skew * q) + max(1, impls[join].p_raw)
-            r_edge = q * d                        # features/clock on the edge
+            r_edge = q * d  # features/clock on the edge
             lanes = max(1, math.ceil(r_edge))
             width = 8 * lanes
             depth = max(2, math.ceil(Fraction(bound * d, lanes)))
-            buffers.append(JoinBuffer(
-                join=join, src=p, skew_cycles=skew, q=q, d=d,
-                bound_pixels=bound, width_bits=width, depth_words=depth,
-            ))
+            buffers.append(
+                JoinBuffer(
+                    join=join,
+                    src=p,
+                    skew_cycles=skew,
+                    q=q,
+                    d=d,
+                    bound_pixels=bound,
+                    width_bits=width,
+                    depth_words=depth,
+                )
+            )
     return buffers
 
 
 # ==========================================================================
 # DAG-aware DSE
 # ==========================================================================
+
 
 @dataclasses.dataclass(frozen=True)
 class ImplPlan:
@@ -380,11 +417,11 @@ class ImplPlan:
 
     name: str
     kind: str
-    j: int                     # input features/clock per phase (Eq. 9)
-    h: int                     # outputs time-multiplexed per unit
-    p: int                     # pixel phases after stride pruning
-    demand: Fraction           # decimation-adjusted features/clock
-    q_in: Fraction             # pixels/clock entering the node
+    j: int  # input features/clock per phase (Eq. 9)
+    h: int  # outputs time-multiplexed per unit
+    p: int  # pixel phases after stride pruning
+    demand: Fraction  # decimation-adjusted features/clock
+    q_in: Fraction  # pixels/clock entering the node
     tile: Optional[TileChoice]  # None for non-arithmetic (wiring) kinds
 
     @property
@@ -394,7 +431,18 @@ class ImplPlan:
 
 @dataclasses.dataclass
 class GraphPlan:
-    """A complete hardware plan for a LayerGraph at one input rate."""
+    """A complete hardware plan for a LayerGraph at one input rate.
+
+    When planned with ``n_stages`` the plan additionally carries the
+    multi-chip partition: ``stage_plan`` (the DAG cut) and
+    ``stream_bufs`` (the FIFO on every cut-crossing edge).  The cut and
+    the per-node (j, h) are mutually consistent by construction — the
+    DP balances the mult counts the DSE selected, and because stream
+    buffers are rate-transparent in steady state (they re-time, never
+    re-rate), each node's demand is exactly the post-cut rate its
+    (j, h) was chosen against: every stage independently satisfies
+    Eq. 9 at the rate arriving over its cut.
+    """
 
     graph: LayerGraph
     input_rate: Fraction
@@ -404,6 +452,8 @@ class GraphPlan:
     out_points: Dict[str, RatePoint]
     timing: Dict[str, NodeTiming]
     buffers: List[JoinBuffer]
+    stage_plan: Optional[GraphStagePlan] = None
+    stream_bufs: Optional[List[StreamBuffer]] = None
 
     @property
     def total_mults(self) -> int:
@@ -429,6 +479,53 @@ class GraphPlan:
             if b.join == join and b.src == src:
                 return b
         raise KeyError((join, src))
+
+    # -- multi-chip stage introspection (requires n_stages planning) ------
+
+    def _require_stages(self) -> GraphStagePlan:
+        if self.stage_plan is None:
+            raise GraphError(
+                "plan has no stage partition — call plan_graph(..., "
+                "n_stages=S)"
+            )
+        return self.stage_plan
+
+    def stage_mults(self) -> List[int]:
+        """DSE-selected multiplier count per stage (what the cut balances)."""
+        sp = self._require_stages()
+        return [
+            sum(self.impls[n].mults for n in sp.stage_nodes(s))
+            for s in range(sp.n_stages)
+        ]
+
+    def stage_infeasible_nodes(self) -> List[List[str]]:
+        """Per stage, the nodes whose capacity cannot absorb the post-cut
+        rate — empty everywhere for scheme 'ours' (Eq. 9 holds on every
+        branch at every cut); [11]'s rounding can fail on a stage whose
+        cut lands on an awkward branch rate."""
+        sp = self._require_stages()
+        return [
+            [n for n in sp.stage_nodes(s) if not self.impls[n].feasible]
+            for s in range(sp.n_stages)
+        ]
+
+    def cut_rates(self) -> List[Fraction]:
+        """Features/clock crossing each interior cut — the inter-chip
+        link load (cut c separates stage c from stage c+1)."""
+        sp = self._require_stages()
+        rates = [Fraction(0)] * (sp.n_stages - 1)
+        for sb in self.stream_bufs or []:
+            for c in range(sb.src_stage, sb.dst_stage):
+                rates[c] += sb.q * sb.d
+        return rates
+
+    @property
+    def total_stream_bits(self) -> int:
+        """Bits of inter-chip stream buffering the partition adds.
+        Raises (like every stage accessor) on an unpartitioned plan —
+        a silent 0 would read as 'the cut is free'."""
+        self._require_stages()
+        return sum(b.bits for b in self.stream_bufs or [])
 
     def kernel_plan(
         self,
@@ -476,6 +573,10 @@ def plan_graph(
     scheme: str = "ours",
     prefer_large_h: bool = True,
     objective: str = "max_h",
+    n_stages: Optional[int] = None,
+    chain_cuts: bool = False,
+    stage_cost_key: str = "mults",
+    link_cycles: int = DEFAULT_LINK_CYCLES,
 ) -> GraphPlan:
     """Select an implementation for every node of a DAG.
 
@@ -483,17 +584,50 @@ def plan_graph(
     the equivalent chain (property-tested): demands propagate through
     ``impl.rate_out`` exactly as the fluid recurrence, joins only add the
     operand-consistency constraint and the skew analysis.
+
+    ``n_stages`` turns on multi-chip planning: the DAG is cut into that
+    many contiguous-in-topo-order stages by the min-bottleneck /
+    min-cut DP (``core.stage_partition.partition_graph``), balancing the
+    *DSE-selected* per-node cost (``stage_cost_key``: 'mults' or
+    'units'), and every cut-crossing edge — including skew FIFOs whose
+    branch and join land in different stages — is sized as an
+    inter-chip ``StreamBuffer`` with ``link_cycles`` of slack per chip
+    boundary crossed.  ``chain_cuts=True`` restricts boundaries to
+    single-stream positions (the chain-DP baseline the tables compare
+    against).  The result lands in ``GraphPlan.stage_plan`` /
+    ``stream_bufs``; the executor (``models.cnn.apply_staged``) and the
+    resource model (``estimate_graph`` / ``estimate_stages``) both
+    consume it.
     """
     demands, out_points = propagate_graph(graph, input_rate)
     impls: "OrderedDict[str, LayerImpl]" = OrderedDict()
     for name in graph.topo_order():
         impls[name] = select_impl(
-            graph.spec(name), demands[name], scheme=scheme,
-            prefer_large_h=prefer_large_h, objective=objective,
+            graph.spec(name),
+            demands[name],
+            scheme=scheme,
+            prefer_large_h=prefer_large_h,
+            objective=objective,
         )
     timing = compute_timing(graph, impls, input_rate)
-    return GraphPlan(
-        graph=graph, input_rate=Fraction(input_rate), scheme=scheme,
-        impls=impls, demands=demands, out_points=out_points,
-        timing=timing, buffers=join_buffers(graph, impls, timing),
+    plan = GraphPlan(
+        graph=graph,
+        input_rate=Fraction(input_rate),
+        scheme=scheme,
+        impls=impls,
+        demands=demands,
+        out_points=out_points,
+        timing=timing,
+        buffers=join_buffers(graph, impls, timing),
     )
+    if n_stages is not None:
+        plan.stage_plan = partition_graph(
+            graph,
+            plan_node_costs(plan, stage_cost_key),
+            n_stages,
+            chain_cuts=chain_cuts,
+        )
+        plan.stream_bufs = stream_buffers(
+            plan, plan.stage_plan, link_cycles=link_cycles
+        )
+    return plan

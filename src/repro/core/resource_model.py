@@ -58,9 +58,13 @@ class ResourceEstimate:
     dsp: float = 0.0
 
     def __add__(self, o: "ResourceEstimate") -> "ResourceEstimate":
-        return ResourceEstimate(self.lut + o.lut, self.ff + o.ff,
-                                self.bram36 + o.bram36, self.uram + o.uram,
-                                self.dsp + o.dsp)
+        return ResourceEstimate(
+            self.lut + o.lut,
+            self.ff + o.ff,
+            self.bram36 + o.bram36,
+            self.uram + o.uram,
+            self.dsp + o.dsp,
+        )
 
     def rounded(self) -> dict:
         return {
@@ -77,7 +81,7 @@ _DW_MULT_LUT = 58.0
 _ALPHA_OURS = 0.30
 _ALPHA_REF11 = 0.40
 _CTRL_LUT_UNIT_OURS = 100.0
-_CTRL_LUT_UNIT_REF11 = 0.5     # [11] shares config control across its KPUs
+_CTRL_LUT_UNIT_REF11 = 0.5  # [11] shares config control across its KPUs
 _INVALID_FILTER_LUT = 55.0
 _LAYER_INFRA_LUT = 200.0
 _LUTRAM_PER_64B = 1.0
@@ -90,19 +94,26 @@ _LUTRAM_C_MAX = 64
 _ACC_BITS = 16
 
 
+# width x depth configurations of the RAMB36 / RAMB18 primitives
+_RAMB36_GEOMETRIES = [
+    (1, 32768), (2, 16384), (4, 8192), (9, 4096), (18, 2048), (36, 1024), (72, 512)
+]
+_RAMB18_GEOMETRIES = [
+    (1, 16384), (2, 8192), (4, 4096), (9, 2048), (18, 1024), (36, 512)
+]
+
+
 def _bram_bits(width_bits: int, depth: int) -> float:
     """Width-configurable RAMB mapping (RAMB18 granularity = 0.5)."""
     if width_bits <= 0 or depth <= 0:
         return 0.0
     best36 = min(
         math.ceil(width_bits / cw) * math.ceil(depth / cd)
-        for cw, cd in [(1, 32768), (2, 16384), (4, 8192), (9, 4096),
-                       (18, 2048), (36, 1024), (72, 512)]
+        for cw, cd in _RAMB36_GEOMETRIES
     )
     best18 = min(
         math.ceil(width_bits / cw) * math.ceil(depth / cd)
-        for cw, cd in [(1, 16384), (2, 8192), (4, 4096), (9, 2048),
-                       (18, 1024), (36, 512)]
+        for cw, cd in _RAMB18_GEOMETRIES
     )
     return min(float(best36), best18 * 0.5)
 
@@ -136,8 +147,10 @@ def estimate_layer(impl: LayerImpl, spec: FPGASpec = XCVU37P) -> ResourceEstimat
             est.ff = impl.units * _FF_PER_UNIT_OURS
             rows = lay.kernel[0] - 1
             if rows > 0:
-                b, u = _map_buffer(lay.d_in * 8 * max(1, impl.p_raw),
-                                   max(1, (lay.in_hw[1] * rows) // max(1, impl.p_raw)))
+                b, u = _map_buffer(
+                    lay.d_in * 8 * max(1, impl.p_raw),
+                    max(1, (lay.in_hw[1] * rows) // max(1, impl.p_raw)),
+                )
                 est.bram36 += b
                 est.uram += u
         elif lay.kind == "add":
@@ -150,7 +163,7 @@ def estimate_layer(impl: LayerImpl, spec: FPGASpec = XCVU37P) -> ResourceEstimat
     # ---- DSP ----
     nondw_mults = 0 if dw else impl.mults
     est.dsp += math.ceil(nondw_mults / spec.dsp_pack)
-    est.dsp += 2 * output_lanes(impl)   # requant: 32b acc x 16b scale
+    est.dsp += 2 * output_lanes(impl)  # requant: 32b acc x 16b scale
 
     # ---- LUT ----
     if dw:
@@ -194,8 +207,10 @@ def estimate_layer(impl: LayerImpl, spec: FPGASpec = XCVU37P) -> ResourceEstimat
             # per phase) — data-rate-aware buffering: low rates get thin,
             # deep, bits-efficient memories.
             width = 8 * max(1, impl.j * impl.p_raw)
-            depth = max(1, math.ceil(rows * lay.in_hw[1] * lay.d_in
-                                     / max(1, impl.j * impl.p_raw)))
+            depth = max(
+                1,
+                math.ceil(rows * lay.in_hw[1] * lay.d_in / max(1, impl.j * impl.p_raw)),
+            )
             b, u = _map_buffer(width, depth)
         else:
             # [11] transposed KPU: weighted partial sums buffered per group
@@ -221,8 +236,9 @@ def estimate_network(
 # DAG terms: join skew FIFOs (see core.graph)
 # --------------------------------------------------------------------------
 
-_FIFO_CTRL_LUT = 40.0     # read/write pointers, status flags, gray sync
-_FIFO_SRL_DEPTH = 64      # shallow FIFOs live in SRL shift registers
+
+_FIFO_CTRL_LUT = 40.0  # read/write pointers, status flags, gray sync
+_FIFO_SRL_DEPTH = 64  # shallow FIFOs live in SRL shift registers
 
 
 def estimate_join_buffer(buf) -> ResourceEstimate:
@@ -245,13 +261,70 @@ def estimate_join_buffer(buf) -> ResourceEstimate:
     return est
 
 
+# Inter-chip stream buffers (cut-crossing edges of a stage partition)
+
+_LINK_IFACE_LUT = 150.0  # serializer/deserializer + credit flow control
+
+
+def estimate_stream_buffer(buf) -> ResourceEstimate:
+    """One inter-chip stream buffer (a ``core.stage_partition.
+    StreamBuffer``): the same width-configurable FIFO mapping as the
+    join skew FIFOs, plus the link interface logic (serialization and
+    credit-based flow control toward the neighbour chip)."""
+    est = estimate_join_buffer(buf)
+    est.lut += _LINK_IFACE_LUT
+    return est
+
+
 def estimate_graph(plan, spec: FPGASpec = XCVU37P) -> ResourceEstimate:
     """Whole-DAG estimate: every node plus every join skew FIFO.
 
     ``plan`` is a ``core.graph.GraphPlan`` (duck-typed to avoid an import
     cycle: graph -> dse -> [lazy] resource_model).
+
+    For a multi-chip plan (``plan_graph(..., n_stages=S)``) the
+    cut-crossing buffer term replaces the skew FIFOs that span a cut:
+    a join FIFO whose branch and join land in different stages is
+    priced as an inter-chip ``StreamBuffer`` (deeper: skew bound plus
+    link slack), and plain pipeline edges crossing a cut add their own
+    stream buffers.  Join FIFOs fully inside one stage are unchanged.
     """
     total = estimate_network(list(plan.impls.values()), spec)
+    stage_plan = getattr(plan, "stage_plan", None)
+    if stage_plan is None:
+        for buf in plan.buffers:
+            total = total + estimate_join_buffer(buf)
+        return total
+    stage_of = stage_plan.stage_index()
     for buf in plan.buffers:
-        total = total + estimate_join_buffer(buf)
+        if stage_of[buf.src] == stage_of[buf.join]:
+            total = total + estimate_join_buffer(buf)
+    for sb in plan.stream_bufs or []:
+        total = total + estimate_stream_buffer(sb)
     return total
+
+
+def estimate_stages(plan, spec: FPGASpec = XCVU37P) -> list:
+    """Per-stage resource estimates for a multi-chip plan.
+
+    Stage ``s`` pays for its own nodes, the join FIFOs fully inside it,
+    and the stream buffers on its *incoming* cut edges (the buffer
+    parks data on the consuming chip, where backpressure is decided).
+    The sum over stages equals ``estimate_graph`` on the same plan.
+    """
+    stage_plan = getattr(plan, "stage_plan", None)
+    if stage_plan is None:
+        raise ValueError(
+            "plan has no stage partition — call plan_graph(..., n_stages=S)"
+        )
+    stage_of = stage_plan.stage_index()
+    out = [ResourceEstimate() for _ in range(stage_plan.n_stages)]
+    for name, impl in plan.impls.items():
+        out[stage_of[name]] = out[stage_of[name]] + estimate_layer(impl, spec)
+    for buf in plan.buffers:
+        if stage_of[buf.src] == stage_of[buf.join]:
+            s = stage_of[buf.join]
+            out[s] = out[s] + estimate_join_buffer(buf)
+    for sb in plan.stream_bufs or []:
+        out[sb.dst_stage] = out[sb.dst_stage] + estimate_stream_buffer(sb)
+    return out

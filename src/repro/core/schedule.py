@@ -39,10 +39,10 @@ from .dse import LayerImpl
 class LayerTrace:
     name: str
     busy_cycles: int
-    span_cycles: int          # first pass start -> last pass end
-    stall_cycles: int         # idle cycles while input WAS available
-    max_queue: int            # max pixels waiting
-    util: float               # busy / span per phase-average
+    span_cycles: int  # first pass start -> last pass end
+    stall_cycles: int  # idle cycles while input WAS available
+    max_queue: int  # max pixels waiting
+    util: float  # busy / span per phase-average
 
     @property
     def stall_free(self) -> bool:
@@ -55,8 +55,9 @@ def _arrival_times(n_pixels: int, q: Fraction) -> List[Fraction]:
 
 
 def _empty_trace(name: str) -> LayerTrace:
-    return LayerTrace(name=name, busy_cycles=0, span_cycles=0,
-                      stall_cycles=0, max_queue=0, util=1.0)
+    return LayerTrace(
+        name=name, busy_cycles=0, span_cycles=0, stall_cycles=0, max_queue=0, util=1.0
+    )
 
 
 def _simulate_layer(
@@ -83,7 +84,7 @@ def _simulate_layer(
     stall = Fraction(0)
     max_q = 0
     started: List[Fraction] = []
-    arr_seen: List[Fraction] = []      # sorted arrivals[:n+1]
+    arr_seen: List[Fraction] = []  # sorted arrivals[:n+1]
     started_sorted: List[Fraction] = []
 
     for n, a in enumerate(arrivals):
@@ -98,8 +99,9 @@ def _simulate_layer(
         busy += c
         # queue depth at time 'start': arrived (among pixels 0..n) minus
         # started (the current pixel counts as started)
-        q_depth = (bisect.bisect_right(arr_seen, start)
-                   - bisect.bisect_right(started_sorted, start))
+        q_depth = bisect.bisect_right(arr_seen, start) - bisect.bisect_right(
+            started_sorted, start
+        )
         max_q = max(max_q, q_depth)
 
     # stall = idle time of phases while a pixel was waiting in queue
@@ -156,14 +158,15 @@ def simulate_chain(
 # DAG simulation
 # --------------------------------------------------------------------------
 
+
 @dataclasses.dataclass(frozen=True)
 class JoinOccupancy:
     """Measured skew-FIFO occupancy on one join in-edge."""
 
     join: str
     src: str
-    max_pixels: int            # measured peak pixels resident
-    bound_pixels: int          # analytical bound from core.graph
+    max_pixels: int  # measured peak pixels resident
+    bound_pixels: int  # analytical bound from core.graph
 
     @property
     def within_bound(self) -> bool:
@@ -189,7 +192,7 @@ class GraphSimResult:
 
 
 def simulate_graph(
-    plan,                       # core.graph.GraphPlan (duck-typed: no cycle)
+    plan,  # core.graph.GraphPlan (duck-typed: no cycle)
     n_pixels: int,
     input_pixel_rate: Optional[Fraction] = None,
 ) -> GraphSimResult:
@@ -241,10 +244,14 @@ def simulate_graph(
             for i, s in enumerate(started):
                 resident = bisect.bisect_right(arr_sorted, s) - i
                 peak = max(peak, resident)
-            occupancy.append(JoinOccupancy(
-                join=name, src=src, max_pixels=peak,
-                bound_pixels=plan.buffer_for(name, src).bound_pixels,
-            ))
+            occupancy.append(
+                JoinOccupancy(
+                    join=name,
+                    src=src,
+                    max_pixels=peak,
+                    bound_pixels=plan.buffer_for(name, src).bound_pixels,
+                )
+            )
 
         fill = plan.timing[name].fill_cycles
         out = _decimate(done, spec)

@@ -7,9 +7,14 @@ interpreter that runs the *same* graph as a JAX network —
 
   * ``init_graph_params``  — He-init weights + folded-BN bias per node,
   * ``apply_graph``        — topological forward pass (NHWC),
+  * ``apply_staged``       — the multi-chip execution of a stage
+    partition: each stage's subgraph jitted separately, cut-crossing
+    activations (including skew-buffered shortcut tensors) threaded
+    across stage boundaries,
   * ``quantize_params`` / ``apply_int8`` — the paper's 8-bit datapath,
   * ``default_impls`` / ``kernel_impls`` — XLA ops vs the Pallas KPU /
-    FCU / DW kernels, swappable per layer kind.
+    FCU / DW kernels, swappable per layer kind, with node-keyed
+    ``overrides`` for user-supplied per-node implementations.
 
 Because topology and inference share one description they cannot drift:
 ``apply_graph(check=True)`` re-derives each node's output shape and MAC
@@ -361,6 +366,108 @@ def _check_planned_tile(
         )
 
 
+def _check_single_stream(graph: LayerGraph) -> str:
+    """Require one input and one output node; return the output's name."""
+    inputs = graph.input_nodes
+    outputs = graph.output_nodes
+    if len(inputs) != 1 or len(outputs) != 1:
+        raise GraphExecutionError(
+            f"the executor needs a single-input/single-output graph, got "
+            f"inputs={inputs}, outputs={outputs}"
+        )
+    return outputs[0]
+
+
+def _build_table(
+    *,
+    impls: Optional[Dict[str, Impl]],
+    plan: Optional[Mapping[str, ImplPlan]],
+    overrides: Optional[Mapping[str, Impl]],
+    graph: LayerGraph,
+    interpret: bool,
+    executed: Dict[str, Dict[str, int]],
+) -> Dict[str, Impl]:
+    """Assemble the dispatch table: kind-level defaults, then plan-derived
+    per-node kernels, then kind-level ``impls``, then node-keyed user
+    ``overrides`` (which always win — they are validated against the
+    graph so a typoed node name fails loudly)."""
+    table = default_impls()
+    if plan is not None:
+        table.update(
+            kernel_impls(interpret=interpret, plan=plan, executed=executed)
+        )
+    if impls:
+        table.update(impls)
+    if overrides:
+        unknown = [n for n in overrides if n not in graph]
+        if unknown:
+            raise GraphExecutionError(
+                f"overrides for unknown nodes: {unknown}"
+            )
+        bad = [n for n in overrides if not _is_arith(graph.spec(n))]
+        if bad:
+            raise GraphExecutionError(
+                f"overrides for non-arithmetic (wiring) nodes: {bad}"
+            )
+        table.update(overrides)
+    return table
+
+
+def _run_nodes(
+    graph: LayerGraph,
+    names,
+    values: Dict[str, jax.Array],
+    params: Params,
+    table: Dict[str, Impl],
+    *,
+    x_input: Optional[jax.Array] = None,
+    plan: Optional[Mapping[str, ImplPlan]] = None,
+    executed: Optional[Dict[str, Dict[str, int]]] = None,
+    overridden=frozenset(),
+    check: bool = True,
+) -> None:
+    """Execute ``names`` in order, reading/writing ``values``.
+
+    The shared inner loop of ``apply_graph`` (all nodes at once) and
+    ``apply_staged`` (one stage's subgraph at a time): per-node forward,
+    shape/MAC cross-check, and — on the rate-matched path — the
+    executed-tile-==-plan assertion.  Nodes named in ``overridden`` run
+    a user-supplied impl: they are exempt from the tile assertion
+    unless the override recorded into ``executed`` itself (the shared
+    dict), in which case the record is still validated.
+    """
+    executed = executed if executed is not None else {}
+    for name in names:
+        spec = graph.spec(name)
+        preds = graph.preds(name)
+        if preds:
+            missing = [p for p in preds if p not in values]
+            if missing:
+                raise GraphExecutionError(
+                    f"{name}: operands {missing} not materialized — "
+                    f"producer scheduled in a later stage?"
+                )
+            operands = [values[p] for p in preds]
+        else:
+            if x_input is None:
+                raise GraphExecutionError(
+                    f"{name}: source node executed outside the input stage"
+                )
+            operands = [x_input]
+        p = params.get(name)
+        if _is_arith(spec) and p is None:
+            raise GraphExecutionError(f"{name}: missing parameters")
+        y = _node_forward(spec, operands, p, table)
+        if check:
+            _check_node(spec, p, y)
+        if plan is not None:
+            if name in overridden and executed.get(name) is None:
+                pass  # user-supplied impl; no record => no tile claim
+            else:
+                _check_planned_tile(spec, plan.get(name), executed.get(name))
+        values[name] = y
+
+
 def apply_graph(
     params: Params,
     x: jax.Array,
@@ -368,6 +475,7 @@ def apply_graph(
     *,
     impls: Optional[Dict[str, Impl]] = None,
     plan: Optional[Mapping[str, ImplPlan]] = None,
+    overrides: Optional[Mapping[str, Impl]] = None,
     interpret: bool = True,
     executed: Optional[Dict[str, Dict[str, int]]] = None,
     dtype=jnp.float32,
@@ -389,46 +497,243 @@ def apply_graph(
     ``_check_planned_tile``) — the executable network provably follows
     the DSE.  With ``plan``, the per-node impls win on every arithmetic
     node (``kernel_plan`` tiles all of them), so kind-level ``impls``
-    overrides are shadowed there — pass one or the other, not both;
-    node-name-keyed ``impls`` entries must record into ``executed``
-    themselves (pass the same dict to ``kernel_impls``) or the plan
-    assertion fails.  ``executed``, when given, receives each node's
-    executed tile (an out-param for introspection; a fresh private dict
-    is used otherwise).
+    overrides are shadowed there.
+
+    ``overrides`` is the first-class node-keyed escape hatch: a mapping
+    from node *name* to an impl with the kind-level calling convention.
+    Overrides win over everything, are validated against the graph
+    (unknown or wiring-node names raise), and are exempt from the
+    executed-tile assertion — unless the override records into the
+    shared ``executed`` dict (pass the same dict to ``kernel_impls``),
+    in which case its record is validated like any planned kernel's.
+    ``executed``, when given, receives each node's executed tile (an
+    out-param for introspection; a fresh private dict is used
+    otherwise).
     """
-    inputs = graph.input_nodes
-    outputs = graph.output_nodes
-    if len(inputs) != 1 or len(outputs) != 1:
-        raise GraphExecutionError(
-            f"apply_graph needs a single-input/single-output graph, got "
-            f"inputs={inputs}, outputs={outputs}"
-        )
-    table = default_impls()
+    out_name = _check_single_stream(graph)
     if executed is None:
         executed = {}
-    if plan is not None:
-        table.update(
-            kernel_impls(interpret=interpret, plan=plan, executed=executed)
-        )
-    if impls:
-        table.update(impls)
-
-    x = x.astype(dtype)
+    table = _build_table(
+        impls=impls,
+        plan=plan,
+        overrides=overrides,
+        graph=graph,
+        interpret=interpret,
+        executed=executed,
+    )
     values: Dict[str, jax.Array] = {}
-    for name in graph.topo_order():
-        spec = graph.spec(name)
-        preds = graph.preds(name)
-        operands = [values[pr] for pr in preds] if preds else [x]
-        p = params.get(name)
-        if _is_arith(spec) and p is None:
-            raise GraphExecutionError(f"{name}: missing parameters")
-        y = _node_forward(spec, operands, p, table)
-        if check:
-            _check_node(spec, p, y)
-        if plan is not None:
-            _check_planned_tile(spec, plan.get(name), executed.get(name))
-        values[name] = y
-    return values[outputs[0]]
+    _run_nodes(
+        graph,
+        graph.topo_order(),
+        values,
+        params,
+        table,
+        x_input=x.astype(dtype),
+        plan=plan,
+        executed=executed,
+        overridden=frozenset(overrides or ()),
+        check=check,
+    )
+    return values[out_name]
+
+
+# ==========================================================================
+# Staged (multi-chip) execution of a stage partition
+# ==========================================================================
+
+
+def _stage_io(
+    graph: LayerGraph, partition, out_name: str
+) -> tuple:
+    """Per-stage imports/exports of a ``GraphStagePlan``.
+
+    ``imports[s]``: node names produced in an earlier stage that stage
+    ``s`` consumes (the cut-crossing activations — for a join whose
+    shortcut operand lives upstream, this is the skew-buffered shortcut
+    tensor).  ``exports[s]``: names stage ``s`` must emit across its
+    outgoing cut (plus the graph output on the final stage).
+    """
+    stage_of = partition.stage_index()
+    n_stages = partition.n_stages
+    imports = [set() for _ in range(n_stages)]
+    exports = [set() for _ in range(n_stages)]
+    for v in graph.topo_order():
+        for u in graph.preds(v):
+            if stage_of[u] != stage_of[v]:
+                imports[stage_of[v]].add(u)
+                exports[stage_of[u]].add(u)
+    exports[stage_of[out_name]].add(out_name)
+    return imports, exports
+
+
+def staged_forward(
+    graph: LayerGraph,
+    *,
+    partition,
+    impls: Optional[Dict[str, Impl]] = None,
+    plan: Optional[Mapping[str, ImplPlan]] = None,
+    overrides: Optional[Mapping[str, Impl]] = None,
+    interpret: bool = True,
+    executed: Optional[Dict[str, Dict[str, int]]] = None,
+    dtype=jnp.float32,
+    check: bool = True,
+    jit: bool = True,
+) -> Callable[[Params, jax.Array], Dict[str, jax.Array]]:
+    """Compile the staged pipeline ONCE; returns ``fn(params, x)``.
+
+    The returned callable threads the boundary activations through the
+    per-stage functions (each wrapped in ``jax.jit`` exactly once, so
+    repeated calls — a serving loop, a benchmark timing loop — hit the
+    jit cache instead of retracing every stage per call) and returns
+    the dict of every cut-crossing tensor plus the graph output, keyed
+    by node name.  ``apply_staged`` is the one-shot convenience wrapper.
+    """
+    out_name = _check_single_stream(graph)
+    if hasattr(partition, "stage_plan"):  # a GraphPlan from n_stages=
+        if partition.stage_plan is None:
+            raise GraphExecutionError(
+                "GraphPlan has no stage partition — plan with n_stages=S"
+            )
+        partition = partition.stage_plan
+    if list(partition.order) != graph.topo_order():
+        raise GraphExecutionError(
+            "partition does not cover this graph (node order differs)"
+        )
+    if executed is None:
+        executed = {}
+    table = _build_table(
+        impls=impls,
+        plan=plan,
+        overrides=overrides,
+        graph=graph,
+        interpret=interpret,
+        executed=executed,
+    )
+    overridden = frozenset(overrides or ())
+    imports, exports = _stage_io(graph, partition, out_name)
+
+    stage_fns = []
+    for s in range(partition.n_stages):
+
+        def run_stage(sp, bnd, xin, nodes=partition.stage_nodes(s),
+                      out=tuple(sorted(exports[s]))):
+            values = dict(bnd)
+            _run_nodes(
+                graph,
+                nodes,
+                values,
+                sp,
+                table,
+                x_input=xin,
+                plan=plan,
+                executed=executed,
+                overridden=overridden,
+                check=check,
+            )
+            return {e: values[e] for e in out}
+
+        stage_fns.append(jax.jit(run_stage) if jit else run_stage)
+
+    def forward(params: Params, x: jax.Array) -> Dict[str, jax.Array]:
+        x = x.astype(dtype)
+        boundary: Dict[str, jax.Array] = {}
+        for s, fn in enumerate(stage_fns):
+            nodes = partition.stage_nodes(s)
+            stage_params = {n: params[n] for n in nodes if n in params}
+            bnd_in = {u: boundary[u] for u in imports[s]}
+            boundary.update(fn(stage_params, bnd_in, x if s == 0 else None))
+        return boundary
+
+    return forward
+
+
+def apply_staged(
+    params: Params,
+    x: jax.Array,
+    graph: LayerGraph,
+    *,
+    partition,
+    impls: Optional[Dict[str, Impl]] = None,
+    plan: Optional[Mapping[str, ImplPlan]] = None,
+    overrides: Optional[Mapping[str, Impl]] = None,
+    interpret: bool = True,
+    executed: Optional[Dict[str, Dict[str, int]]] = None,
+    dtype=jnp.float32,
+    check: bool = True,
+    jit: bool = True,
+    check_monolithic: bool = False,
+) -> jax.Array:
+    """Multi-chip forward pass: execute ``graph`` stage by stage.
+
+    ``partition`` is a ``core.stage_partition.GraphStagePlan`` (or a
+    ``core.graph.GraphPlan`` planned with ``n_stages=``, from which the
+    stage plan is taken).  Each stage's subgraph is jitted *separately*
+    (``jit=False`` keeps them eager — then the op sequence is identical
+    to ``apply_graph`` and outputs are bit-exact); activations crossing
+    a cut — including the skew-buffered shortcut tensors of joins whose
+    branch lives in an upstream stage — are threaded across the stage
+    boundaries exactly as the inter-chip stream buffers would carry
+    them.  ``impls`` / ``plan`` / ``overrides`` / ``check`` behave as
+    in ``apply_graph``; the per-node shape/MAC and executed-tile
+    assertions run inside each stage's trace.
+
+    This is the one-shot form: it builds (and jits) the stage pipeline
+    per call.  For repeated inference build the pipeline once with
+    ``staged_forward`` and reuse the returned callable — that is the
+    path whose per-stage jit cache amortizes.
+
+    ``check_monolithic=True`` additionally runs the monolithic
+    ``apply_graph`` on the same inputs and asserts every cut-crossing
+    tensor (and the final output) matches it — the staged execution
+    provably computes the same network.
+    """
+    out_name = _check_single_stream(graph)
+    if executed is None:
+        executed = {}
+    forward = staged_forward(
+        graph,
+        partition=partition,
+        impls=impls,
+        plan=plan,
+        overrides=overrides,
+        interpret=interpret,
+        executed=executed,
+        dtype=dtype,
+        check=check,
+        jit=jit,
+    )
+    boundary = forward(params, x)
+
+    if check_monolithic:
+        table = _build_table(
+            impls=impls,
+            plan=plan,
+            overrides=overrides,
+            graph=graph,
+            interpret=interpret,
+            executed=executed,
+        )
+        mono: Dict[str, jax.Array] = {}
+        _run_nodes(
+            graph,
+            graph.topo_order(),
+            mono,
+            params,
+            table,
+            x_input=x.astype(dtype),
+            plan=plan,
+            executed=executed,
+            overridden=frozenset(overrides or ()),
+            check=False,
+        )
+        for name, val in boundary.items():
+            if not np.allclose(np.asarray(val), np.asarray(mono[name]),
+                               rtol=1e-5, atol=1e-5):
+                raise GraphExecutionError(
+                    f"staged output for {name!r} diverges from the "
+                    f"monolithic apply_graph"
+                )
+    return boundary[out_name]
 
 
 # ==========================================================================
@@ -462,14 +767,27 @@ def apply_int8(
     *,
     impls: Optional[Dict[str, Impl]] = None,
     plan: Optional[Mapping[str, ImplPlan]] = None,
+    overrides: Optional[Mapping[str, Impl]] = None,
+    partition=None,
     interpret: bool = True,
     dtype=jnp.float32,
     check: bool = True,
+    jit: bool = True,
 ) -> jax.Array:
     """Inference with int8 weights dequantized on the fly (sim of the
     FPGA's int8 datapath; activations stay float — activation quant is
     exercised in the kernels' int8 mode).  ``plan`` threads the same
-    rate-matched per-node tiling as ``apply_graph``."""
+    rate-matched per-node tiling as ``apply_graph``; ``overrides`` the
+    same node-keyed impls; ``partition`` routes through the staged
+    multi-chip executor (``apply_staged``) instead of the monolithic
+    pass (``jit`` applies per stage there; it is ignored otherwise)."""
     deq = dequantize_params(q_params, scales, dtype)
+    if partition is not None:
+        return apply_staged(
+            deq, x, graph, partition=partition, impls=impls, plan=plan,
+            overrides=overrides, interpret=interpret, dtype=dtype,
+            check=check, jit=jit,
+        )
     return apply_graph(deq, x, graph, impls=impls, plan=plan,
-                       interpret=interpret, dtype=dtype, check=check)
+                       overrides=overrides, interpret=interpret,
+                       dtype=dtype, check=check)

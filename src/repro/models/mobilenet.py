@@ -219,6 +219,7 @@ def apply(
     *,
     conv_impls: Optional[Dict[str, cnn.Impl]] = None,
     plan=None,
+    overrides=None,
     interpret: bool = True,
     check: bool = True,
 ) -> jax.Array:
@@ -228,11 +229,39 @@ def apply(
     with kernel-backed implementations (see repro.kernels.*.ops and
     ``cnn.kernel_impls``); ``plan`` (a ``GraphPlan.kernel_plan()``
     table) runs the rate-matched path instead — each node's Pallas call
-    tiled per its own DSE choice.
+    tiled per its own DSE choice; ``overrides`` supplies
+    node-name-keyed impls that win over both.
     """
     return cnn.apply_graph(params, x, cfg.graph(), impls=conv_impls,
-                           plan=plan, interpret=interpret,
+                           plan=plan, overrides=overrides,
+                           interpret=interpret,
                            dtype=cfg.dtype, check=check)
+
+
+def apply_staged(
+    params: cnn.Params,
+    x: jax.Array,
+    cfg: MobileNetConfig,
+    *,
+    partition,
+    conv_impls: Optional[Dict[str, cnn.Impl]] = None,
+    plan=None,
+    overrides=None,
+    interpret: bool = True,
+    check: bool = True,
+    jit: bool = True,
+    check_monolithic: bool = False,
+) -> jax.Array:
+    """Multi-chip forward pass over a stage partition (a
+    ``GraphStagePlan`` or a ``GraphPlan`` planned with ``n_stages=``):
+    each stage jitted separately, cut-crossing activations — including
+    the skew-buffered residual shortcuts — threaded across the
+    boundaries.  See ``cnn.apply_staged``."""
+    return cnn.apply_staged(params, x, cfg.graph(), partition=partition,
+                            impls=conv_impls, plan=plan,
+                            overrides=overrides, interpret=interpret,
+                            dtype=cfg.dtype, check=check, jit=jit,
+                            check_monolithic=check_monolithic)
 
 
 # the paper's 8-bit datapath — shared with every CNN family
@@ -240,9 +269,11 @@ quantize_params = cnn.quantize_params
 
 
 def apply_int8(q_params, scales, x, cfg: MobileNetConfig, *,
-               plan=None, interpret: bool = True) -> jax.Array:
+               plan=None, overrides=None, partition=None,
+               interpret: bool = True, jit: bool = True) -> jax.Array:
     """Inference with int8 weights dequantized on the fly (sim of the
     FPGA's int8 datapath; activations stay float — activation quant is
     exercised in the kernels' int8 mode)."""
     return cnn.apply_int8(q_params, scales, x, cfg.graph(), plan=plan,
-                          interpret=interpret, dtype=cfg.dtype)
+                          overrides=overrides, partition=partition,
+                          interpret=interpret, dtype=cfg.dtype, jit=jit)

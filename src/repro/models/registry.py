@@ -148,6 +148,14 @@ class CNNApi:
     ``apply(..., plan=kp)`` / ``apply_int8(..., plan=kp)`` for
     rate-matched per-layer Pallas tiling (vs the uniform
     ``conv_impls=cnn.kernel_impls()`` path).
+
+    ``partition(cfg, input_rate, n_stages, **dse_kwargs)`` is the
+    multi-chip front door: the stage-aware DSE cuts the family's DAG
+    into ``n_stages`` chips (min-bottleneck over DSE-selected mults,
+    cut-crossing skew FIFOs sized as inter-chip stream buffers) and
+    returns the ``GraphPlan`` with ``stage_plan`` / ``stream_bufs``
+    populated.  Feed it to ``apply_staged(params, x, cfg,
+    partition=gp)`` to run each stage as its own jitted subgraph.
     """
 
     family: str
@@ -158,6 +166,8 @@ class CNNApi:
     apply_int8: Callable             # (q_params, scales, x, cfg) -> logits
     graph: Callable                  # (cfg) -> LayerGraph (the DSE's view)
     plan: Callable                   # (cfg, input_rate, **kw) -> ImplPlan table
+    partition: Callable              # (cfg, input_rate, n_stages, **kw) -> GraphPlan
+    apply_staged: Callable           # (params, x, cfg, *, partition, ...)
 
 
 def _kernel_plan(cfg, input_rate, **dse_kwargs):
@@ -166,6 +176,16 @@ def _kernel_plan(cfg, input_rate, **dse_kwargs):
     from repro.core.graph import plan_graph
 
     return plan_graph(cfg.graph(), input_rate, **dse_kwargs).kernel_plan()
+
+
+def _stage_partition(cfg, input_rate, n_stages, **dse_kwargs):
+    """Stage-aware DSE for one family config: the DAG cut into
+    ``n_stages`` chips, with cut-crossing stream buffers sized —
+    the GraphPlan ``models.cnn.apply_staged`` consumes."""
+    from repro.core.graph import plan_graph
+
+    return plan_graph(cfg.graph(), input_rate, n_stages=n_stages,
+                      **dse_kwargs)
 
 
 def _mobilenet_api(version: int) -> CNNApi:
@@ -179,6 +199,8 @@ def _mobilenet_api(version: int) -> CNNApi:
         apply_int8=mobilenet.apply_int8,
         graph=lambda cfg: cfg.graph(),
         plan=_kernel_plan,
+        partition=_stage_partition,
+        apply_staged=mobilenet.apply_staged,
     )
 
 
@@ -192,6 +214,8 @@ def _resnet_api(depth: int) -> CNNApi:
         apply_int8=resnet.apply_int8,
         graph=lambda cfg: cfg.graph(),
         plan=_kernel_plan,
+        partition=_stage_partition,
+        apply_staged=resnet.apply_staged,
     )
 
 

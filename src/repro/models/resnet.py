@@ -125,6 +125,7 @@ def apply(
     *,
     conv_impls: Optional[Dict[str, cnn.Impl]] = None,
     plan=None,
+    overrides=None,
     interpret: bool = True,
     check: bool = True,
 ) -> jax.Array:
@@ -133,17 +134,46 @@ def apply(
     ``conv_impls`` may override {'conv', 'dwconv', 'pointwise', 'dense'}
     with kernel-backed implementations (see ``cnn.kernel_impls``);
     ``plan`` (a ``GraphPlan.kernel_plan()`` table) runs the rate-matched
-    path instead — each node's Pallas call tiled per its own DSE choice.
+    path instead — each node's Pallas call tiled per its own DSE choice;
+    ``overrides`` supplies node-name-keyed impls that win over both.
     """
     return cnn.apply_graph(params, x, cfg.graph(), impls=conv_impls,
-                           plan=plan, interpret=interpret,
+                           plan=plan, overrides=overrides,
+                           interpret=interpret,
                            dtype=cfg.dtype, check=check)
+
+
+def apply_staged(
+    params: cnn.Params,
+    x: jax.Array,
+    cfg: ResNetConfig,
+    *,
+    partition,
+    conv_impls: Optional[Dict[str, cnn.Impl]] = None,
+    plan=None,
+    overrides=None,
+    interpret: bool = True,
+    check: bool = True,
+    jit: bool = True,
+    check_monolithic: bool = False,
+) -> jax.Array:
+    """Multi-chip forward pass over a stage partition (a
+    ``GraphStagePlan`` or a ``GraphPlan`` planned with ``n_stages=``):
+    each stage jitted separately, cut-crossing activations threaded
+    across the boundaries.  See ``cnn.apply_staged``."""
+    return cnn.apply_staged(params, x, cfg.graph(), partition=partition,
+                            impls=conv_impls, plan=plan,
+                            overrides=overrides, interpret=interpret,
+                            dtype=cfg.dtype, check=check, jit=jit,
+                            check_monolithic=check_monolithic)
 
 
 quantize_params = cnn.quantize_params
 
 
 def apply_int8(q_params, scales, x, cfg: ResNetConfig, *,
-               plan=None, interpret: bool = True) -> jax.Array:
+               plan=None, overrides=None, partition=None,
+               interpret: bool = True, jit: bool = True) -> jax.Array:
     return cnn.apply_int8(q_params, scales, x, cfg.graph(), plan=plan,
-                          interpret=interpret, dtype=cfg.dtype)
+                          overrides=overrides, partition=partition,
+                          interpret=interpret, dtype=cfg.dtype, jit=jit)

@@ -1,10 +1,13 @@
 """The bench-regression gate + benchmarks.run CLI plumbing (jax-free)."""
 import json
 import pathlib
+import re
 
 import pytest
 
-from benchmarks.check_regression import compare, load_rows, main
+from benchmarks.check_regression import (
+    DEFAULT_EXCLUDES, compare, load_rows, main,
+)
 from benchmarks.run import parse_only
 
 
@@ -88,11 +91,45 @@ def test_update_refuses_empty_run_and_strips_timing(tmp_path):
     assert rebased == [{"name": "a", "us": 0.0, "derived": "y"}]
 
 
+def test_exclude_filters_rows_from_both_sides(tmp_path):
+    """Timing rows dropped by --exclude neither drift nor count as NEW."""
+    base = _write(tmp_path / "b.json", _rows(
+        ("t/analytic", "x"), ("t/timing", "1.23 GMAC/s")))
+    cur = _write(tmp_path / "c.json", _rows(
+        ("t/analytic", "x"), ("t/timing", "4.56 GMAC/s"),
+        ("t/batch_sweep", "b1 9.9")))
+    assert main(["--baseline", base, "--current", cur]) == 1  # unfiltered
+    assert main(["--baseline", base, "--current", cur,
+                 "--exclude", "/timing", "--exclude", "/batch_sweep"]) == 0
+    # drift in a *kept* row still fails under the same excludes
+    drift = _write(tmp_path / "d.json", _rows(
+        ("t/analytic", "CHANGED"), ("t/timing", "7 GMAC/s")))
+    assert main(["--baseline", base, "--current", drift,
+                 "--exclude", "/timing", "--exclude", "/batch_sweep"]) == 1
+
+
+def test_exclude_applies_to_update(tmp_path):
+    """--update with --exclude never pins excluded rows in the baseline,
+    and the shrink check ignores them too."""
+    base = _write(tmp_path / "b.json", _rows(("t/analytic", "x")))
+    cur = _write(tmp_path / "c.json", _rows(
+        ("t/analytic", "y"), ("t/timing", "1.2 GMAC/s")))
+    assert main(["--baseline", base, "--current", cur,
+                 "--exclude", "/timing", "--update"]) == 0
+    rebased = json.loads((tmp_path / "b.json").read_text())
+    assert [r["name"] for r in rebased] == ["t/analytic"]
+
+
 def test_committed_baseline_is_selfconsistent():
-    """The committed baseline parses and covers the three analytic tables."""
+    """The committed baseline parses and covers the analytic tables,
+    including table4/5's deterministic rows but none of the timing rows
+    the CI gate excludes."""
     repo = pathlib.Path(__file__).resolve().parents[2]
     rows = load_rows(str(repo / "benchmarks" / "baselines"
                          / "analytic_tables.json"))
     prefixes = {name.split("/")[0] for name in rows}
-    assert {"table1", "table2", "table3"} <= prefixes
-    assert sum(len(v) for v in rows.values()) >= 70
+    assert {"table1", "table2", "table3", "table4", "table5"} <= prefixes
+    assert sum(len(v) for v in rows.values()) >= 100
+    # the CI gate's timing-row patterns must never be pinned in the file
+    assert not [n for n in rows
+                if any(re.search(u, n) for u in DEFAULT_EXCLUDES)]

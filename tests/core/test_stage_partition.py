@@ -1,0 +1,274 @@
+"""DAG stage partitioning: cut legality, DP optimality vs brute force,
+cut-crossing stream buffers, and chip-allocation edge cases."""
+import itertools
+from fractions import Fraction as F
+
+import pytest
+
+from repro.core import (
+    LayerSpec, estimate_graph, estimate_stages, plan_graph, plan_partitioned,
+)
+from repro.core.graph import LayerGraph
+from repro.core.stage_partition import (
+    allocate_chips, legal_cut_positions, partition_graph, plan_node_costs,
+    service_rates,
+)
+
+
+def _pw(name, d_in, d_out, hw=(8, 8)):
+    return LayerSpec(name=name, kind="pointwise", d_in=d_in, d_out=d_out,
+                     in_hw=hw, out_hw=hw)
+
+
+def _diamond(depth=3, d=16, hw=(8, 8)):
+    """Branch at 'stem', a deep trunk vs identity shortcut, 'join' add."""
+    g = LayerGraph()
+    prev = g.add(_pw("stem", d, d, hw))
+    stem = prev
+    for i in range(depth):
+        prev = g.add(_pw(f"trunk{i}", d, d, hw), [prev])
+    g.add(LayerSpec(name="join", kind="add", d_in=d, d_out=d,
+                    in_hw=hw, out_hw=hw), [prev, stem])
+    return g
+
+
+def _two_diamonds(d=16, hw=(8, 8)):
+    """Two residual blocks chained, with a head — 10 nodes, 2 shortcuts."""
+    g = LayerGraph()
+    prev = g.add(_pw("stem", d, d, hw))
+    for b in range(2):
+        block_in = prev
+        for i in range(3):
+            prev = g.add(_pw(f"b{b}t{i}", d, d, hw), [prev])
+        prev = g.add(LayerSpec(name=f"b{b}add", kind="add", d_in=d, d_out=d,
+                               in_hw=hw, out_hw=hw), [prev, block_in])
+    g.add(_pw("head", d, d // 2, hw), [prev])
+    return g
+
+
+# ---------------------------------------------------------------------------
+# cut legality
+# ---------------------------------------------------------------------------
+
+def test_shortcut_may_span_a_dag_cut():
+    """The lift's whole point: a cut inside a residual block is legal on
+    the DAG formulation — the shortcut edge spanning it is recorded and
+    becomes a stream buffer — while the chain formulation has no legal
+    position there at all."""
+    g = _diamond(depth=3)
+    plan = plan_graph(g, F(2), n_stages=2)
+    sp = plan.stage_plan
+    # every interior position of a pure diamond is crossed by >= 2 edges
+    assert not sp.chain_legal
+    cut = sp.cut_edges[0]
+    assert len(cut) == 2
+    assert ("stem", "join") in cut        # the shortcut spans the cut
+    # chain formulation: no single-stream position exists in a diamond
+    assert legal_cut_positions(g, chain_only=True) == []
+    with pytest.raises(ValueError):
+        plan_graph(g, F(2), n_stages=2, chain_cuts=True)
+
+
+def test_chain_positions_subset_and_linear_equivalence():
+    g = _two_diamonds()
+    chain_pos = legal_cut_positions(g, chain_only=True)
+    dag_pos = legal_cut_positions(g)
+    assert set(chain_pos) <= set(dag_pos)
+    assert len(dag_pos) == len(g) - 1     # every interior position
+    # between the blocks and around the head the stream narrows to one edge
+    assert chain_pos != []
+
+    lin = LayerGraph.from_chain([_pw("a", 8, 8), _pw("b", 8, 8),
+                                 _pw("c", 8, 8)])
+    assert legal_cut_positions(lin, chain_only=True) == \
+        legal_cut_positions(lin) == [1, 2]
+
+
+def test_partition_graph_validates_costs():
+    g = _diamond()
+    with pytest.raises(ValueError):
+        partition_graph(g, {"stem": 1.0}, 2)
+
+
+# ---------------------------------------------------------------------------
+# DP optimality vs brute force
+# ---------------------------------------------------------------------------
+
+def _brute_force(graph, costs, n_stages, positions):
+    order = graph.topo_order()
+    cost_list = [costs[n] for n in order]
+    prefix = [0.0]
+    for c in cost_list:
+        prefix.append(prefix[-1] + c)
+    best = None
+    for combo in itertools.combinations(positions, n_stages - 1):
+        bounds = (0, *combo, len(order))
+        bot = max(prefix[bounds[s + 1]] - prefix[bounds[s]]
+                  for s in range(n_stages))
+        if best is None or bot < best:
+            best = bot
+    return best
+
+
+@pytest.mark.parametrize("n_stages", [2, 3, 4])
+def test_dp_bottleneck_optimal_vs_brute_force(n_stages):
+    g = _two_diamonds()
+    plan = plan_graph(g, F(2))
+    costs = plan_node_costs(plan)
+    sp = partition_graph(g, costs, n_stages)
+    brute = _brute_force(g, costs, n_stages, legal_cut_positions(g))
+    assert sp.bottleneck == pytest.approx(brute)
+
+
+def test_dp_min_cut_among_bottleneck_optima():
+    """Among all bottleneck-optimal partitions, the DP picks one whose
+    total cut width (bits crossing the boundaries) is minimal."""
+    g = _two_diamonds()
+    plan = plan_graph(g, F(2))
+    costs = plan_node_costs(plan)
+    order = g.topo_order()
+    idx = {n: i for i, n in enumerate(order)}
+    positions = legal_cut_positions(g)
+
+    def cut_width(pos):
+        return sum(8 * g.spec(u).d_out for v in order for u in g.preds(v)
+                   if idx[u] < pos <= idx[v])
+
+    sp = partition_graph(g, costs, 3)
+    prefix = [0.0]
+    for n in order:
+        prefix.append(prefix[-1] + costs[n])
+    best_cut = None
+    for combo in itertools.combinations(positions, 2):
+        bounds = (0, *combo, len(order))
+        bot = max(prefix[bounds[s + 1]] - prefix[bounds[s]] for s in range(3))
+        if bot <= sp.bottleneck + 1e-9:
+            width = sum(cut_width(p) for p in combo)
+            best_cut = width if best_cut is None else min(best_cut, width)
+    got = sum(cut_width(b) for b in sp.boundaries[1:-1])
+    assert got == best_cut
+
+
+def test_stage_plan_structure():
+    g = _two_diamonds()
+    plan = plan_graph(g, F(2), n_stages=3)
+    sp = plan.stage_plan
+    assert sp.n_stages == 3
+    # stages partition the topo order contiguously
+    flat = [n for s in range(3) for n in sp.stage_nodes(s)]
+    assert flat == g.topo_order()
+    stage_of = sp.stage_index()
+    assert all(stage_of[n] == s for s in range(3)
+               for n in sp.stage_nodes(s))
+    assert sp.balance == pytest.approx(
+        (sum(sp.stage_cost) / 3) / sp.bottleneck)
+    assert sum(plan.stage_mults()) == plan.total_mults
+
+
+# ---------------------------------------------------------------------------
+# cut-crossing stream buffers
+# ---------------------------------------------------------------------------
+
+def test_stream_buffer_from_spanning_shortcut():
+    """A skew FIFO whose branch and join land in different stages becomes
+    a stream buffer at least as deep as the monolithic skew bound."""
+    g = _diamond(depth=4)
+    plan = plan_graph(g, F(2), n_stages=2)
+    sbs = {(b.src, b.dst): b for b in plan.stream_bufs}
+    assert ("stem", "join") in sbs
+    sb = sbs[("stem", "join")]
+    jb = plan.buffer_for("join", "stem")
+    assert sb.skew_cycles == jb.skew_cycles
+    assert sb.bound_pixels > jb.bound_pixels      # + link slack
+    assert sb.crossings == 1
+    assert sb.bits > 0
+
+
+def test_stream_buffer_link_slack_scales():
+    g = _diamond(depth=4)
+    shallow = plan_graph(g, F(2), n_stages=2, link_cycles=8)
+    deep = plan_graph(g, F(2), n_stages=2, link_cycles=512)
+    assert deep.stage_plan.boundaries == shallow.stage_plan.boundaries
+    assert deep.total_stream_bits > shallow.total_stream_bits
+
+
+def test_estimate_stages_sums_to_whole():
+    g = _two_diamonds()
+    plan = plan_graph(g, F(2), n_stages=3)
+    whole = estimate_graph(plan)
+    parts = estimate_stages(plan)
+    assert len(parts) == 3
+    total = parts[0]
+    for e in parts[1:]:
+        total = total + e
+    for field in ("lut", "ff", "bram36", "uram", "dsp"):
+        assert getattr(total, field) == pytest.approx(getattr(whole, field))
+    # the partition prices the cut: staged estimate is never cheaper
+    mono = plan_graph(g, F(2))
+    assert whole.lut > estimate_graph(mono).lut
+
+
+def test_cut_rates_and_plan_partitioned():
+    g = _two_diamonds()
+    plan = plan_partitioned(g, F(2), 3)
+    assert plan.stage_plan is not None
+    rates = plan.cut_rates()
+    assert len(rates) == 2
+    assert all(r > 0 for r in rates)
+    assert not any(plan.stage_infeasible_nodes())
+    # a plan without stages refuses stage introspection
+    from repro.core import GraphError
+    with pytest.raises(GraphError):
+        plan_graph(g, F(2)).stage_mults()
+
+
+# ---------------------------------------------------------------------------
+# allocate_chips edge cases
+# ---------------------------------------------------------------------------
+
+def test_allocate_chips_budget_exactly_at_arrival_rate():
+    """Total budget that only just covers the arrival rate: proportional
+    allocation must hit every stage exactly, no slack anywhere."""
+    cost = [4.0, 2.0, 2.0]
+    chips = allocate_chips(cost, 8)
+    assert chips == [4, 2, 2]
+    rates = service_rates(cost, chips, 1.0)
+    assert min(rates) == pytest.approx(1.0)     # exactly the arrival rate
+
+
+def test_allocate_chips_indivisible_mesh_rows():
+    """10 chips in quanta of 3: one chip is stranded (9 allocated) rather
+    than breaking the mesh-row granularity."""
+    chips = allocate_chips([1.0, 1.0, 1.0], 10, granularity=3)
+    assert sum(chips) == 9
+    assert all(c % 3 == 0 for c in chips)
+    with pytest.raises(ValueError):             # 2 quanta < 3 stages
+        allocate_chips([1.0, 1.0, 1.0], 8, granularity=3)
+
+
+def test_allocate_chips_heterogeneous_budgets():
+    cost = [100.0, 50.0, 25.0, 25.0]
+    # uncapped would give stage 0 half the chips; cap it at 2
+    chips = allocate_chips(cost, 16, budgets=[2, 16, 16, 16])
+    assert chips[0] == 2
+    assert sum(chips) == 16                     # remainder redistributed
+    assert chips[1] >= chips[2]
+    with pytest.raises(ValueError):             # budget below one quantum
+        allocate_chips(cost, 16, granularity=2, budgets=[1, 16, 16, 16])
+    with pytest.raises(ValueError):             # wrong budget arity
+        allocate_chips(cost, 16, budgets=[8, 8])
+
+
+def test_allocate_chips_all_capped_leaves_chips_stranded():
+    chips = allocate_chips([1.0, 1.0], 10, budgets=[3, 3])
+    assert chips == [3, 3]
+
+
+def test_allocate_chips_never_exceeds_budget():
+    """Regression: a dominant stage plus several floor-bumped tiny stages
+    used to overspend the budget (pull-back bailed on the first stage
+    already at its 1-quantum floor instead of shrinking the big one)."""
+    chips = allocate_chips([10.0, 0.1, 0.1, 0.1], 4)
+    assert chips == [1, 1, 1, 1]
+    for total in (4, 5, 6, 7, 8):
+        assert sum(allocate_chips([10.0, 0.1, 0.1, 0.1], total)) <= total
