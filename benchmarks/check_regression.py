@@ -1,9 +1,12 @@
 """Benchmark-regression gate for the analytic tables (CI: bench-regression).
 
-The DSE/resource-model numbers in tables 1-3 and 5 are exact,
+The DSE/resource-model numbers in tables 1-3, 5 and 6 are exact,
 deterministic functions of the paper's equations — any drift is a real
 behaviour change, so the gate is an **exact match** on the ``derived``
 column (the ``us`` timing column is machine-dependent and ignored).
+Table 6's serving rows come from the streaming engine's deterministic
+tick model (exact rational clock, no wall-clock), so they are pinned in
+full.
 
 Benchmark modules may mix deterministic and timing rows (table4's
 analytic/dse rows are exact while its ``tiling_modes`` GMAC/s and batch
@@ -15,7 +18,7 @@ which rows are timing rows; ``--exclude REGEX`` (repeatable) replaces
 it for one invocation.
 
 Usage:
-  python -m benchmarks.run --only table1,table2,table3,table4,table5 \
+  python -m benchmarks.run --only table1,table2,table3,table4,table5,table6 \
       --json current.json
   python -m benchmarks.check_regression \
       --baseline benchmarks/baselines/analytic_tables.json \

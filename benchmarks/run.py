@@ -10,6 +10,10 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
   table5_partition      — multi-chip DAG stage partitioning: bottleneck,
                           balance, cut-crossing stream buffers, chain-DP
                           baseline for all four families at S in {2,3,4}
+  table6_serving        — streaming serving engine: BestRate admission,
+                          throughput/latency ticks, occupancy vs the
+                          analytical bound, queue depth vs caps across
+                          an arrival sweep (deterministic tick model)
   rate_aware_serving    — the technique applied to LM serving (DESIGN §3)
   kernel_bench          — Pallas kernels vs oracles + tile stats
   roofline              — 40-cell roofline summary (needs dry-run JSONs)
@@ -37,6 +41,7 @@ MODULES = [
     ("table3", "benchmarks.table3_dag_buffers"),
     ("table4", "benchmarks.table4_resnet_e2e"),
     ("table5", "benchmarks.table5_partition"),
+    ("table6", "benchmarks.table6_serving"),
     ("rate_aware", "benchmarks.rate_aware_serving"),
     ("kernels", "benchmarks.kernel_bench"),
     ("roofline", "benchmarks.roofline"),

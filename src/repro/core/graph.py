@@ -423,6 +423,7 @@ class ImplPlan:
     demand: Fraction  # decimation-adjusted features/clock
     q_in: Fraction  # pixels/clock entering the node
     tile: Optional[TileChoice]  # None for non-arithmetic (wiring) kinds
+    batch: Optional[int] = None  # serving batch the tile's bm was pinned to
 
     @property
     def has_kernel(self) -> bool:
@@ -533,6 +534,7 @@ class GraphPlan:
         dtype_bytes: int = 4,
         tpu: TPUSpec = TPU_V5E,
         vmem_fraction: float = 0.5,
+        batch: Optional[int] = None,
     ) -> "OrderedDict[str, ImplPlan]":
         """Lower this hardware plan to the executor's per-node contract.
 
@@ -541,6 +543,14 @@ class GraphPlan:
         ``core.tpu_tiles.select_tile_for_impl`` (j -> bk floor,
         d_out/h -> bn floor, grown to MXU alignment — capacity only ever
         increases, so Eq. 9 survives).  Keys preserve topological order.
+
+        ``batch`` pins the pixel tile bm to a known serving micro-batch
+        (the streaming engine passes its micro-batch size here): each
+        tile's bm becomes a divisor of the batch-flattened runtime m, so
+        the fcu kernels execute the *planned* bm instead of re-fitting
+        it, and the executor asserts bm too (``ImplPlan.batch`` records
+        the pin).  Without ``batch`` bm only bounds the runtime re-fit,
+        exactly as before.
         """
         plans: "OrderedDict[str, ImplPlan]" = OrderedDict()
         for name, impl in self.impls.items():
@@ -552,6 +562,7 @@ class GraphPlan:
                     dtype_bytes=dtype_bytes,
                     spec=tpu,
                     vmem_fraction=vmem_fraction,
+                    batch=batch,
                 )
             plans[name] = ImplPlan(
                 name=name,
@@ -562,6 +573,7 @@ class GraphPlan:
                 demand=impl.demand,
                 q_in=self.timing[name].q_in,
                 tile=tile,
+                batch=batch,
             )
         return plans
 

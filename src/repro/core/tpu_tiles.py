@@ -162,12 +162,30 @@ def plan_dim_tile(dim: int, floor: int, lane: int) -> int:
     return dim
 
 
+def pinned_bm(m: int, bk: int, bn: int, *, dtype_bytes: int, budget: int) -> int:
+    """Largest divisor of ``m`` (capped at 512) whose working set fits the
+    VMEM budget — the batch-pinned pixel tile.
+
+    Because the result *divides* m, the runtime ``_pick_bm`` re-fit in the
+    fcu adapter is the identity: the executed bm equals the planned bm
+    exactly (the ROADMAP's "plan-aware bm" item).  Falls back to the
+    largest fitting divisor, or the smallest divisor when even that
+    overflows (degenerate budgets).
+    """
+    cands = [d for d in divisors(m) if d <= min(m, 512)]
+    for bm in reversed(cands):
+        if (bm * bk + bk * bn + bm * bn) * dtype_bytes * 2 <= budget:
+            return bm
+    return cands[0] if cands else 1
+
+
 def select_tile_for_impl(
     impl: LayerImpl,
     *,
     dtype_bytes: int = 4,
     spec: TPUSpec = TPU_V5E,
     vmem_fraction: float = 0.5,
+    batch: Optional[int] = None,
 ) -> TileChoice:
     """Map one node's DSE implementation onto its Pallas tiling.
 
@@ -196,6 +214,14 @@ def select_tile_for_impl(
     reports its working set but cannot enforce the budget (the kernel
     streams the whole padded frame per grid step; spatial blocking is a
     ROADMAP follow-on).
+
+    ``batch`` pins the pixel tile to the serving shape (the ROADMAP's
+    "plan-aware bm" item): with the micro-batch size known, m becomes
+    ``batch * out_px`` and bm is chosen as a *divisor* of that runtime m
+    (``pinned_bm``), so the kernels' batch-flattened re-fit keeps the
+    planned value exactly instead of merely bounding it.  Without
+    ``batch`` the m-agnostic behaviour is unchanged: bm only bounds the
+    runtime re-fit.
     """
     lay = impl.layer
     if lay.kind not in ("conv", "dwconv", "pointwise", "dense"):
@@ -205,6 +231,10 @@ def select_tile_for_impl(
         )
     lane = spec.lanes
     m = lay.out_hw[0] * lay.out_hw[1]
+    if batch is not None:
+        if batch < 1:
+            raise ValueError(f"{lay.name}: batch must be >= 1, got {batch}")
+        m *= batch
     r_phase = impl.demand / impl.p_raw
 
     if lay.kind == "dwconv":
@@ -223,11 +253,14 @@ def select_tile_for_impl(
     bk = plan_dim_tile(lay.d_in, min(impl.j, lay.d_in), lane)
     bn = plan_dim_tile(lay.d_out, max(1, lay.d_out // impl.h), lane)
     budget = int(spec.vmem_bytes * vmem_fraction)
-    bm = min(m, 512)
-    while bm > spec.sublanes:
-        if (bm * bk + bk * bn + bm * bn) * dtype_bytes * 2 <= budget:
-            break
-        bm //= 2
+    if batch is not None:
+        bm = pinned_bm(m, bk, bn, dtype_bytes=dtype_bytes, budget=budget)
+    else:
+        bm = min(m, 512)
+        while bm > spec.sublanes:
+            if (bm * bk + bk * bn + bm * bn) * dtype_bytes * 2 <= budget:
+                break
+            bm //= 2
     h_tile = max(1, lay.d_out // bn)
     jh_holds_eq9 = Fraction(impl.j, max(1, impl.h)) >= r_phase
     if jh_holds_eq9 and Fraction(bk, h_tile) < r_phase:

@@ -10,10 +10,15 @@ from the paper's HJ exploration, two ways:
     receive one node's plan-derived ``TileChoice``
     (``GraphPlan.kernel_plan``) and execute exactly that (bk, bn); the
     pixel tile bm re-fits the runtime m (batch and spatial dims are
-    flattened together, so m varies with batch while bk/bn do not).  The
-    optional ``record`` callback reports the executed tile back to the
-    caller (models/cnn.py asserts it against the plan per node).
+    flattened together, so m varies with batch while bk/bn do not) —
+    unless the plan was pinned to a serving batch
+    (``kernel_plan(batch=B)``), in which case the planned bm *divides*
+    the runtime m and the re-fit is the identity.  The optional
+    ``record`` callback reports the executed tile back to the caller
+    (models/cnn.py asserts it against the plan per node, including bm on
+    the batch-pinned path).
 """
+
 from __future__ import annotations
 
 import functools
@@ -53,8 +58,7 @@ def fcu_matmul(
         m *= s
     xm = x.reshape(m, d_in)
     if bm is None or bk is None or bn is None:
-        t = select_tile(m, d_in, d_out, rate=rate,
-                        dtype_bytes=x.dtype.itemsize)
+        t = select_tile(m, d_in, d_out, rate=rate, dtype_bytes=x.dtype.itemsize)
         bk = bk or t.bk
         bn = bn or t.bn
         bm = bm or _pick_bm(m, t.bm)
@@ -77,12 +81,18 @@ def _fcu_impl(
         for s in x.shape[:-1]:
             m *= s
         bm = _pick_bm(m, tile.bm)
-        y = fcu_matmul(x, w, interpret=interpret,
-                       bm=bm, bk=tile.bk, bn=tile.bn)
+        y = fcu_matmul(x, w, interpret=interpret, bm=bm, bk=tile.bk, bn=tile.bn)
         if record is not None:
-            record(bk=tile.bk, bn=tile.bn, bm=bm,
-                   d_in=x.shape[-1], d_out=w.shape[-1], m=m)
+            record(
+                bk=tile.bk,
+                bn=tile.bn,
+                bm=bm,
+                d_in=x.shape[-1],
+                d_out=w.shape[-1],
+                m=m,
+            )
         return y
+
     return impl
 
 

@@ -11,6 +11,10 @@ interpreter that runs the *same* graph as a JAX network —
     partition: each stage's subgraph jitted separately, cut-crossing
     activations (including skew-buffered shortcut tensors) threaded
     across stage boundaries,
+  * ``stage_functions``    — the per-stage callables underneath
+    ``staged_forward``, exposed individually so the streaming serving
+    engine (serving/cnn_stream.py) can keep one micro-batch per stage
+    in flight,
   * ``quantize_params`` / ``apply_int8`` — the paper's 8-bit datapath,
   * ``default_impls`` / ``kernel_impls`` — XLA ops vs the Pallas KPU /
     FCU / DW kernels, swappable per layer kind, with node-keyed
@@ -335,7 +339,11 @@ def _check_planned_tile(
     trace time.  The pixel tile bm is allowed to re-fit the runtime m
     (batch is flattened into it); the channel tiles (bk, bn) — the
     paper's j and d_out/h images — must match the plan exactly and
-    divide the live array dims.
+    divide the live array dims.  When the plan was pinned to a serving
+    batch (``kernel_plan(batch=B)`` — ``ImplPlan.batch`` set), the fcu
+    kinds additionally must execute the planned bm on the planned m:
+    the micro-batcher promised that shape, so a mismatch is a serving
+    bug, not a legal re-fit.
     """
     if node_plan is None:
         raise GraphExecutionError(
@@ -364,6 +372,19 @@ def _check_planned_tile(
             f"{spec.name}: planned tile (bk={t.bk}, bn={t.bn}) does not "
             f"divide live dims ({d_in}, {d_out})"
         )
+    if node_plan.batch is not None and spec.kind in ("pointwise", "dense"):
+        want_m = node_plan.batch * spec.out_hw[0] * spec.out_hw[1]
+        if got.get("m") != want_m:
+            raise GraphExecutionError(
+                f"{spec.name}: plan pinned to batch {node_plan.batch} "
+                f"(m={want_m}) but the kernel saw m={got.get('m')} — "
+                f"micro-batch the inputs to the planned size"
+            )
+        if got.get("bm") != t.bm:
+            raise GraphExecutionError(
+                f"{spec.name}: executed bm={got.get('bm')} != batch-pinned "
+                f"plan bm={t.bm}"
+            )
 
 
 def _check_single_stream(graph: LayerGraph) -> str:
@@ -566,7 +587,7 @@ def _stage_io(
     return imports, exports
 
 
-def staged_forward(
+def stage_functions(
     graph: LayerGraph,
     *,
     partition,
@@ -575,18 +596,22 @@ def staged_forward(
     overrides: Optional[Mapping[str, Impl]] = None,
     interpret: bool = True,
     executed: Optional[Dict[str, Dict[str, int]]] = None,
-    dtype=jnp.float32,
     check: bool = True,
     jit: bool = True,
-) -> Callable[[Params, jax.Array], Dict[str, jax.Array]]:
-    """Compile the staged pipeline ONCE; returns ``fn(params, x)``.
+) -> "StagePipeline":
+    """Compile the per-stage callables of a stage partition — the unit
+    the streaming serving engine (``serving/cnn_stream.py``) pipelines.
 
-    The returned callable threads the boundary activations through the
-    per-stage functions (each wrapped in ``jax.jit`` exactly once, so
-    repeated calls — a serving loop, a benchmark timing loop — hit the
-    jit cache instead of retracing every stage per call) and returns
-    the dict of every cut-crossing tensor plus the graph output, keyed
-    by node name.  ``apply_staged`` is the one-shot convenience wrapper.
+    ``staged_forward`` runs these stages back-to-back for one input;
+    the serving engine instead keeps one micro-batch *per stage* in
+    flight, so it needs the stages as separately drivable functions.
+    Each stage fn has signature ``fn(stage_params, boundary_in, x)``
+    where ``boundary_in`` maps the stage's imported (cut-crossing) node
+    names to tensors and ``x`` is the network input for stage 0 (None
+    elsewhere); it returns the dict of tensors the stage exports across
+    its outgoing cut (plus the graph output on the final stage).  Each
+    fn is wrapped in ``jax.jit`` exactly once (``jit=True``), so a
+    serving loop hits the jit cache every tick.
     """
     out_name = _check_single_stream(graph)
     if hasattr(partition, "stage_plan"):  # a GraphPlan from n_stages=
@@ -634,14 +659,95 @@ def staged_forward(
 
         stage_fns.append(jax.jit(run_stage) if jit else run_stage)
 
+    return StagePipeline(
+        partition=partition,
+        stage_fns=stage_fns,
+        imports=imports,
+        exports=exports,
+        out_name=out_name,
+    )
+
+
+class StagePipeline:
+    """The compiled stages of a partition plus their boundary wiring.
+
+    ``run_stage(s, params, boundary, x)`` executes one stage against a
+    per-batch ``boundary`` dict (imported tensors in, exported tensors
+    merged back in) — the serving engine calls this as micro-batches
+    advance; ``staged_forward``'s returned callable is just the s-loop.
+    """
+
+    def __init__(self, *, partition, stage_fns, imports, exports, out_name):
+        self.partition = partition
+        self.stage_fns = stage_fns
+        self.imports = imports
+        self.exports = exports
+        self.out_name = out_name
+
+    @property
+    def n_stages(self) -> int:
+        return self.partition.n_stages
+
+    def stage_params(self, s: int, params: Params) -> Params:
+        nodes = self.partition.stage_nodes(s)
+        return {n: params[n] for n in nodes if n in params}
+
+    def run_stage(
+        self,
+        s: int,
+        params: Params,
+        boundary: Dict[str, jax.Array],
+        x: Optional[jax.Array] = None,
+    ) -> Dict[str, jax.Array]:
+        bnd_in = {u: boundary[u] for u in self.imports[s]}
+        out = self.stage_fns[s](
+            self.stage_params(s, params), bnd_in, x if s == 0 else None
+        )
+        boundary.update(out)
+        return boundary
+
+
+def staged_forward(
+    graph: LayerGraph,
+    *,
+    partition,
+    impls: Optional[Dict[str, Impl]] = None,
+    plan: Optional[Mapping[str, ImplPlan]] = None,
+    overrides: Optional[Mapping[str, Impl]] = None,
+    interpret: bool = True,
+    executed: Optional[Dict[str, Dict[str, int]]] = None,
+    dtype=jnp.float32,
+    check: bool = True,
+    jit: bool = True,
+) -> Callable[[Params, jax.Array], Dict[str, jax.Array]]:
+    """Compile the staged pipeline ONCE; returns ``fn(params, x)``.
+
+    The returned callable threads the boundary activations through the
+    per-stage functions (each wrapped in ``jax.jit`` exactly once, so
+    repeated calls — a serving loop, a benchmark timing loop — hit the
+    jit cache instead of retracing every stage per call) and returns
+    the dict of every cut-crossing tensor plus the graph output, keyed
+    by node name.  ``apply_staged`` is the one-shot convenience wrapper;
+    ``stage_functions`` exposes the stages individually for the
+    streaming serving engine's software pipeline.
+    """
+    pipeline = stage_functions(
+        graph,
+        partition=partition,
+        impls=impls,
+        plan=plan,
+        overrides=overrides,
+        interpret=interpret,
+        executed=executed,
+        check=check,
+        jit=jit,
+    )
+
     def forward(params: Params, x: jax.Array) -> Dict[str, jax.Array]:
         x = x.astype(dtype)
         boundary: Dict[str, jax.Array] = {}
-        for s, fn in enumerate(stage_fns):
-            nodes = partition.stage_nodes(s)
-            stage_params = {n: params[n] for n in nodes if n in params}
-            bnd_in = {u: boundary[u] for u in imports[s]}
-            boundary.update(fn(stage_params, bnd_in, x if s == 0 else None))
+        for s in range(pipeline.n_stages):
+            pipeline.run_stage(s, params, boundary, x if s == 0 else None)
         return boundary
 
     return forward

@@ -156,6 +156,13 @@ class CNNApi:
     returns the ``GraphPlan`` with ``stage_plan`` / ``stream_bufs``
     populated.  Feed it to ``apply_staged(params, x, cfg,
     partition=gp)`` to run each stage as its own jitted subgraph.
+
+    ``serve(params, frames, cfg, input_rate=..., n_stages=S, ...)`` is
+    the streaming front door (``serving.cnn_stream``): plan at
+    ``input_rate``, partition into ``n_stages``, micro-batch admitted
+    frames to the batch-pinned kernel tiles, and pump them through the
+    per-stage pipeline with BestRate admission control and bounded
+    inter-stage queues.  Returns ``(outputs, ServeReport)``.
     """
 
     family: str
@@ -168,6 +175,16 @@ class CNNApi:
     plan: Callable                   # (cfg, input_rate, **kw) -> ImplPlan table
     partition: Callable              # (cfg, input_rate, n_stages, **kw) -> GraphPlan
     apply_staged: Callable           # (params, x, cfg, *, partition, ...)
+    serve: Callable                  # (params, frames, cfg, **kw) -> (out, report)
+
+
+def _serve(params, frames, cfg, **kwargs):
+    """Streaming serving for one family config — the request-level
+    continuous-flow engine (``serving.cnn_stream.serve_frames``)."""
+    from repro.serving.cnn_stream import serve_frames
+
+    kwargs.setdefault("dtype", cfg.dtype)
+    return serve_frames(cfg.graph(), params, frames, **kwargs)
 
 
 def _kernel_plan(cfg, input_rate, **dse_kwargs):
@@ -201,6 +218,7 @@ def _mobilenet_api(version: int) -> CNNApi:
         plan=_kernel_plan,
         partition=_stage_partition,
         apply_staged=mobilenet.apply_staged,
+        serve=_serve,
     )
 
 
@@ -216,6 +234,7 @@ def _resnet_api(depth: int) -> CNNApi:
         plan=_kernel_plan,
         partition=_stage_partition,
         apply_staged=resnet.apply_staged,
+        serve=_serve,
     )
 
 

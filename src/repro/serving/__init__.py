@@ -1,1 +1,34 @@
-"""repro subpackage."""
+"""Serving engines.
+
+Two front doors, one admission calculus (Eq. 9: admit only into free
+capacity):
+
+* ``Engine`` — continuous batching of token streams (LM/SSM/hybrid
+  families) over a slotted KV cache;
+* ``CNNStreamEngine`` — data-rate-aware streaming of CNN frame
+  pipelines (the four CNN registry families) with BestRate admission,
+  micro-batching to the planned kernel tiles, and bounded inter-stage
+  queues (``serve_frames`` / ``registry.CNNApi.serve`` are the
+  one-call forms).
+"""
+
+from repro.serving.cnn_stream import (
+    CNNStreamEngine,
+    FrameRequest,
+    ServeReport,
+    ServingError,
+    StageReport,
+    serve_frames,
+)
+from repro.serving.engine import Engine, Request
+
+__all__ = [
+    "CNNStreamEngine",
+    "Engine",
+    "FrameRequest",
+    "Request",
+    "ServeReport",
+    "ServingError",
+    "StageReport",
+    "serve_frames",
+]

@@ -1,0 +1,751 @@
+"""Data-rate-aware streaming CNN serving: the paper's calculus per request.
+
+The paper's continuous-flow property (Eqs. 7-11) is stated per layer:
+provide every arithmetic unit with data at its input rate and nothing
+ever stalls.  This module lifts the same calculus one level, to the
+*request* stream a serving deployment sees, and drives the multi-chip
+stage partition (``core.stage_partition`` / ``models.cnn.stage_functions``)
+as a software pipeline under load:
+
+* **Service rates are inherited, not re-derived.**  A node of the
+  ``GraphPlan`` absorbs ``capacity`` features/clock (the DSE's Eq. 9
+  choice), so one frame — ``in_px * d_in`` features at that node —
+  occupies it for ``frame_features / capacity`` cycles.  A pipeline
+  stage initiates frames at the pace of its slowest node (the stage's
+  initiation interval), and the *request-level BestRate* is Eq. 10 one
+  level up: the slowest stage's frame rate,
+
+      BestRate = min_s 1 / II_s = input_rate / frame_features
+                 * min_n capacity_n / demand_n   [frames/cycle].
+
+  In tick units (one tick = one frame interval at the plan's input
+  rate) BestRate is exactly ``1 / max_n utilization_n`` — the plan's
+  bottleneck utilization read as request headroom.
+
+* **Admission control = Eq. 9 at the request level.**  Frames arrive at
+  a configurable rate into a request queue; they are admitted into the
+  pipeline only while the bottleneck stage has slack.  Mechanically the
+  admission gate checks space in the stage-0 queue — the inter-stage
+  queues are bounded and every stage blocks when its successor is full,
+  so bottleneck saturation propagates upstream to the gate within a
+  pipeline-depth of batches.  The resulting admitted rate is
+  ``min(arrival_rate, BestRate)``: below BestRate everything is
+  admitted immediately and no stage ever stalls; above it the engine
+  serves at exactly BestRate with the excess parked *outside* the
+  pipeline (the request queue), keeping the in-pipeline queues bounded.
+
+* **Micro-batching fills the planned tiles.**  Admitted frames are
+  grouped into micro-batches of ``microbatch`` frames, the batch the
+  rate-matched kernel plan was pinned to (``GraphPlan.kernel_plan(
+  batch=B)``): the fcu kernels then execute their planned bm exactly
+  (plan-aware bm) instead of re-fitting a smaller pixel tile at their
+  planned occupancy's expense.  The final partial batch is zero-padded
+  for shape stability (one jit trace per stage) and the pad rows are
+  dropped from the served outputs.
+
+* **Bounded inter-stage queues, double-buffered stages.**  The queue
+  between stages holds 2 micro-batches (one being consumed, one
+  landing — double buffering) plus whatever the analytic cut buffers
+  add: ``core.stage_partition.stream_buffers`` sizes the cut-crossing
+  FIFOs in *pixels* (skew bound + link slack), which this engine
+  converts to whole frames at the cut's activation width.  Since the
+  pixel bounds are a small fraction of a frame, the conversion almost
+  always floors to the bare double buffer — the analytically honest
+  version of "queues of 2".
+
+* **Telemetry against the analytical model.**  The engine records
+  per-stage busy/stall intervals and queue-depth events on an exact
+  rational clock.  ``ServeReport`` exposes per-tick occupancy and
+  queue-depth series plus aggregates that the tests assert against
+  ``core.schedule.simulate_graph``: measured stage occupancy equals
+  the analytic ``max_n demand_n / capacity_n`` (the same value
+  simulate_graph measures per node at pixel granularity), zero stalls
+  whenever the admitted rate <= BestRate, and queue depths within the
+  stream-buffer bounds under backpressure above it.
+
+Timing is a deterministic tick model (exact ``fractions.Fraction``
+cycle arithmetic), never wall-clock; the JAX execution underneath
+produces the real outputs (bit-exact vs ``models.cnn.apply_graph``)
+but does not influence the clock.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import deque
+from fractions import Fraction
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import cnn
+
+
+class ServingError(ValueError):
+    """Misconfigured or inconsistent streaming-serving setup."""
+
+
+# ==========================================================================
+# Request-level rate analytics (exact, derived from the GraphPlan)
+# ==========================================================================
+
+
+def _frame_features(spec) -> int:
+    """Features of one frame entering a node: in_px * d_in (the per-frame
+    workload whose steady-state absorption Eq. 9 guarantees)."""
+    return spec.in_hw[0] * spec.in_hw[1] * spec.d_in
+
+
+def node_frame_cycles(plan, name: str) -> Fraction:
+    """Cycles one frame occupies one node: frame features over installed
+    capacity — the request-level service time of the node."""
+    spec = plan.graph.spec(name)
+    return Fraction(_frame_features(spec)) / plan.impls[name].capacity
+
+
+def slot_cycles(plan) -> Fraction:
+    """Cycles per *tick*: one frame interval at the plan's input rate."""
+    (src,) = plan.graph.input_nodes
+    return Fraction(_frame_features(plan.graph.spec(src))) / plan.input_rate
+
+
+@dataclasses.dataclass(frozen=True)
+class StageRate:
+    """Request-level service model of one pipeline stage."""
+
+    stage: int
+    nodes: Tuple[str, ...]
+    bottleneck_node: str  # slowest node — sets the initiation interval
+    svc_cycles: Fraction  # initiation interval: cycles per frame
+    utilization: Fraction  # svc / slot == max node demand/capacity
+
+    def occupancy_at(self, admitted_rate: Fraction) -> Fraction:
+        """Busy fraction at an admitted rate (frames/tick) — the
+        analytical occupancy bound the telemetry is asserted against."""
+        return self.utilization * admitted_rate
+
+
+def stage_rates(plan) -> List[StageRate]:
+    """Per-stage initiation intervals from the plan's DSE capacities.
+
+    A stage's nodes pipeline internally, so in steady state the stage
+    initiates one frame per ``max`` over its nodes of the node's
+    per-frame cycles.  The per-tick ``utilization`` equals
+    ``max_n demand_n / capacity_n`` over the stage — the exact value
+    ``core.schedule.simulate_graph`` measures per node, which is what
+    ties this request-level model back to the pixel-level validator.
+    """
+    sp = plan.stage_plan
+    if sp is None:
+        raise ServingError(
+            "GraphPlan has no stage partition — plan with "
+            "plan_graph(..., n_stages=S) (S=1 is a valid single-chip "
+            "pipeline)"
+        )
+    slot = slot_cycles(plan)
+    rates: List[StageRate] = []
+    for s in range(sp.n_stages):
+        nodes = sp.stage_nodes(s)
+        cycles = {n: node_frame_cycles(plan, n) for n in nodes}
+        worst = max(nodes, key=lambda n: (cycles[n], n))
+        svc = cycles[worst]
+        rates.append(
+            StageRate(
+                stage=s,
+                nodes=nodes,
+                bottleneck_node=worst,
+                svc_cycles=svc,
+                utilization=svc / slot,
+            )
+        )
+    return rates
+
+
+def best_rate_frames(plan) -> Fraction:
+    """Eq. 10 at the request level: the highest frame rate (frames/tick)
+    every stage of the pipeline can absorb — the admission ceiling."""
+    return min(Fraction(1) / sr.utilization for sr in stage_rates(plan))
+
+
+def queue_caps_batches(plan, microbatch: int) -> List[int]:
+    """Capacity (in micro-batches) of each stage's input queue.
+
+    Queue ``s`` holds the frames that crossed cut ``s-1 -> s``.  Every
+    queue gets 2 batches (per-stage in-flight double buffering); the
+    analytic cut buffers — ``core.stage_partition.stream_buffers``
+    sized the crossing FIFOs in pixels — convert to extra whole frames
+    at the cut's per-frame bit width.  Because the pixel bounds (join
+    skew + link slack) are a small fraction of a frame, the extra term
+    is almost always 0: the analytically sized queue IS the double
+    buffer.  Queue 0 (admission) is the plain double buffer.
+    """
+    sp = plan.stage_plan
+    if sp is None:
+        raise ServingError(
+            "GraphPlan has no stage partition — plan with "
+            "plan_graph(..., n_stages=S)"
+        )
+    caps = [2] * sp.n_stages
+    for s in range(1, sp.n_stages):
+        buf_bits = 0
+        frame_bits = 0
+        for sb in plan.stream_bufs or []:
+            if sb.src_stage < s <= sb.dst_stage:
+                buf_bits += sb.bits
+                src_spec = plan.graph.spec(sb.src)
+                frame_bits += 8 * sb.d * src_spec.out_hw[0] * src_spec.out_hw[1]
+        if frame_bits:
+            caps[s] += (buf_bits // frame_bits) // microbatch
+    return caps
+
+
+# ==========================================================================
+# Requests, micro-batches, per-stage runtime state
+# ==========================================================================
+
+
+@dataclasses.dataclass
+class FrameRequest:
+    """One frame moving through the serving engine (times in cycles)."""
+
+    rid: int
+    x: Optional[np.ndarray]  # [H, W, C]; None in timing-only runs
+    t_submit: Fraction = Fraction(0)
+    t_admit: Optional[Fraction] = None
+    t_done: Optional[Fraction] = None
+    out: Optional[np.ndarray] = None
+
+
+@dataclasses.dataclass
+class _Batch:
+    bid: int
+    frames: List[FrameRequest]
+    boundary: Optional[Dict] = None  # node name -> tensor (execute mode)
+
+
+class _StageState:
+    """Mutable per-stage bookkeeping of the event loop."""
+
+    def __init__(self) -> None:
+        self.batch: Optional[_Batch] = None
+        self.busy_until: Optional[Fraction] = None
+        self.busy_cycles = Fraction(0)
+        self.stall_cycles = Fraction(0)  # done but blocked by downstream
+        self.intervals: List[Tuple[Fraction, Fraction]] = []
+        self.first_start: Optional[Fraction] = None
+        self.last_done: Optional[Fraction] = None
+        self.batches_served = 0
+        self.frames_served = 0
+
+
+# ==========================================================================
+# Reports
+# ==========================================================================
+
+
+@dataclasses.dataclass
+class StageReport:
+    """Telemetry + analytics for one stage over a serving run."""
+
+    stage: int
+    n_nodes: int
+    bottleneck_node: str
+    svc_cycles_per_frame: Fraction
+    utilization: Fraction  # at the plan input rate (= svc/slot)
+    analytic_occupancy: Fraction  # at the admitted rate
+    measured_occupancy: float  # busy / (last_done - first_start)
+    busy_cycles: Fraction
+    stall_cycles: Fraction
+    batches_served: int
+    max_queue_batches: int
+    queue_cap_batches: int
+
+    @property
+    def stall_free(self) -> bool:
+        return self.stall_cycles == 0
+
+    @property
+    def within_queue_bound(self) -> bool:
+        return self.max_queue_batches <= self.queue_cap_batches
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Deterministic tick-model results of one serving run.
+
+    Latencies and the makespan are in *ticks* (frame slots at the
+    plan's input rate); all aggregates are exact Fractions, floated
+    only in the convenience percentile accessors.
+    """
+
+    n_stages: int
+    microbatch: int
+    slot_cycles: Fraction
+    best_rate: Fraction  # frames/tick (request-level Eq. 10)
+    arrival_rate: Fraction  # frames/tick offered
+    admitted_rate: Fraction  # min(arrival, best) — the Eq. 9 admission
+    frames: int
+    completed: int
+    makespan_ticks: Fraction
+    throughput: Fraction  # completed frames / makespan ticks
+    latency_ticks: List[Fraction]  # submit -> done, in submission order
+    service_latency_ticks: List[Fraction]  # admit -> done, same order
+    stages: List[StageReport]
+    request_queue_peak: int  # frames parked outside the pipeline
+    queue_events: List[List[Tuple[Fraction, int]]]  # per stage (tick, depth)
+
+    @property
+    def stall_free(self) -> bool:
+        return all(s.stall_free for s in self.stages)
+
+    @property
+    def within_queue_bounds(self) -> bool:
+        return all(s.within_queue_bound for s in self.stages)
+
+    @property
+    def bottleneck_stage(self) -> int:
+        return max(self.stages, key=lambda s: s.utilization).stage
+
+    @staticmethod
+    def _pct(values: Sequence[Fraction], q: float) -> float:
+        if not values:
+            return float("nan")
+        ordered = sorted(values)
+        idx = max(0, math.ceil(q * len(ordered)) - 1)
+        return float(ordered[idx])
+
+    def p50_latency(self) -> float:
+        return self._pct(self.service_latency_ticks, 0.50)
+
+    def p99_latency(self) -> float:
+        return self._pct(self.service_latency_ticks, 0.99)
+
+    def p50_total_latency(self) -> float:
+        return self._pct(self.latency_ticks, 0.50)
+
+    def p99_total_latency(self) -> float:
+        return self._pct(self.latency_ticks, 0.99)
+
+    def tick_occupancy(self, stage: int) -> List[float]:
+        """Per-tick busy fraction of one stage — the occupancy trace the
+        analytical bound is asserted against."""
+        n = max(1, math.ceil(self.makespan_ticks))
+        out = [0.0] * n
+        for start, end in self._stage_intervals[stage]:
+            a, b = start / self.slot_cycles, end / self.slot_cycles
+            for k in range(int(a), min(n, math.ceil(b))):
+                lo, hi = max(a, Fraction(k)), min(b, Fraction(k + 1))
+                if hi > lo:
+                    out[k] += float(hi - lo)
+        return out
+
+    def tick_queue_depth(self, stage: int) -> List[int]:
+        """Queue depth (micro-batches) sampled at every tick boundary."""
+        n = max(1, math.ceil(self.makespan_ticks))
+        events = self.queue_events[stage]
+        out, depth, j = [], 0, 0
+        for k in range(n):
+            t = Fraction(k)
+            while j < len(events) and events[j][0] <= t:
+                depth = events[j][1]
+                j += 1
+            out.append(depth)
+        return out
+
+    # filled by the engine (not part of the dataclass repr/eq surface)
+    _stage_intervals: List[List[Tuple[Fraction, Fraction]]] = dataclasses.field(
+        default_factory=list, repr=False, compare=False
+    )
+
+
+# ==========================================================================
+# The engine
+# ==========================================================================
+
+
+class CNNStreamEngine:
+    """Streaming server for one planned CNN (see module docstring).
+
+    ``plan`` must be a ``core.graph.GraphPlan`` carrying a stage
+    partition (``plan_graph(..., n_stages=S)``; S=1 is the single-chip
+    pipeline).  ``kernel_plan`` optionally threads the rate-matched
+    per-node Pallas tiling (pass ``plan.kernel_plan(batch=microbatch)``
+    so the pixel tiles are pinned to the micro-batch — the engine
+    checks the pin matches).  ``execute=False`` runs the deterministic
+    tick model alone (no JAX, no outputs) — what the benchmark tables
+    use; tests run ``execute=True`` and assert the served outputs
+    bit-exact against ``models.cnn.apply_graph``.
+    """
+
+    def __init__(
+        self,
+        graph,
+        params,
+        plan,
+        *,
+        microbatch: int = 1,
+        kernel_plan=None,
+        impls=None,
+        overrides=None,
+        interpret: bool = True,
+        dtype=jnp.float32,
+        check: bool = True,
+        jit: bool = True,
+        execute: bool = True,
+    ) -> None:
+        if microbatch < 1:
+            raise ServingError(f"microbatch must be >= 1, got {microbatch}")
+        if kernel_plan is not None:
+            pinned = {p.batch for p in kernel_plan.values() if p.batch is not None}
+            if pinned and pinned != {microbatch}:
+                raise ServingError(
+                    f"kernel plan pinned to batch {sorted(pinned)} but the "
+                    f"engine micro-batches {microbatch} frames — build it "
+                    f"with plan.kernel_plan(batch={microbatch})"
+                )
+        self.graph = graph
+        self.params = params
+        self.plan = plan
+        self.microbatch = microbatch
+        self.dtype = dtype
+        self.execute = execute
+        self.rates = stage_rates(plan)  # raises without a stage partition
+        self.n_stages = len(self.rates)
+        self.slot = slot_cycles(plan)
+        self.best_rate = min(Fraction(1) / sr.utilization for sr in self.rates)
+        self.caps = queue_caps_batches(plan, microbatch)
+        self.pipeline = None
+        if execute:
+            self.pipeline = cnn.stage_functions(
+                graph,
+                partition=plan.stage_plan,
+                impls=impls,
+                plan=kernel_plan,
+                overrides=overrides,
+                interpret=interpret,
+                check=check,
+                jit=jit,
+            )
+            # after stage s, a batch only needs the tensors later stages
+            # import (plus the graph output once the last stage ran)
+            keep = set()
+            self._keep_after = [set() for _ in range(self.n_stages)]
+            for s in range(self.n_stages - 1, -1, -1):
+                if s == self.n_stages - 1:
+                    keep = {self.pipeline.out_name}
+                else:
+                    keep = keep | set(self.pipeline.imports[s + 1])
+                self._keep_after[s] = set(keep)
+        self._requests: List[FrameRequest] = []
+
+    # -- request intake ----------------------------------------------------
+
+    def submit(self, x: Optional[np.ndarray], rid: Optional[int] = None) -> int:
+        """Queue one frame ([H, W, C]); arrival times are assigned by
+        ``run`` from its arrival rate.  Returns the request id."""
+        rid = len(self._requests) if rid is None else rid
+        self._requests.append(FrameRequest(rid=rid, x=x))
+        return rid
+
+    def submit_all(self, frames) -> None:
+        """Queue ``frames`` ([N, H, W, C] or an iterable of [H, W, C])."""
+        for f in frames:
+            self.submit(np.asarray(f))
+
+    # -- execution helpers -------------------------------------------------
+
+    def _start_batch_exec(self, s: int, batch: _Batch) -> None:
+        if not self.execute:
+            return
+        if s == 0:
+            xs = [f.x for f in batch.frames]
+            pad = self.microbatch - len(xs)
+            if pad:
+                xs = xs + [np.zeros_like(xs[0])] * pad
+            x = jnp.asarray(np.stack(xs)).astype(self.dtype)
+            batch.boundary = {}
+            self.pipeline.run_stage(0, self.params, batch.boundary, x)
+        else:
+            self.pipeline.run_stage(s, self.params, batch.boundary)
+        keep = self._keep_after[s]
+        for k in list(batch.boundary):
+            if k not in keep:
+                del batch.boundary[k]
+
+    def _finish_batch(self, batch: _Batch, t: Fraction) -> None:
+        out = None
+        if self.execute:
+            out = np.asarray(batch.boundary[self.pipeline.out_name])
+        for i, f in enumerate(batch.frames):
+            f.t_done = t
+            if out is not None:
+                f.out = out[i]
+
+    # -- the event loop ----------------------------------------------------
+
+    def run(
+        self,
+        *,
+        arrival_rate: Fraction = Fraction(1),
+        max_ticks: int = 1_000_000,
+    ) -> ServeReport:
+        """Serve every submitted frame; return the telemetry report.
+
+        ``arrival_rate`` is in frames/tick (1 = frames arriving exactly
+        at the plan's input rate; ``best_rate`` is the sustainable
+        ceiling).  The run is a deterministic discrete-event loop on an
+        exact rational clock; it ends when the pipeline drains.
+        """
+        arrival_rate = Fraction(arrival_rate)
+        if arrival_rate <= 0:
+            raise ServingError(f"arrival_rate must be > 0, got {arrival_rate}")
+        reqs = self._requests
+        n = len(reqs)
+        if n == 0:
+            raise ServingError("no frames submitted")
+        inter = self.slot / arrival_rate
+        for i, r in enumerate(reqs):
+            r.t_submit = i * inter
+
+        queues: List[deque] = [deque() for _ in range(self.n_stages)]
+        qev: List[List[Tuple[Fraction, int]]] = [[] for _ in range(self.n_stages)]
+        max_q = [0] * self.n_stages
+        stages = [_StageState() for _ in range(self.n_stages)]
+        pending: deque = deque()
+        forming: List[FrameRequest] = []
+        arr_idx = 0
+        next_bid = 0
+        completed = 0
+        req_peak = 0
+        t = Fraction(0)
+        horizon = self.slot * max_ticks
+
+        def enqueue(s: int, batch: _Batch, now: Fraction) -> None:
+            queues[s].append(batch)
+            qev[s].append((now / self.slot, len(queues[s])))
+            max_q[s] = max(max_q[s], len(queues[s]))
+
+        def dequeue(s: int, now: Fraction) -> _Batch:
+            batch = queues[s].popleft()
+            qev[s].append((now / self.slot, len(queues[s])))
+            return batch
+
+        def settle(now: Fraction) -> None:
+            nonlocal arr_idx, forming, next_bid, completed, req_peak
+            progress = True
+            while progress:
+                progress = False
+                # 1. completions + pushes, downstream first (drain first)
+                for s in range(self.n_stages - 1, -1, -1):
+                    st = stages[s]
+                    if st.batch is None or st.busy_until > now:
+                        continue
+                    if s == self.n_stages - 1:
+                        self._finish_batch(st.batch, now)
+                        completed += len(st.batch.frames)
+                    elif len(queues[s + 1]) < self.caps[s + 1]:
+                        enqueue(s + 1, st.batch, now)
+                    else:
+                        continue  # blocked: downstream full (stall)
+                    st.stall_cycles += now - st.busy_until
+                    st.last_done = now
+                    st.batch = None
+                    st.busy_until = None
+                    progress = True
+                # 2. starts (a freed stage pulls from its queue)
+                for s in range(self.n_stages - 1, -1, -1):
+                    st = stages[s]
+                    if st.batch is not None or not queues[s]:
+                        continue
+                    batch = dequeue(s, now)
+                    self._start_batch_exec(s, batch)
+                    svc = self.rates[s].svc_cycles * len(batch.frames)
+                    st.batch = batch
+                    st.busy_until = now + svc
+                    st.busy_cycles += svc
+                    st.intervals.append((now, now + svc))
+                    if st.first_start is None:
+                        st.first_start = now
+                    st.batches_served += 1
+                    st.frames_served += len(batch.frames)
+                    progress = True
+                # 3. arrivals into the request queue
+                while arr_idx < n and reqs[arr_idx].t_submit <= now:
+                    pending.append(reqs[arr_idx])
+                    arr_idx += 1
+                    progress = True
+                req_peak = max(req_peak, len(pending) + len(forming))
+                # 4. admission (Eq. 9 gate: pipeline slack at the gate)
+                while pending or forming:
+                    if len(forming) == self.microbatch:
+                        if len(queues[0]) >= self.caps[0]:
+                            break  # backpressured: admission halted
+                        enqueue(0, _Batch(next_bid, forming), now)
+                        next_bid += 1
+                        forming = []
+                        progress = True
+                    elif pending:
+                        req = pending.popleft()
+                        req.t_admit = now
+                        forming.append(req)
+                        progress = True
+                    else:
+                        break
+                # 5. end-of-stream: flush the final partial batch
+                if (
+                    arr_idx == n
+                    and not pending
+                    and forming
+                    and len(queues[0]) < self.caps[0]
+                ):
+                    enqueue(0, _Batch(next_bid, forming), now)
+                    next_bid += 1
+                    forming = []
+                    progress = True
+
+        while completed < n:
+            settle(t)
+            if completed >= n:
+                break
+            cands = [reqs[arr_idx].t_submit] if arr_idx < n else []
+            # a blocked stage (service done, downstream full) has no
+            # future event of its own — the downstream completion that
+            # unblocks it is in this list, and settle() re-examines it.
+            cands += [
+                st.busy_until
+                for st in stages
+                if st.busy_until is not None and st.busy_until > t
+            ]
+            cands = [c for c in cands if c > t]
+            if not cands:
+                raise ServingError(
+                    f"serving deadlock at tick {float(t / self.slot):.1f} "
+                    f"({completed}/{n} frames served)"
+                )
+            t = min(cands)
+            if t > horizon:
+                raise ServingError(
+                    f"exceeded max_ticks={max_ticks} with {completed}/{n} "
+                    f"frames served"
+                )
+
+        return self._report(arrival_rate, stages, max_q, qev, t, req_peak)
+
+    # -- report assembly ---------------------------------------------------
+
+    def _report(self, arrival_rate, stages, max_q, qev, t_end, req_peak):
+        admitted = min(arrival_rate, self.best_rate)
+        reports: List[StageReport] = []
+        for s, (sr, st) in enumerate(zip(self.rates, stages)):
+            span = Fraction(0)
+            if st.first_start is not None and st.last_done is not None:
+                span = st.last_done - st.first_start
+            occ = float(st.busy_cycles / span) if span else 0.0
+            reports.append(
+                StageReport(
+                    stage=s,
+                    n_nodes=len(sr.nodes),
+                    bottleneck_node=sr.bottleneck_node,
+                    svc_cycles_per_frame=sr.svc_cycles,
+                    utilization=sr.utilization,
+                    analytic_occupancy=sr.occupancy_at(admitted),
+                    measured_occupancy=occ,
+                    busy_cycles=st.busy_cycles,
+                    stall_cycles=st.stall_cycles,
+                    batches_served=st.batches_served,
+                    max_queue_batches=max_q[s],
+                    queue_cap_batches=self.caps[s],
+                )
+            )
+        makespan = t_end / self.slot
+        done = [r for r in self._requests if r.t_done is not None]
+        report = ServeReport(
+            n_stages=self.n_stages,
+            microbatch=self.microbatch,
+            slot_cycles=self.slot,
+            best_rate=self.best_rate,
+            arrival_rate=arrival_rate,
+            admitted_rate=admitted,
+            frames=len(self._requests),
+            completed=len(done),
+            makespan_ticks=makespan,
+            throughput=Fraction(len(done)) / makespan if makespan else Fraction(0),
+            latency_ticks=[(r.t_done - r.t_submit) / self.slot for r in done],
+            service_latency_ticks=[(r.t_done - r.t_admit) / self.slot for r in done],
+            stages=reports,
+            request_queue_peak=req_peak,
+            queue_events=qev,
+        )
+        report._stage_intervals = [st.intervals for st in stages]
+        return report
+
+    # -- results -----------------------------------------------------------
+
+    def outputs(self) -> np.ndarray:
+        """Served outputs stacked in request order (execute mode only)."""
+        if not self.execute:
+            raise ServingError("engine ran with execute=False — no outputs")
+        missing = [r.rid for r in self._requests if r.out is None]
+        if missing:
+            raise ServingError(f"frames not served yet: {missing[:5]}")
+        ordered = sorted(self._requests, key=lambda r: r.rid)
+        return np.stack([r.out for r in ordered])
+
+
+# ==========================================================================
+# One-call convenience (what ``registry.CNNApi.serve`` wires up)
+# ==========================================================================
+
+
+def serve_frames(
+    graph,
+    params,
+    frames,
+    *,
+    input_rate,
+    n_stages: int = 1,
+    arrival_rate: Fraction = Fraction(1),
+    microbatch: int = 1,
+    rate_matched: bool = False,
+    interpret: bool = True,
+    dtype=jnp.float32,
+    check: bool = True,
+    jit: bool = True,
+    execute: bool = True,
+    max_ticks: int = 1_000_000,
+    **dse_kwargs,
+):
+    """Plan, stream, and serve ``frames`` through a staged pipeline.
+
+    Runs the DAG DSE at ``input_rate`` with an ``n_stages`` partition,
+    optionally lowers the rate-matched per-node kernel plan pinned to
+    the micro-batch (``rate_matched=True``), and serves every frame at
+    ``arrival_rate`` (frames/tick).  Returns ``(outputs, report)``;
+    ``outputs`` is None when ``execute=False`` (timing model only).
+    """
+    from repro.core.graph import plan_graph
+
+    plan = plan_graph(graph, input_rate, n_stages=n_stages, **dse_kwargs)
+    kp = plan.kernel_plan(batch=microbatch) if rate_matched else None
+    engine = CNNStreamEngine(
+        graph,
+        params,
+        plan,
+        microbatch=microbatch,
+        kernel_plan=kp,
+        interpret=interpret,
+        dtype=dtype,
+        check=check,
+        jit=jit,
+        execute=execute,
+    )
+    if execute:
+        engine.submit_all(frames)
+    else:
+        for _ in range(int(frames) if isinstance(frames, int) else len(frames)):
+            engine.submit(None)
+    report = engine.run(arrival_rate=arrival_rate, max_ticks=max_ticks)
+    outputs = engine.outputs() if execute else None
+    return outputs, report

@@ -14,8 +14,11 @@ The rate calculus shows up twice (DESIGN.md §3):
 Implementation notes: fixed-size slot pool, greedy sampling, per-slot
 position counters, one jit'd decode for the whole pool (padded slots are
 masked by their own cache_len).  Works with every decoder-capable arch in
-the registry.
+the registry.  CNN families stream through the frame-level engine in
+``serving.cnn_stream`` instead (same admission calculus, frames for
+tokens).
 """
+
 from __future__ import annotations
 
 import dataclasses
@@ -33,7 +36,7 @@ from repro.models.registry import get_api
 @dataclasses.dataclass
 class Request:
     rid: int
-    prompt: np.ndarray               # [S] int32
+    prompt: np.ndarray  # [S] int32
     max_new: int = 16
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
@@ -43,29 +46,53 @@ class Request:
 
 
 class Engine:
-    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
-                 max_len: int = 256, eos: Optional[int] = None):
-        if cfg.family not in ("lm", "ssm", "hybrid"):
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        slots: int = 4,
+        max_len: int = 256,
+        eos: Optional[int] = None,
+    ):
+        family = getattr(cfg, "family", None)
+        if family not in ("lm", "ssm", "hybrid"):
+            # CNN configs (MobileNetConfig / ResNetConfig) carry no
+            # .family at all — they are LayerGraph builders, not
+            # ModelConfigs — so detect them structurally too.
+            is_cnn = (family or "").startswith(("mobilenet", "resnet")) or (
+                family is None and hasattr(cfg, "graph")
+            )
+            if is_cnn:
+                raise ValueError(
+                    f"Engine serves token streams; CNN config "
+                    f"{type(cfg).__name__} streams frames through "
+                    "serving.cnn_stream.CNNStreamEngine (front door: "
+                    "registry.CNNApi.serve)"
+                )
             raise ValueError(
-                f"Engine supports text-in/text-out families; {cfg.family} "
-                "(encdec/vlm) needs the modality-aware driver in examples/")
+                f"Engine supports text-in/text-out families; {family} "
+                "(encdec/vlm) needs the modality-aware driver in examples/"
+            )
         self.cfg = cfg
         self.params = params
         self.api = get_api(cfg)
         self.slots = slots
         self.max_len = max_len
         self.eos = eos
-        self.active: Dict[int, Request] = {}      # slot -> request
+        self.active: Dict[int, Request] = {}  # slot -> request
         self.queue: List[Request] = []
         self.pos = np.zeros(slots, np.int32)
         self.state = self.api.make_serve_state(cfg, slots, max_len)
 
-        self._decode = jax.jit(
-            lambda p, st, toks, pos: self.api.decode(p, st, {"tokens": toks},
-                                                     pos, cfg))
-        self._prefill_one = jax.jit(
-            lambda p, toks, st1: self.api.prefill(p, {"tokens": toks}, st1,
-                                                  cfg))
+        def _decode_fn(p, st, toks, pos):
+            return self.api.decode(p, st, {"tokens": toks}, pos, cfg)
+
+        def _prefill_fn(p, toks, st1):
+            return self.api.prefill(p, {"tokens": toks}, st1, cfg)
+
+        self._decode = jax.jit(_decode_fn)
+        self._prefill_one = jax.jit(_prefill_fn)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -91,11 +118,15 @@ class Engine:
             # list caches (mixed-window models) carry batch at dim 0,
             # stacked caches at dim 1.
             bdim = 0 if isinstance(self.state, list) else 1
-            self.state = jax.tree.map(
-                lambda pool, one: jax.lax.dynamic_update_slice_in_dim(
-                    pool, one.astype(pool.dtype), slot, axis=bdim)
-                if pool.ndim >= 2 else pool,
-                self.state, state1)
+
+            def _write_slot(pool, one):
+                if pool.ndim < 2:
+                    return pool
+                return jax.lax.dynamic_update_slice_in_dim(
+                    pool, one.astype(pool.dtype), slot, axis=bdim
+                )
+
+            self.state = jax.tree.map(_write_slot, self.state, state1)
             self.pos[slot] = len(req.prompt)
             self.active[slot] = req
 
@@ -112,8 +143,9 @@ class Engine:
         # per-slot positions: attention vmaps the cache write per row and
         # masks per-row kv_len, so heterogeneous slots decode in one batch.
         pos = jnp.asarray(self.pos, jnp.int32)
-        logits, self.state = self._decode(self.params, self.state,
-                                          jnp.asarray(toks), pos)
+        logits, self.state = self._decode(
+            self.params, self.state, jnp.asarray(toks), pos
+        )
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
         made = 0
         for slot, req in list(self.active.items()):
@@ -121,9 +153,11 @@ class Engine:
             req.out.append(tok)
             made += 1
             self.pos[slot] += 1
-            if (self.eos is not None and tok == self.eos) \
-                    or len(req.out) >= req.max_new \
-                    or self.pos[slot] >= self.max_len - 1:
+            if (
+                (self.eos is not None and tok == self.eos)
+                or len(req.out) >= req.max_new
+                or self.pos[slot] >= self.max_len - 1
+            ):
                 req.done = True
                 req.t_done = time.perf_counter()
                 del self.active[slot]

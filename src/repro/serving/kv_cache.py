@@ -12,6 +12,7 @@ Integrated with the rate math: `capacity_for(rate, latency)` sizes the
 pool so the expected in-flight KV demand (token rate × residency) is
 covered — the paper's service-rate sizing applied to memory.
 """
+
 from __future__ import annotations
 
 import dataclasses
@@ -25,7 +26,7 @@ import jax.numpy as jnp
 @dataclasses.dataclass
 class PagedKVConfig:
     n_blocks: int
-    block_size: int          # tokens per block
+    block_size: int  # tokens per block
     n_layers: int
     n_kv: int
     head_dim: int
@@ -41,8 +42,7 @@ class PagedKVCache:
 
     def __init__(self, cfg: PagedKVConfig):
         self.cfg = cfg
-        shape = (cfg.n_blocks, cfg.n_layers, cfg.block_size, cfg.n_kv,
-                 cfg.head_dim)
+        shape = (cfg.n_blocks, cfg.n_layers, cfg.block_size, cfg.n_kv, cfg.head_dim)
         self.k = jnp.zeros(shape, jnp.dtype(cfg.dtype))
         self.v = jnp.zeros(shape, jnp.dtype(cfg.dtype))
         self._free: List[int] = list(range(cfg.n_blocks))
@@ -66,8 +66,9 @@ class PagedKVCache:
     def allocate(self, seq_id: int, n_tokens: int) -> List[int]:
         need = self.blocks_needed(n_tokens)
         if need > self.free_blocks:
-            raise MemoryError(f"seq {seq_id}: need {need} blocks, "
-                              f"{self.free_blocks} free")
+            raise MemoryError(
+                f"seq {seq_id}: need {need} blocks, {self.free_blocks} free"
+            )
         blocks = [self._free.pop() for _ in range(need)]
         self._tables[seq_id] = blocks
         self._lengths[seq_id] = n_tokens
@@ -106,8 +107,12 @@ class PagedKVCache:
     # ------------------------------------------------------------------
     # data plane
     # ------------------------------------------------------------------
-    def write_token(self, seq_id: int, layer_kv: Tuple[jax.Array, jax.Array],
-                    pos: int) -> None:
+    def write_token(
+        self,
+        seq_id: int,
+        layer_kv: Tuple[jax.Array, jax.Array],
+        pos: int,
+    ) -> None:
         """Write one token's K/V ([n_layers, n_kv, head_dim]) at ``pos``."""
         blk = self._tables[seq_id][pos // self.cfg.block_size]
         off = pos % self.cfg.block_size
@@ -120,17 +125,23 @@ class PagedKVCache:
         the gather a paged-attention kernel performs via block tables."""
         tbl = jnp.asarray(self._tables[seq_id], jnp.int32)
         length = self._lengths[seq_id]
-        k = self.k[tbl]                  # [n_blk, L, bs, kv, dh]
+        k = self.k[tbl]  # [n_blk, L, bs, kv, dh]
         v = self.v[tbl]
-        k = jnp.moveaxis(k, 1, 0).reshape(self.cfg.n_layers, -1,
-                                          self.cfg.n_kv, self.cfg.head_dim)
-        v = jnp.moveaxis(v, 1, 0).reshape(self.cfg.n_layers, -1,
-                                          self.cfg.n_kv, self.cfg.head_dim)
+        k = jnp.moveaxis(k, 1, 0).reshape(
+            self.cfg.n_layers, -1, self.cfg.n_kv, self.cfg.head_dim
+        )
+        v = jnp.moveaxis(v, 1, 0).reshape(
+            self.cfg.n_layers, -1, self.cfg.n_kv, self.cfg.head_dim
+        )
         return k[:, :length], v[:, :length]
 
 
-def capacity_for(token_rate: float, residency_s: float, block_size: int,
-                 safety: float = 1.25) -> int:
+def capacity_for(
+    token_rate: float,
+    residency_s: float,
+    block_size: int,
+    safety: float = 1.25,
+) -> int:
     """Pool sizing from the rate calculus: expected in-flight tokens =
     arrival rate x residency; capacity >= demand x safety (Eq. 9)."""
     tokens = token_rate * residency_s * safety

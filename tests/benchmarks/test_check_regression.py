@@ -122,14 +122,15 @@ def test_exclude_applies_to_update(tmp_path):
 
 def test_committed_baseline_is_selfconsistent():
     """The committed baseline parses and covers the analytic tables,
-    including table4/5's deterministic rows but none of the timing rows
-    the CI gate excludes."""
+    including table4/5's deterministic rows and table6's tick-model
+    serving rows, but none of the timing rows the CI gate excludes."""
     repo = pathlib.Path(__file__).resolve().parents[2]
     rows = load_rows(str(repo / "benchmarks" / "baselines"
                          / "analytic_tables.json"))
     prefixes = {name.split("/")[0] for name in rows}
-    assert {"table1", "table2", "table3", "table4", "table5"} <= prefixes
-    assert sum(len(v) for v in rows.values()) >= 100
+    assert {"table1", "table2", "table3", "table4", "table5",
+            "table6"} <= prefixes
+    assert sum(len(v) for v in rows.values()) >= 150
     # the CI gate's timing-row patterns must never be pinned in the file
     assert not [n for n in rows
                 if any(re.search(u, n) for u in DEFAULT_EXCLUDES)]
