@@ -14,6 +14,10 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
                           throughput/latency ticks, occupancy vs the
                           analytical bound, queue depth vs caps across
                           an arrival sweep (deterministic tick model)
+  table7_fleet          — Multi-CLP bottleneck replication (strict
+                          stage-balance win at equal arithmetic) + the
+                          multi-tenant chip-pool planner and shared-clock
+                          fleet scheduler (deterministic models)
   rate_aware_serving    — the technique applied to LM serving (DESIGN §3)
   kernel_bench          — Pallas kernels vs oracles + tile stats
   roofline              — 40-cell roofline summary (needs dry-run JSONs)
@@ -42,6 +46,7 @@ MODULES = [
     ("table4", "benchmarks.table4_resnet_e2e"),
     ("table5", "benchmarks.table5_partition"),
     ("table6", "benchmarks.table6_serving"),
+    ("table7", "benchmarks.table7_fleet"),
     ("rate_aware", "benchmarks.rate_aware_serving"),
     ("kernels", "benchmarks.kernel_bench"),
     ("roofline", "benchmarks.roofline"),

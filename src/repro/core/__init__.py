@@ -16,6 +16,9 @@ Public surface:
   stage_partition — rate-aware pipeline-stage partitioning: chain DP
                   (TPU analogue) + DAG cuts (partition_graph) with
                   inter-chip stream buffers (stream_buffers)
+  replicate     — Multi-CLP bottleneck replication: clone the hot node R
+                  ways behind a round-robin splitter / order-preserving
+                  merger (plan_graph(replicate=...))
   hlo_analysis  — roofline term extraction from compiled HLO
   hw_specs      — hardware constants (TPU v5e + xcvu37p)
 """
@@ -60,9 +63,21 @@ from .graph import (  # noqa: F401
     LayerGraph,
     NodeTiming,
     compute_timing,
+    deal_buffers,
     join_buffers,
     plan_graph,
     propagate_graph,
+)
+from .replicate import (  # noqa: F401
+    ReplicatedGraph,
+    ReplicatedPlan,
+    Replication,
+    lane_multiplicity,
+    plan_replicated,
+    replicable_nodes,
+    replicate_node,
+    replicate_params,
+    select_bottleneck,
 )
 from .tpu_tiles import TileChoice, select_tile, select_tile_for_impl  # noqa: F401
 from .hw_specs import TPU_V5E, XCVU37P, FPGASpec, TPUSpec  # noqa: F401

@@ -35,9 +35,10 @@ from typing import List, Tuple
 from .rate import LayerSpec, divisors
 
 # Layers with no multipliers: comparators (pool), elementwise adders (add),
-# wiring only (concat), running means (gap).  The DSE tracks their phases
-# and pass cadence but explores no (j, h) space.
-NON_ARITH_KINDS = ("pool", "add", "gap", "concat")
+# wiring only (concat, and the Multi-CLP split/merge lane steering of
+# core.replicate), running means (gap).  The DSE tracks their phases and
+# pass cadence but explores no (j, h) space.
+NON_ARITH_KINDS = ("pool", "add", "gap", "concat", "split", "merge")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -146,11 +146,42 @@ class LayerGraph:
                         f"channels {sum(d_ops)}, got d_in={spec.d_in}, "
                         f"d_out={spec.d_out}"
                     )
+        elif spec.kind == "merge":
+            # Multi-CLP lane re-interleave (core.replicate): >= 2 equal-shape
+            # lane streams, d_in == d_out == each operand's channel count.
+            if len(preds) < 2:
+                raise GraphError(
+                    f"{spec.name}: merge needs >=2 lane producers, "
+                    f"got {len(preds)}"
+                )
+            for p in preds:
+                if self._specs[p].out_hw != spec.in_hw:
+                    raise GraphError(
+                        f"{spec.name}: lane {p} emits {self._specs[p].out_hw}"
+                        f" but merge expects {spec.in_hw}"
+                    )
+                if self._specs[p].d_out != spec.d_in:
+                    raise GraphError(
+                        f"{spec.name}: lane {p} has "
+                        f"d_out={self._specs[p].d_out}, merge d_in={spec.d_in}"
+                    )
+            if spec.d_out != spec.d_in or spec.out_hw != spec.in_hw:
+                raise GraphError(
+                    f"{spec.name}: merge is wiring only — needs "
+                    f"d_out == d_in and out_hw == in_hw"
+                )
         else:
             if len(preds) > 1:
                 raise GraphError(
                     f"{spec.name}: kind {spec.kind!r} takes at "
                     f"most one producer, got {len(preds)}"
+                )
+            if spec.kind == "split" and (
+                spec.d_out != spec.d_in or spec.out_hw != spec.in_hw
+            ):
+                raise GraphError(
+                    f"{spec.name}: split is wiring only — needs "
+                    f"d_out == d_in and out_hw == in_hw"
                 )
             if preds:
                 pred = self._specs[preds[0]]
@@ -237,6 +268,18 @@ def propagate_graph(
     Every source node receives ``input_rate``.  Joins require all operand
     *pixel* rates to agree — a structural property of correct CNN DAGs
     (both residual paths decimate identically); violations raise.
+
+    Replication wiring (core.replicate) extends the fluid algebra:
+
+    * a 'split' node round-robin-deals its stream over its R >= 2
+      consumers, so it *emits* the per-lane pixel rate q_in / R (each
+      lane carries 1/R of the frames — Eq. 9 feasibility on a lane is
+      checked against rate/R);
+    * a 'merge' node re-interleaves its R lane streams, so its demand is
+      the full restored rate q_lane * d_in * R (the adder-free datapath
+      must keep up with the *combined* stream) and it emits
+      q_out = q_lane * R — exactly the q the unreplicated node emitted,
+      which is how Eq. 9/10 continuous flow is preserved downstream.
     """
     demands: Dict[str, Fraction] = {}
     out: Dict[str, RatePoint] = {}
@@ -253,8 +296,20 @@ def propagate_graph(
                     + ", ".join(f"{p}={out[p].pixels_per_clock}" for p in preds)
                 )
             q_in = qs.pop()
-        demands[name] = q_in * spec.d_in
-        q_out = q_in * spec.spatial_ratio
+        if spec.kind == "split":
+            fanout = len(graph.succs(name))
+            if fanout < 2:
+                raise GraphError(
+                    f"{name}: split needs >=2 lane consumers, got {fanout}"
+                )
+            demands[name] = q_in * spec.d_in
+            q_out = q_in / fanout
+        elif spec.kind == "merge":
+            demands[name] = q_in * spec.d_in * len(preds)
+            q_out = q_in * len(preds)
+        else:
+            demands[name] = q_in * spec.d_in
+            q_out = q_in * spec.spatial_ratio
         out[name] = RatePoint(features_per_clock=q_out * spec.d_out, d=spec.d_out)
     return demands, out
 
@@ -334,13 +389,19 @@ def compute_timing(
             q_in = timing[preds[0]].q_out
         c = pass_cycles(impls[name])
         fill = Fraction(fill_pixels(spec)) / q_in if fill_pixels(spec) else Fraction(0)
+        if spec.kind == "split":
+            q_out = q_in / len(graph.succs(name))
+        elif spec.kind == "merge":
+            q_out = q_in * len(graph.preds(name))
+        else:
+            q_out = q_in * spec.spatial_ratio
         timing[name] = NodeTiming(
             name=name,
             pass_cycles=c,
             fill_cycles=fill,
             offset=o_in + c + fill,
             q_in=q_in,
-            q_out=q_in * spec.spatial_ratio,
+            q_out=q_out,
         )
     return timing
 
@@ -368,16 +429,28 @@ def join_buffers(
     impls: Dict[str, LayerImpl],
     timing: Dict[str, NodeTiming],
 ) -> List[JoinBuffer]:
-    """Size the skew FIFO on every join in-edge (see module docstring)."""
+    """Size the skew FIFO on every join in-edge (see module docstring).
+
+    Merge nodes (Multi-CLP lane re-interleave) get an extra *deal burst*
+    term on every lane edge: the order-preserving merger drains lane k at
+    the full frame rate only during lane k's turn, so a lane accumulates
+    up to ceil(px * (R-1) / R) pixels while the other R-1 lanes' frames
+    are being forwarded (px = pixels per frame on the edge).
+    """
     buffers: List[JoinBuffer] = []
     for join in graph.joins():
         preds = graph.preds(join)
+        spec = graph.spec(join)
         o_max = max(timing[p].offset for p in preds)
         q = timing[join].q_in
+        burst = 0
+        if spec.kind == "merge":
+            px = spec.in_hw[0] * spec.in_hw[1]
+            burst = math.ceil(Fraction(px * (len(preds) - 1), len(preds)))
         for p in preds:
             skew = o_max - timing[p].offset
             d = graph.spec(p).d_out
-            bound = math.floor(skew * q) + max(1, impls[join].p_raw)
+            bound = math.floor(skew * q) + max(1, impls[join].p_raw) + burst
             r_edge = q * d  # features/clock on the edge
             lanes = max(1, math.ceil(r_edge))
             width = 8 * lanes
@@ -387,6 +460,52 @@ def join_buffers(
                     join=join,
                     src=p,
                     skew_cycles=skew,
+                    q=q,
+                    d=d,
+                    bound_pixels=bound,
+                    width_bits=width,
+                    depth_words=depth,
+                )
+            )
+    return buffers
+
+
+def deal_buffers(
+    graph: LayerGraph,
+    impls: Dict[str, LayerImpl],
+    timing: Dict[str, NodeTiming],
+) -> List[JoinBuffer]:
+    """Size the deal FIFO on every split -> lane edge.
+
+    The round-robin frame splitter forwards at the full upstream pixel
+    rate into one lane at a time while the lane drains at q / R, so the
+    lane-side FIFO fills to ceil(px * (R-1) / R) pixels by the end of the
+    lane's turn and drains over the next R-1 frames.  Reuses the
+    ``JoinBuffer`` record (join = the lane, src = the splitter) so the
+    resource model and ``stream_buffers`` price these FIFOs through the
+    exact same machinery as join skew FIFOs.
+    """
+    buffers: List[JoinBuffer] = []
+    for name in graph.topo_order():
+        if graph.spec(name).kind != "split":
+            continue
+        lanes = graph.succs(name)
+        spec = graph.spec(name)
+        px = spec.out_hw[0] * spec.out_hw[1]
+        burst = math.ceil(Fraction(px * (len(lanes) - 1), len(lanes)))
+        d = spec.d_out
+        for lane in lanes:
+            q = timing[lane].q_in  # the dealt per-lane rate q / R
+            bound = burst + max(1, impls[lane].p_raw)
+            r_edge = q * d
+            n_lanes = max(1, math.ceil(r_edge))
+            width = 8 * n_lanes
+            depth = max(2, math.ceil(Fraction(bound * d, n_lanes)))
+            buffers.append(
+                JoinBuffer(
+                    join=lane,
+                    src=name,
+                    skew_cycles=Fraction(0),
                     q=q,
                     d=d,
                     bound_pixels=bound,
@@ -455,6 +574,10 @@ class GraphPlan:
     buffers: List[JoinBuffer]
     stage_plan: Optional[GraphStagePlan] = None
     stream_bufs: Optional[List[StreamBuffer]] = None
+    # Multi-CLP replications applied before planning (core.replicate
+    # records; empty for an unreplicated plan).  The serving engine uses
+    # these to amortize lane service over the R frames a lane sees 1 of.
+    replications: tuple = ()
 
     @property
     def total_mults(self) -> int:
@@ -589,6 +712,7 @@ def plan_graph(
     chain_cuts: bool = False,
     stage_cost_key: str = "mults",
     link_cycles: int = DEFAULT_LINK_CYCLES,
+    replicate=None,
 ) -> GraphPlan:
     """Select an implementation for every node of a DAG.
 
@@ -610,7 +734,24 @@ def plan_graph(
     ``stream_bufs``; the executor (``models.cnn.apply_staged``) and the
     resource model (``estimate_graph`` / ``estimate_stages``) both
     consume it.
+
+    ``replicate`` turns on Multi-CLP bottleneck replication *before*
+    planning: a ``(node, R)`` pair, a ``{node: R}`` mapping, or a bare
+    ``R`` (auto-select the max-mults bottleneck).  The named node is
+    cloned R ways behind a round-robin frame splitter and an
+    order-preserving merger (``core.replicate``), the DSE sees each lane
+    at demand rate/R, and the min-bottleneck DP is re-run over the
+    replicated graph — so stage balance is no longer capped by the
+    dominant layer.  The applied ``Replication`` records land in
+    ``GraphPlan.replications``.
     """
+    replications: tuple = ()
+    if replicate is not None:
+        from .replicate import apply_replications
+
+        graph, replications = apply_replications(
+            graph, replicate, input_rate=input_rate, scheme=scheme
+        )
     demands, out_points = propagate_graph(graph, input_rate)
     impls: "OrderedDict[str, LayerImpl]" = OrderedDict()
     for name in graph.topo_order():
@@ -630,7 +771,9 @@ def plan_graph(
         demands=demands,
         out_points=out_points,
         timing=timing,
-        buffers=join_buffers(graph, impls, timing),
+        buffers=join_buffers(graph, impls, timing)
+        + deal_buffers(graph, impls, timing),
+        replications=replications,
     )
     if n_stages is not None:
         plan.stage_plan = partition_graph(

@@ -22,10 +22,16 @@ from typing import List, Sequence, Tuple
 
 LayerKind = str
 # 'conv' | 'dwconv' | 'pointwise' | 'dense' | 'pool' | 'add' | 'gap' | 'concat'
+#   | 'split' | 'merge'
 # 'add' and 'concat' are JOIN kinds: in a LayerGraph they may have several
 # producers (residual sums, inception-style concatenations).  For 'add',
 # d_in is the per-operand channel count; for 'concat' it is the sum over
-# operands.  Chains (the original API) never contain joins.
+# operands.  'split' / 'merge' are the Multi-CLP replication wiring of
+# core.replicate: a 'split' round-robin-deals its frame stream across its
+# >= 2 consumers (each lane carries pixel rate q / R), and a 'merge'
+# re-interleaves R lane streams in order (q_out = q_lane * R).  Both are
+# wiring only — no arithmetic.  Chains (the original API) never contain
+# joins, splits, or merges.
 
 
 @dataclasses.dataclass(frozen=True)

@@ -156,6 +156,12 @@ def estimate_layer(impl: LayerImpl, spec: FPGASpec = XCVU37P) -> ResourceEstimat
         elif lay.kind == "add":
             # elementwise residual sum: one 8b adder per arriving feature lane
             est.lut = 8.0 * max(1, math.ceil(impl.demand))
+        elif lay.kind in ("split", "merge"):
+            # Multi-CLP deal/interleave steering (core.replicate): an 8b
+            # mux/demux per feature lane at the full-stream rate, plus one
+            # round-robin lane counter.  The deal/skew FIFOs on the edges
+            # are separate JoinBuffer records priced by estimate_graph.
+            est.lut = _CTRL_LUT_UNIT_OURS + 8.0 * max(1, math.ceil(impl.demand))
         return est
 
     dw = lay.kind == "dwconv"

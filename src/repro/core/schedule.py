@@ -204,6 +204,14 @@ def simulate_graph(
     outputs are shifted by the plan's analytical window-fill latency so
     cross-branch skew includes line-buffer banking, exactly as
     ``core.graph.compute_timing`` models it.
+
+    Multi-CLP replication wiring (core.replicate) simulates in the fluid
+    steady state: a lane behind a 'split' consumes the dealt subsequence
+    (every R-th pixel) of the splitter's output, and a 'merge' consumes
+    lane pixel i as its output pixel i*R + k — the round-robin
+    re-interleave.  Deal/merge-edge occupancies are measured against the
+    analytic bounds, which are sized for whole-*frame* dealing and thus
+    dominate the steady-state residency measured here.
     """
     graph = plan.graph
     sources = graph.input_nodes
@@ -222,9 +230,23 @@ def simulate_graph(
         if not preds:
             arrivals: List[Fraction] = _arrival_times(n_pixels, input_pixel_rate)
             edge_arrivals: List[Tuple[str, List[Fraction]]] = []
+        elif len(preds) == 1 and graph.spec(preds[0]).kind == "split":
+            # A replication lane: consume the dealt subsequence (pixels
+            # k, k+R, ... of the splitter's stream, k = this lane's deal
+            # slot), and measure the deal-FIFO residency on the edge.
+            lanes = graph.succs(preds[0])
+            arrivals = outputs[preds[0]][lanes.index(name) :: len(lanes)]
+            edge_arrivals = [(preds[0], arrivals)]
         elif len(preds) == 1:
             arrivals = outputs[preds[0]]
             edge_arrivals = []
+        elif spec.kind == "merge":
+            # Order-preserving re-interleave: output pixel m is lane
+            # (m mod R)'s pixel m // R; truncate to complete rounds.
+            r = len(preds)
+            rounds = min(len(outputs[p]) for p in preds)
+            arrivals = [outputs[preds[m % r]][m // r] for m in range(rounds * r)]
+            edge_arrivals = []  # per-lane residency measured below
         else:
             streams = [(p, outputs[p]) for p in preds]
             n_avail = min(len(s) for _, s in streams)
@@ -252,6 +274,25 @@ def simulate_graph(
                     bound_pixels=plan.buffer_for(name, src).bound_pixels,
                 )
             )
+        if spec.kind == "merge":
+            # Lane k's pixel i is consumed at the start of output pixel
+            # i*R + k, so residency on lane edge k counts deliveries up
+            # to each such start minus the i already consumed.
+            r = len(preds)
+            for k, src in enumerate(preds):
+                arr_sorted = sorted(outputs[src][: len(started) // r])
+                peak = 0
+                for i, s in enumerate(started[k::r]):
+                    resident = bisect.bisect_right(arr_sorted, s) - i
+                    peak = max(peak, resident)
+                occupancy.append(
+                    JoinOccupancy(
+                        join=name,
+                        src=src,
+                        max_pixels=peak,
+                        bound_pixels=plan.buffer_for(name, src).bound_pixels,
+                    )
+                )
 
         fill = plan.timing[name].fill_cycles
         out = _decimate(done, spec)

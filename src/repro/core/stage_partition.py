@@ -445,11 +445,14 @@ def stream_buffers(
                 )
             q = plan.timing[dst].q_in
             d = graph.spec(src).d_out
-            if len(preds) > 1:
+            try:
+                # A join skew FIFO or a split->lane deal FIFO on this edge
+                # is absorbed into the inter-chip buffer: its analytic
+                # bound is the base the link slack is added to.
                 jb = plan.buffer_for(dst, src)
                 base = jb.bound_pixels
                 skew = jb.skew_cycles
-            else:
+            except KeyError:
                 base = 1
                 skew = Fraction(0)
             bound = base + math.ceil(crossings * link_cycles * q)

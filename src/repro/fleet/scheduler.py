@@ -1,0 +1,243 @@
+"""Multi-tenant serving loop over a packed chip pool.
+
+One ``serving.CNNStreamEngine`` per tenant — built from the tenant's
+chosen ``PoolPlan`` candidate — pumped on a *shared* deterministic
+rational clock.  The engines expose a steppable event loop
+(``begin`` / ``advance`` / ``next_event`` / ``finish``); the scheduler
+is the textbook multi-queue discrete-event driver on top:
+
+    t = 0
+    while any tenant unfinished:
+        advance every unfinished tenant to t (settle all consequences)
+        t = min over unfinished tenants of next_event(t)
+
+Tenants share the clock but **not** chips (the pool packer assigns one
+stage per chip, exclusively), so the fleet run of a tenant is
+event-for-event identical to its standalone ``engine.run()`` — a
+property ``tests/fleet/test_scheduler.py`` asserts.  Admission stays
+per-tenant: each engine gates at its own BestRate (Eq. 10 at the
+tenant's planned rate), so one tenant's burst never stalls another.
+
+``FleetReport`` aggregates per-tenant telemetry (p50/p99 service
+latency, stall/bound flags) with per-chip occupancy over the fleet
+makespan — the pool-level utilization the planner promised, measured.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from fractions import Fraction
+from typing import Dict, List, Mapping, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.replicate import replicate_params
+from repro.fleet.pool import PoolPlan
+from repro.serving.cnn_stream import CNNStreamEngine, ServeReport, ServingError
+
+
+class FleetError(ServingError):
+    """Raised when the fleet run cannot serve its workloads."""
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantWorkload:
+    """One tenant's offered load for a fleet run.
+
+    ``frames`` is an array of frames when the scheduler executes, or a
+    bare count for the timing model.  ``arrival_rate`` is frames/tick
+    relative to the tenant's own planned rate (1 = exactly at rate).
+    """
+
+    tenant: str
+    frames: object  # ndarray (execute=True) or int (timing model)
+    arrival_rate: Fraction = Fraction(1)
+    microbatch: int = 1
+    flush_after_ticks: Optional[Fraction] = None
+
+
+@dataclasses.dataclass
+class FleetReport:
+    """Fleet-wide results: per-tenant reports + per-chip occupancy."""
+
+    reports: Dict[str, ServeReport]
+    outputs: Dict[str, Optional[np.ndarray]]
+    makespan_cycles: Fraction  # latest tenant finish, shared clock
+    chip_occupancy: Dict[str, float]  # busy cycles / fleet makespan
+
+    @property
+    def all_stall_free(self) -> bool:
+        return all(r.stall_free for r in self.reports.values())
+
+    @property
+    def all_within_bounds(self) -> bool:
+        return all(r.within_queue_bounds for r in self.reports.values())
+
+    def p50_latency(self, tenant: str) -> float:
+        return self.reports[tenant].p50_latency()
+
+    def p99_latency(self, tenant: str) -> float:
+        return self.reports[tenant].p99_latency()
+
+    def summary_rows(self) -> List[Tuple[str, str]]:
+        """(name, value) rows for logging / the benchmark table."""
+        rows = []
+        for name, r in sorted(self.reports.items()):
+            rows.append(
+                (
+                    f"{name}",
+                    f"served={r.completed} thr={float(r.throughput):.3f} "
+                    f"p50={r.p50_latency():.1f} p99={r.p99_latency():.1f} "
+                    f"stall_free={r.stall_free}",
+                )
+            )
+        for chip, occ in sorted(self.chip_occupancy.items()):
+            rows.append((chip, f"occupancy={occ:.3f}"))
+        return rows
+
+
+class FleetScheduler:
+    """Drive every pooled tenant's pipeline on one shared clock.
+
+    ``params`` maps tenant name -> that family's (unreplicated) params;
+    required per served tenant when ``execute=True`` (the scheduler
+    aliases the hot node's weights onto replication lanes itself).
+    ``execute=False`` runs the deterministic timing model alone.
+    """
+
+    def __init__(
+        self,
+        pool: PoolPlan,
+        *,
+        params: Optional[Mapping[str, object]] = None,
+        execute: bool = False,
+        interpret: bool = True,
+        check: bool = True,
+        jit: bool = True,
+    ) -> None:
+        self.pool = pool
+        self.params = dict(params or {})
+        self.execute = execute
+        self.interpret = interpret
+        self.check = check
+        self.jit = jit
+
+    def init_params(self, tenant: str, rng: jax.Array) -> None:
+        """Initialize (and store) one tenant's params from its config."""
+        from repro.models.registry import get_cnn_api
+
+        cand = self.pool.candidate_for(tenant)
+        t = next(t for t in self.pool.tenants if t.name == tenant)
+        api = get_cnn_api(t.family)
+        self.params[tenant] = api.init(cand.cfg, rng)
+
+    def _engine(self, w: TenantWorkload) -> CNNStreamEngine:
+        cand = self.pool.candidate_for(w.tenant)
+        params = self.params.get(w.tenant)
+        if self.execute:
+            if params is None:
+                raise FleetError(
+                    f"execute=True but no params for tenant {w.tenant!r} "
+                    f"(pass params= or call init_params)"
+                )
+            if cand.plan.replications:
+                params = replicate_params(params, cand.plan.replications)
+        engine = CNNStreamEngine(
+            cand.plan.graph,
+            params,
+            cand.plan,
+            microbatch=w.microbatch,
+            interpret=self.interpret,
+            dtype=getattr(cand.cfg, "dtype", None),
+            check=self.check,
+            jit=self.jit,
+            execute=self.execute,
+        )
+        if self.execute:
+            engine.submit_all(w.frames)
+        else:
+            n = w.frames if isinstance(w.frames, int) else len(w.frames)
+            for _ in range(n):
+                engine.submit(None)
+        return engine
+
+    def serve(
+        self,
+        workloads: List[TenantWorkload],
+        *,
+        max_ticks: int = 1_000_000,
+    ) -> FleetReport:
+        """Serve every workload to completion on the shared clock."""
+        if not workloads:
+            raise FleetError("no workloads to serve")
+        seen = set()
+        for w in workloads:
+            if w.tenant not in self.pool.chosen:
+                raise FleetError(
+                    f"workload names unpooled tenant {w.tenant!r}; pooled: "
+                    f"{sorted(self.pool.chosen)}"
+                )
+            if w.tenant in seen:
+                raise FleetError(f"duplicate workload for {w.tenant!r}")
+            seen.add(w.tenant)
+
+        engines = {w.tenant: self._engine(w) for w in workloads}
+        runs = {
+            w.tenant: engines[w.tenant].begin(
+                arrival_rate=w.arrival_rate,
+                max_ticks=max_ticks,
+                flush_after_ticks=w.flush_after_ticks,
+            )
+            for w in workloads
+        }
+
+        t = Fraction(0)
+        active = dict(engines)
+        finish_at: Dict[str, Fraction] = {}
+        while active:
+            for name in list(active):
+                e = active[name]
+                e.advance(t)
+                if e.finished:
+                    finish_at[name] = t
+                    del active[name]
+            if not active:
+                break
+            nxts = []
+            for name, e in active.items():
+                nxt = e.next_event(t)
+                if nxt is None:
+                    continue
+                if nxt > runs[name].horizon:
+                    raise FleetError(
+                        f"tenant {name!r} exceeded max_ticks={max_ticks} "
+                        f"({runs[name].completed}/{runs[name].n} served)"
+                    )
+                nxts.append(nxt)
+            if not nxts:
+                stuck = {
+                    n: f"{runs[n].completed}/{runs[n].n}" for n in active
+                }
+                raise FleetError(f"fleet deadlock at t={t}: {stuck}")
+            t = min(nxts)
+
+        reports = {name: e.finish() for name, e in engines.items()}
+        outputs = {
+            name: (e.outputs() if self.execute else None)
+            for name, e in engines.items()
+        }
+        makespan = max(finish_at.values())
+        occupancy: Dict[str, float] = {c.name: 0.0 for c in self.pool.chips}
+        for a in self.pool.assignments:
+            r = reports.get(a.tenant)
+            if r is None or makespan == 0:
+                continue  # tenant pooled but not served this run
+            busy = r.stages[a.stage].busy_cycles
+            occupancy[a.chip] = float(busy / makespan)
+        return FleetReport(
+            reports=reports,
+            outputs=outputs,
+            makespan_cycles=makespan,
+            chip_occupancy=occupancy,
+        )

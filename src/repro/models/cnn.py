@@ -200,9 +200,7 @@ def _weight_shape(spec: LayerSpec) -> tuple:
         return (*spec.kernel, 1, spec.d_in * spec.channel_multiplier)
     if spec.kind in ("pointwise", "dense"):
         return (spec.d_in, spec.d_out)
-    raise GraphExecutionError(
-        f"{spec.name}: no weight layout for kind {spec.kind!r}"
-    )
+    raise GraphExecutionError(f"{spec.name}: no weight layout for kind {spec.kind!r}")
 
 
 def _fan_in(spec: LayerSpec) -> int:
@@ -235,6 +233,19 @@ def init_graph_params(
 # ==========================================================================
 
 
+def _merge_lanes(operands: List[jax.Array]) -> jax.Array:
+    """Order-preserving re-interleave of R dealt lane streams: lane k's
+    frame i becomes output frame i*R + k — the exact inverse of the
+    consumer-side ``x[k::R]`` deal, so split -> lanes -> merge is the
+    identity on the batch (bit-exact; conv is batch-parallel)."""
+    r = len(operands)
+    n = sum(o.shape[0] for o in operands)
+    out = jnp.zeros((n, *operands[0].shape[1:]), operands[0].dtype)
+    for k, o in enumerate(operands):
+        out = out.at[k::r].set(o)
+    return out
+
+
 def _node_forward(
     spec: LayerSpec,
     operands: List[jax.Array],
@@ -243,7 +254,7 @@ def _node_forward(
 ) -> jax.Array:
     # LayerGraph.add enforces this too; re-assert so a graph built any
     # other way cannot silently drop an in-edge the DSE planned for.
-    if len(operands) > 1 and spec.kind not in JOIN_KINDS:
+    if len(operands) > 1 and spec.kind not in JOIN_KINDS and spec.kind != "merge":
         raise GraphExecutionError(
             f"{spec.name}: kind {spec.kind!r} got {len(operands)} operands"
         )
@@ -278,6 +289,13 @@ def _node_forward(
             y = y + other
     elif spec.kind == "concat":
         y = jnp.concatenate(operands, axis=-1)
+    elif spec.kind == "split":
+        # Multi-CLP round-robin frame splitter (core.replicate): pure
+        # wiring — each lane consumer takes its dealt batch subsequence
+        # (the slicing happens consumer-side in ``_run_nodes``).
+        y = x
+    elif spec.kind == "merge":
+        y = _merge_lanes(operands)
     else:
         raise GraphExecutionError(f"{spec.name}: unknown kind {spec.kind!r}")
     try:
@@ -313,6 +331,8 @@ def _check_node(
     n = y.shape[0]
     if spec.kind in ("gap", "dense"):
         expect = (n, spec.d_out)
+    elif spec.kind in ("split", "merge") and y.ndim == 2:
+        expect = (n, spec.d_out)  # replication wiring on the post-gap vector
     else:
         expect = (n, *spec.out_hw, spec.d_out)
     if tuple(y.shape) != expect:
@@ -346,9 +366,7 @@ def _check_planned_tile(
     bug, not a legal re-fit.
     """
     if node_plan is None:
-        raise GraphExecutionError(
-            f"{spec.name}: node missing from the kernel plan"
-        )
+        raise GraphExecutionError(f"{spec.name}: node missing from the kernel plan")
     if not node_plan.has_kernel:
         return
     if got is None:
@@ -414,17 +432,13 @@ def _build_table(
     graph so a typoed node name fails loudly)."""
     table = default_impls()
     if plan is not None:
-        table.update(
-            kernel_impls(interpret=interpret, plan=plan, executed=executed)
-        )
+        table.update(kernel_impls(interpret=interpret, plan=plan, executed=executed))
     if impls:
         table.update(impls)
     if overrides:
         unknown = [n for n in overrides if n not in graph]
         if unknown:
-            raise GraphExecutionError(
-                f"overrides for unknown nodes: {unknown}"
-            )
+            raise GraphExecutionError(f"overrides for unknown nodes: {unknown}")
         bad = [n for n in overrides if not _is_arith(graph.spec(n))]
         if bad:
             raise GraphExecutionError(
@@ -468,7 +482,15 @@ def _run_nodes(
                     f"{name}: operands {missing} not materialized — "
                     f"producer scheduled in a later stage?"
                 )
-            operands = [values[p] for p in preds]
+            operands = []
+            for pr in preds:
+                v = values[pr]
+                if graph.spec(pr).kind == "split":
+                    # Replication lane: consume the dealt subsequence of
+                    # the split stream (this lane's slot in deal order).
+                    lanes = graph.succs(pr)
+                    v = v[lanes.index(name) :: len(lanes)]
+                operands.append(v)
         else:
             if x_input is None:
                 raise GraphExecutionError(
@@ -640,8 +662,13 @@ def stage_functions(
     stage_fns = []
     for s in range(partition.n_stages):
 
-        def run_stage(sp, bnd, xin, nodes=partition.stage_nodes(s),
-                      out=tuple(sorted(exports[s]))):
+        def run_stage(
+            sp,
+            bnd,
+            xin,
+            nodes=partition.stage_nodes(s),
+            out=tuple(sorted(exports[s])),
+        ):
             values = dict(bnd)
             _run_nodes(
                 graph,
@@ -833,8 +860,9 @@ def apply_staged(
             check=False,
         )
         for name, val in boundary.items():
-            if not np.allclose(np.asarray(val), np.asarray(mono[name]),
-                               rtol=1e-5, atol=1e-5):
+            if not np.allclose(
+                np.asarray(val), np.asarray(mono[name]), rtol=1e-5, atol=1e-5
+            ):
                 raise GraphExecutionError(
                     f"staged output for {name!r} diverges from the "
                     f"monolithic apply_graph"
@@ -890,10 +918,26 @@ def apply_int8(
     deq = dequantize_params(q_params, scales, dtype)
     if partition is not None:
         return apply_staged(
-            deq, x, graph, partition=partition, impls=impls, plan=plan,
-            overrides=overrides, interpret=interpret, dtype=dtype,
-            check=check, jit=jit,
+            deq,
+            x,
+            graph,
+            partition=partition,
+            impls=impls,
+            plan=plan,
+            overrides=overrides,
+            interpret=interpret,
+            dtype=dtype,
+            check=check,
+            jit=jit,
         )
-    return apply_graph(deq, x, graph, impls=impls, plan=plan,
-                       overrides=overrides, interpret=interpret,
-                       dtype=dtype, check=check)
+    return apply_graph(
+        deq,
+        x,
+        graph,
+        impls=impls,
+        plan=plan,
+        overrides=overrides,
+        interpret=interpret,
+        dtype=dtype,
+        check=check,
+    )

@@ -27,7 +27,10 @@ from repro.core.graph import LayerGraph
 from repro.core.rate import LayerSpec
 from repro.models import cnn
 from repro.models.topology import (
-    add_spec, conv_spec as _conv, dense_spec, gap_spec,
+    add_spec,
+    conv_spec as _conv,
+    dense_spec,
+    gap_spec,
 )
 
 
@@ -37,7 +40,8 @@ from repro.models.topology import (
 
 
 def mobilenet_v1_chain(
-    input_hw: Tuple[int, int] = (224, 224), alpha: float = 1.0,
+    input_hw: Tuple[int, int] = (224, 224),
+    alpha: float = 1.0,
     num_classes: int = 1000,
 ) -> List[LayerSpec]:
     def c(ch):
@@ -48,15 +52,26 @@ def mobilenet_v1_chain(
     spec, hw = _conv("conv1", "conv", 3, c(32), hw, 3, 2, act="relu6")
     layers.append(spec)
     # (dw stride, pw out channels)
-    cfg = [(1, 64), (2, 128), (1, 128), (2, 256), (1, 256), (2, 512),
-           (1, 512), (1, 512), (1, 512), (1, 512), (1, 512),
-           (2, 1024), (1, 1024)]
+    cfg = [
+        (1, 64),
+        (2, 128),
+        (1, 128),
+        (2, 256),
+        (1, 256),
+        (2, 512),
+        (1, 512),
+        (1, 512),
+        (1, 512),
+        (1, 512),
+        (1, 512),
+        (2, 1024),
+        (1, 1024),
+    ]
     d = c(32)
     for i, (s, out) in enumerate(cfg):
-        spec, hw = _conv(f"dw{i+1}", "dwconv", d, d, hw, 3, s, act="relu6")
+        spec, hw = _conv(f"dw{i + 1}", "dwconv", d, d, hw, 3, s, act="relu6")
         layers.append(spec)
-        spec, hw = _conv(f"pw{i+1}", "pointwise", d, c(out), hw, 1, 1,
-                         act="relu6")
+        spec, hw = _conv(f"pw{i + 1}", "pointwise", d, c(out), hw, 1, 1, act="relu6")
         layers.append(spec)
         d = c(out)
     layers.append(gap_spec("gap", d, hw))
@@ -80,6 +95,7 @@ def _v2_channels(alpha: float):
     def c(ch):
         ch = int(ch * alpha)
         return max(8, (ch + 4) // 8 * 8)
+
     return c
 
 
@@ -112,12 +128,10 @@ class _GraphSink:
         self.block_in = self.prev
 
     def layer(self, spec: LayerSpec) -> None:
-        self.prev = self.g.add(spec,
-                               [self.prev] if self.prev is not None else [])
+        self.prev = self.g.add(spec, [self.prev] if self.prev is not None else [])
 
     def join(self, name: str, d: int, hw: Tuple[int, int]) -> None:
-        self.prev = self.g.add(add_spec(name, d, hw),
-                               [self.prev, self.block_in])
+        self.prev = self.g.add(add_spec(name, d, hw), [self.prev, self.block_in])
 
 
 def _v2_body(sink, input_hw, alpha):
@@ -137,15 +151,18 @@ def _v2_body(sink, input_hw, alpha):
             exp = d * t
             sink.start_block()
             if t != 1:
-                spec, hw = _conv(f"b{blk}_expand", "pointwise", d, exp, hw,
-                                 1, 1, act="relu6")
+                spec, hw = _conv(
+                    f"b{blk}_expand", "pointwise", d, exp, hw, 1, 1, act="relu6"
+                )
                 sink.layer(spec)
-            spec, hw = _conv(f"b{blk}_dw", "dwconv", exp, exp, hw, 3, stride,
-                             act="relu6")
+            spec, hw = _conv(
+                f"b{blk}_dw", "dwconv", exp, exp, hw, 3, stride, act="relu6"
+            )
             sink.layer(spec)
             # linear bottleneck: no activation on the projection
-            spec, hw = _conv(f"b{blk}_project", "pointwise", exp, c(ch), hw,
-                             1, 1, act="none")
+            spec, hw = _conv(
+                f"b{blk}_project", "pointwise", exp, c(ch), hw, 1, 1, act="none"
+            )
             sink.layer(spec)
             if stride == 1 and d == c(ch):
                 sink.join(f"b{blk}_add", c(ch), hw)
@@ -157,7 +174,8 @@ def _v2_body(sink, input_hw, alpha):
 
 
 def mobilenet_v2_chain(
-    input_hw: Tuple[int, int] = (224, 224), alpha: float = 1.0,
+    input_hw: Tuple[int, int] = (224, 224),
+    alpha: float = 1.0,
     num_classes: int = 1000,
 ) -> List[LayerSpec]:
     sink = _ChainSink()
@@ -168,7 +186,8 @@ def mobilenet_v2_chain(
 
 
 def mobilenet_v2_graph(
-    input_hw: Tuple[int, int] = (224, 224), alpha: float = 1.0,
+    input_hw: Tuple[int, int] = (224, 224),
+    alpha: float = 1.0,
     num_classes: int = 1000,
 ) -> LayerGraph:
     """MobileNetV2 as a true DAG: inverted-residual blocks with stride 1
@@ -187,6 +206,7 @@ def mobilenet_v2_graph(
 # JAX model (NHWC, folded BN) — the shared executor on the same graph
 # ==========================================================================
 
+
 @dataclasses.dataclass(frozen=True)
 class MobileNetConfig:
     version: int = 2
@@ -202,8 +222,7 @@ class MobileNetConfig:
     def graph(self) -> LayerGraph:
         """DAG view: v2 gets real residual joins; v1 is a linear graph."""
         if self.version == 2:
-            return mobilenet_v2_graph(self.input_hw, self.alpha,
-                                      self.num_classes)
+            return mobilenet_v2_graph(self.input_hw, self.alpha, self.num_classes)
         return LayerGraph.from_chain(self.chain())
 
 
@@ -232,10 +251,17 @@ def apply(
     tiled per its own DSE choice; ``overrides`` supplies
     node-name-keyed impls that win over both.
     """
-    return cnn.apply_graph(params, x, cfg.graph(), impls=conv_impls,
-                           plan=plan, overrides=overrides,
-                           interpret=interpret,
-                           dtype=cfg.dtype, check=check)
+    return cnn.apply_graph(
+        params,
+        x,
+        cfg.graph(),
+        impls=conv_impls,
+        plan=plan,
+        overrides=overrides,
+        interpret=interpret,
+        dtype=cfg.dtype,
+        check=check,
+    )
 
 
 def apply_staged(
@@ -257,23 +283,50 @@ def apply_staged(
     each stage jitted separately, cut-crossing activations — including
     the skew-buffered residual shortcuts — threaded across the
     boundaries.  See ``cnn.apply_staged``."""
-    return cnn.apply_staged(params, x, cfg.graph(), partition=partition,
-                            impls=conv_impls, plan=plan,
-                            overrides=overrides, interpret=interpret,
-                            dtype=cfg.dtype, check=check, jit=jit,
-                            check_monolithic=check_monolithic)
+    return cnn.apply_staged(
+        params,
+        x,
+        cfg.graph(),
+        partition=partition,
+        impls=conv_impls,
+        plan=plan,
+        overrides=overrides,
+        interpret=interpret,
+        dtype=cfg.dtype,
+        check=check,
+        jit=jit,
+        check_monolithic=check_monolithic,
+    )
 
 
 # the paper's 8-bit datapath — shared with every CNN family
 quantize_params = cnn.quantize_params
 
 
-def apply_int8(q_params, scales, x, cfg: MobileNetConfig, *,
-               plan=None, overrides=None, partition=None,
-               interpret: bool = True, jit: bool = True) -> jax.Array:
+def apply_int8(
+    q_params,
+    scales,
+    x,
+    cfg: MobileNetConfig,
+    *,
+    plan=None,
+    overrides=None,
+    partition=None,
+    interpret: bool = True,
+    jit: bool = True,
+) -> jax.Array:
     """Inference with int8 weights dequantized on the fly (sim of the
     FPGA's int8 datapath; activations stay float — activation quant is
     exercised in the kernels' int8 mode)."""
-    return cnn.apply_int8(q_params, scales, x, cfg.graph(), plan=plan,
-                          overrides=overrides, partition=partition,
-                          interpret=interpret, dtype=cfg.dtype, jit=jit)
+    return cnn.apply_int8(
+        q_params,
+        scales,
+        x,
+        cfg.graph(),
+        plan=plan,
+        overrides=overrides,
+        partition=partition,
+        interpret=interpret,
+        dtype=cfg.dtype,
+        jit=jit,
+    )

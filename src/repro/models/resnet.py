@@ -29,7 +29,11 @@ import jax.numpy as jnp
 from repro.core.graph import LayerGraph
 from repro.models import cnn
 from repro.models.topology import (
-    add_spec, conv_spec, dense_spec, gap_spec, pool_spec,
+    add_spec,
+    conv_spec,
+    dense_spec,
+    gap_spec,
+    pool_spec,
 )
 
 _RESNET_STAGES = {
@@ -38,13 +42,21 @@ _RESNET_STAGES = {
 }
 
 
-def _conv(name: str, d_in: int, d_out: int, hw: Tuple[int, int],
-          k: int, s: int, act: str) -> Tuple:
+def _conv(
+    name: str, d_in: int, d_out: int, hw: Tuple[int, int], k: int, s: int, act: str
+) -> Tuple:
     return conv_spec(name, "conv", d_in, d_out, hw, k, s, act=act)
 
 
-def _basic_block(g: LayerGraph, prev: str, name: str, d_in: int, d_out: int,
-                 hw: Tuple[int, int], stride: int) -> Tuple[str, Tuple[int, int]]:
+def _basic_block(
+    g: LayerGraph,
+    prev: str,
+    name: str,
+    d_in: int,
+    d_out: int,
+    hw: Tuple[int, int],
+    stride: int,
+) -> Tuple[str, Tuple[int, int]]:
     """conv3x3(s)+relu -> conv3x3(1) summed with the shortcut (identity,
     or a strided 1x1 projection when shape changes), relu after the add —
     the post-activation ResNet-v1 arrangement with BN folded away."""
@@ -59,13 +71,13 @@ def _basic_block(g: LayerGraph, prev: str, name: str, d_in: int, d_out: int,
         shortcut = g.add(ds, [block_in])
     else:
         shortcut = block_in
-    prev = g.add(add_spec(f"{name}_add", d_out, out_hw, act="relu"),
-                 [prev, shortcut])
+    prev = g.add(add_spec(f"{name}_add", d_out, out_hw, act="relu"), [prev, shortcut])
     return prev, out_hw
 
 
-def _resnet_graph(stages: List[Tuple[int, int]],
-                  input_hw: Tuple[int, int], num_classes: int) -> LayerGraph:
+def _resnet_graph(
+    stages: List[Tuple[int, int]], input_hw: Tuple[int, int], num_classes: int
+) -> LayerGraph:
     g = LayerGraph()
     spec, hw = _conv("conv1", 3, 64, input_hw, 7, 2, "relu")
     prev = g.add(spec)
@@ -75,21 +87,22 @@ def _resnet_graph(stages: List[Tuple[int, int]],
     for si, (ch, blocks) in enumerate(stages, start=1):
         for bi in range(blocks):
             stride = 2 if (si > 1 and bi == 0) else 1
-            prev, hw = _basic_block(g, prev, f"l{si}b{bi + 1}", d, ch, hw,
-                                    stride)
+            prev, hw = _basic_block(g, prev, f"l{si}b{bi + 1}", d, ch, hw, stride)
             d = ch
     prev = g.add(gap_spec("gap", d, hw), [prev])
     g.add(dense_spec("fc", d, num_classes), [prev])
     return g
 
 
-def resnet18_graph(input_hw: Tuple[int, int] = (224, 224),
-                   num_classes: int = 1000) -> LayerGraph:
+def resnet18_graph(
+    input_hw: Tuple[int, int] = (224, 224), num_classes: int = 1000
+) -> LayerGraph:
     return _resnet_graph(_RESNET_STAGES[18], input_hw, num_classes)
 
 
-def resnet34_graph(input_hw: Tuple[int, int] = (224, 224),
-                   num_classes: int = 1000) -> LayerGraph:
+def resnet34_graph(
+    input_hw: Tuple[int, int] = (224, 224), num_classes: int = 1000
+) -> LayerGraph:
     return _resnet_graph(_RESNET_STAGES[34], input_hw, num_classes)
 
 
@@ -100,7 +113,7 @@ def resnet34_graph(input_hw: Tuple[int, int] = (224, 224),
 
 @dataclasses.dataclass(frozen=True)
 class ResNetConfig:
-    depth: int = 18                       # 18 | 34
+    depth: int = 18  # 18 | 34
     input_hw: Tuple[int, int] = (224, 224)
     num_classes: int = 1000
     dtype: jnp.dtype = jnp.float32
@@ -110,8 +123,9 @@ class ResNetConfig:
             raise ValueError(f"unsupported ResNet depth {self.depth}")
 
     def graph(self) -> LayerGraph:
-        return _resnet_graph(_RESNET_STAGES[self.depth], self.input_hw,
-                             self.num_classes)
+        return _resnet_graph(
+            _RESNET_STAGES[self.depth], self.input_hw, self.num_classes
+        )
 
 
 def init_params(cfg: ResNetConfig, rng: jax.Array) -> cnn.Params:
@@ -137,10 +151,17 @@ def apply(
     path instead — each node's Pallas call tiled per its own DSE choice;
     ``overrides`` supplies node-name-keyed impls that win over both.
     """
-    return cnn.apply_graph(params, x, cfg.graph(), impls=conv_impls,
-                           plan=plan, overrides=overrides,
-                           interpret=interpret,
-                           dtype=cfg.dtype, check=check)
+    return cnn.apply_graph(
+        params,
+        x,
+        cfg.graph(),
+        impls=conv_impls,
+        plan=plan,
+        overrides=overrides,
+        interpret=interpret,
+        dtype=cfg.dtype,
+        check=check,
+    )
 
 
 def apply_staged(
@@ -161,19 +182,46 @@ def apply_staged(
     ``GraphStagePlan`` or a ``GraphPlan`` planned with ``n_stages=``):
     each stage jitted separately, cut-crossing activations threaded
     across the boundaries.  See ``cnn.apply_staged``."""
-    return cnn.apply_staged(params, x, cfg.graph(), partition=partition,
-                            impls=conv_impls, plan=plan,
-                            overrides=overrides, interpret=interpret,
-                            dtype=cfg.dtype, check=check, jit=jit,
-                            check_monolithic=check_monolithic)
+    return cnn.apply_staged(
+        params,
+        x,
+        cfg.graph(),
+        partition=partition,
+        impls=conv_impls,
+        plan=plan,
+        overrides=overrides,
+        interpret=interpret,
+        dtype=cfg.dtype,
+        check=check,
+        jit=jit,
+        check_monolithic=check_monolithic,
+    )
 
 
 quantize_params = cnn.quantize_params
 
 
-def apply_int8(q_params, scales, x, cfg: ResNetConfig, *,
-               plan=None, overrides=None, partition=None,
-               interpret: bool = True, jit: bool = True) -> jax.Array:
-    return cnn.apply_int8(q_params, scales, x, cfg.graph(), plan=plan,
-                          overrides=overrides, partition=partition,
-                          interpret=interpret, dtype=cfg.dtype, jit=jit)
+def apply_int8(
+    q_params,
+    scales,
+    x,
+    cfg: ResNetConfig,
+    *,
+    plan=None,
+    overrides=None,
+    partition=None,
+    interpret: bool = True,
+    jit: bool = True,
+) -> jax.Array:
+    return cnn.apply_int8(
+        q_params,
+        scales,
+        x,
+        cfg.graph(),
+        plan=plan,
+        overrides=overrides,
+        partition=partition,
+        interpret=interpret,
+        dtype=cfg.dtype,
+        jit=jit,
+    )

@@ -80,6 +80,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.replicate import lane_multiplicity
 from repro.models import cnn
 
 
@@ -100,9 +101,17 @@ def _frame_features(spec) -> int:
 
 def node_frame_cycles(plan, name: str) -> Fraction:
     """Cycles one frame occupies one node: frame features over installed
-    capacity — the request-level service time of the node."""
+    capacity — the request-level service time of the node.
+
+    A Multi-CLP replication lane (``plan.replications``) sees only 1 of
+    every R admitted frames, so its per-admitted-frame service amortizes
+    by R — which makes the request-level utilization of a lane exactly
+    the DSE's ``demand/capacity`` at its dealt rate, same as every other
+    node."""
     spec = plan.graph.spec(name)
-    return Fraction(_frame_features(spec)) / plan.impls[name].capacity
+    cyc = Fraction(_frame_features(spec)) / plan.impls[name].capacity
+    r = lane_multiplicity(plan, name)
+    return cyc / r if r > 1 else cyc
 
 
 def slot_cycles(plan) -> Fraction:
@@ -238,6 +247,33 @@ class _StageState:
         self.last_done: Optional[Fraction] = None
         self.batches_served = 0
         self.frames_served = 0
+
+
+@dataclasses.dataclass
+class _RunState:
+    """Mutable state of one serving run (``begin`` .. ``finish``).
+
+    Hoisted out of ``run``'s closure so the event loop is steppable:
+    a multi-tenant scheduler (``fleet.scheduler``) drives several
+    engines on one shared clock via ``advance`` / ``next_event``.
+    """
+
+    arrival_rate: Fraction
+    horizon: Fraction
+    max_ticks: int
+    flush_cycles: Optional[Fraction]  # None = flush only at stream end
+    n: int
+    queues: List[deque]
+    qev: List[List[Tuple[Fraction, int]]]
+    max_q: List[int]
+    stages: List[_StageState]
+    pending: deque
+    forming: List[FrameRequest]
+    arr_idx: int = 0
+    next_bid: int = 0
+    completed: int = 0
+    req_peak: int = 0
+    t: Fraction = Fraction(0)
 
 
 # ==========================================================================
@@ -484,23 +520,40 @@ class CNNStreamEngine:
                 f.out = out[i]
 
     # -- the event loop ----------------------------------------------------
+    #
+    # The loop is steppable: ``begin`` installs a fresh ``_RunState``,
+    # ``advance(t)`` settles the engine at clock time t, ``next_event(t)``
+    # names the next time anything can happen, and ``finish`` builds the
+    # report once ``finished``.  ``run`` is the single-engine driver;
+    # ``fleet.scheduler.FleetScheduler`` drives several engines' states
+    # on one shared rational clock with exactly these four calls.
 
-    def run(
+    def begin(
         self,
         *,
         arrival_rate: Fraction = Fraction(1),
         max_ticks: int = 1_000_000,
-    ) -> ServeReport:
-        """Serve every submitted frame; return the telemetry report.
+        flush_after_ticks: Optional[Fraction] = None,
+    ) -> _RunState:
+        """Install a fresh run over the submitted frames.
 
-        ``arrival_rate`` is in frames/tick (1 = frames arriving exactly
-        at the plan's input rate; ``best_rate`` is the sustainable
-        ceiling).  The run is a deterministic discrete-event loop on an
-        exact rational clock; it ends when the pipeline drains.
+        ``flush_after_ticks`` bounds how long a partial micro-batch may
+        wait for more arrivals: once the *oldest* admitted frame has been
+        forming for that many ticks, the partial batch is flushed into
+        the pipeline (padded at execution, exactly like the end-of-stream
+        flush).  ``None`` keeps the original behavior — partial batches
+        flush only when the stream ends.
         """
         arrival_rate = Fraction(arrival_rate)
         if arrival_rate <= 0:
             raise ServingError(f"arrival_rate must be > 0, got {arrival_rate}")
+        flush_cycles = None
+        if flush_after_ticks is not None:
+            flush_cycles = Fraction(flush_after_ticks) * self.slot
+            if flush_cycles < 0:
+                raise ServingError(
+                    f"flush_after_ticks must be >= 0, got {flush_after_ticks}"
+                )
         reqs = self._requests
         n = len(reqs)
         if n == 0:
@@ -508,130 +561,186 @@ class CNNStreamEngine:
         inter = self.slot / arrival_rate
         for i, r in enumerate(reqs):
             r.t_submit = i * inter
+        self._rt = _RunState(
+            arrival_rate=arrival_rate,
+            horizon=self.slot * max_ticks,
+            max_ticks=max_ticks,
+            flush_cycles=flush_cycles,
+            n=n,
+            queues=[deque() for _ in range(self.n_stages)],
+            qev=[[] for _ in range(self.n_stages)],
+            max_q=[0] * self.n_stages,
+            stages=[_StageState() for _ in range(self.n_stages)],
+            pending=deque(),
+            forming=[],
+        )
+        return self._rt
 
-        queues: List[deque] = [deque() for _ in range(self.n_stages)]
-        qev: List[List[Tuple[Fraction, int]]] = [[] for _ in range(self.n_stages)]
-        max_q = [0] * self.n_stages
-        stages = [_StageState() for _ in range(self.n_stages)]
-        pending: deque = deque()
-        forming: List[FrameRequest] = []
-        arr_idx = 0
-        next_bid = 0
-        completed = 0
-        req_peak = 0
-        t = Fraction(0)
-        horizon = self.slot * max_ticks
+    @property
+    def finished(self) -> bool:
+        """Every submitted frame served (valid between begin and finish)."""
+        rt = self._rt
+        return rt.completed >= rt.n
 
-        def enqueue(s: int, batch: _Batch, now: Fraction) -> None:
-            queues[s].append(batch)
-            qev[s].append((now / self.slot, len(queues[s])))
-            max_q[s] = max(max_q[s], len(queues[s]))
+    def advance(self, t: Fraction) -> None:
+        """Move the run's clock to ``t`` and settle every consequence."""
+        rt = self._rt
+        rt.t = t
+        self._settle(t)
 
-        def dequeue(s: int, now: Fraction) -> _Batch:
-            batch = queues[s].popleft()
-            qev[s].append((now / self.slot, len(queues[s])))
+    def next_event(self, after: Fraction) -> Optional[Fraction]:
+        """Earliest future time anything can happen, or None (deadlock)."""
+        rt = self._rt
+        cands = [self._requests[rt.arr_idx].t_submit] if rt.arr_idx < rt.n else []
+        # a blocked stage (service done, downstream full) has no future
+        # event of its own — the downstream completion that unblocks it
+        # is in this list, and the settle re-examines it.
+        cands += [
+            st.busy_until
+            for st in rt.stages
+            if st.busy_until is not None and st.busy_until > after
+        ]
+        if rt.flush_cycles is not None and rt.forming:
+            cands.append(rt.forming[0].t_admit + rt.flush_cycles)
+        cands = [c for c in cands if c > after]
+        return min(cands) if cands else None
+
+    def finish(self) -> ServeReport:
+        """Assemble the report once the run has drained."""
+        rt = self._rt
+        if not self.finished:
+            raise ServingError(f"run not drained: {rt.completed}/{rt.n} frames served")
+        return self._report(
+            rt.arrival_rate, rt.stages, rt.max_q, rt.qev, rt.t, rt.req_peak
+        )
+
+    def _settle(self, now: Fraction) -> None:
+        rt = self._rt
+        reqs = self._requests
+
+        def enqueue(s: int, batch: _Batch) -> None:
+            rt.queues[s].append(batch)
+            rt.qev[s].append((now / self.slot, len(rt.queues[s])))
+            rt.max_q[s] = max(rt.max_q[s], len(rt.queues[s]))
+
+        def dequeue(s: int) -> _Batch:
+            batch = rt.queues[s].popleft()
+            rt.qev[s].append((now / self.slot, len(rt.queues[s])))
             return batch
 
-        def settle(now: Fraction) -> None:
-            nonlocal arr_idx, forming, next_bid, completed, req_peak
-            progress = True
-            while progress:
-                progress = False
-                # 1. completions + pushes, downstream first (drain first)
-                for s in range(self.n_stages - 1, -1, -1):
-                    st = stages[s]
-                    if st.batch is None or st.busy_until > now:
-                        continue
-                    if s == self.n_stages - 1:
-                        self._finish_batch(st.batch, now)
-                        completed += len(st.batch.frames)
-                    elif len(queues[s + 1]) < self.caps[s + 1]:
-                        enqueue(s + 1, st.batch, now)
-                    else:
-                        continue  # blocked: downstream full (stall)
-                    st.stall_cycles += now - st.busy_until
-                    st.last_done = now
-                    st.batch = None
-                    st.busy_until = None
+        progress = True
+        while progress:
+            progress = False
+            # 1. completions + pushes, downstream first (drain first)
+            for s in range(self.n_stages - 1, -1, -1):
+                st = rt.stages[s]
+                if st.batch is None or st.busy_until > now:
+                    continue
+                if s == self.n_stages - 1:
+                    self._finish_batch(st.batch, now)
+                    rt.completed += len(st.batch.frames)
+                elif len(rt.queues[s + 1]) < self.caps[s + 1]:
+                    enqueue(s + 1, st.batch)
+                else:
+                    continue  # blocked: downstream full (stall)
+                st.stall_cycles += now - st.busy_until
+                st.last_done = now
+                st.batch = None
+                st.busy_until = None
+                progress = True
+            # 2. starts (a freed stage pulls from its queue)
+            for s in range(self.n_stages - 1, -1, -1):
+                st = rt.stages[s]
+                if st.batch is not None or not rt.queues[s]:
+                    continue
+                batch = dequeue(s)
+                self._start_batch_exec(s, batch)
+                svc = self.rates[s].svc_cycles * len(batch.frames)
+                st.batch = batch
+                st.busy_until = now + svc
+                st.busy_cycles += svc
+                st.intervals.append((now, now + svc))
+                if st.first_start is None:
+                    st.first_start = now
+                st.batches_served += 1
+                st.frames_served += len(batch.frames)
+                progress = True
+            # 3. arrivals into the request queue
+            while rt.arr_idx < rt.n and reqs[rt.arr_idx].t_submit <= now:
+                rt.pending.append(reqs[rt.arr_idx])
+                rt.arr_idx += 1
+                progress = True
+            rt.req_peak = max(rt.req_peak, len(rt.pending) + len(rt.forming))
+            # 4. admission (Eq. 9 gate: pipeline slack at the gate)
+            while rt.pending or rt.forming:
+                if len(rt.forming) == self.microbatch:
+                    if len(rt.queues[0]) >= self.caps[0]:
+                        break  # backpressured: admission halted
+                    enqueue(0, _Batch(rt.next_bid, rt.forming))
+                    rt.next_bid += 1
+                    rt.forming = []
                     progress = True
-                # 2. starts (a freed stage pulls from its queue)
-                for s in range(self.n_stages - 1, -1, -1):
-                    st = stages[s]
-                    if st.batch is not None or not queues[s]:
-                        continue
-                    batch = dequeue(s, now)
-                    self._start_batch_exec(s, batch)
-                    svc = self.rates[s].svc_cycles * len(batch.frames)
-                    st.batch = batch
-                    st.busy_until = now + svc
-                    st.busy_cycles += svc
-                    st.intervals.append((now, now + svc))
-                    if st.first_start is None:
-                        st.first_start = now
-                    st.batches_served += 1
-                    st.frames_served += len(batch.frames)
+                elif rt.pending:
+                    req = rt.pending.popleft()
+                    req.t_admit = now
+                    rt.forming.append(req)
                     progress = True
-                # 3. arrivals into the request queue
-                while arr_idx < n and reqs[arr_idx].t_submit <= now:
-                    pending.append(reqs[arr_idx])
-                    arr_idx += 1
-                    progress = True
-                req_peak = max(req_peak, len(pending) + len(forming))
-                # 4. admission (Eq. 9 gate: pipeline slack at the gate)
-                while pending or forming:
-                    if len(forming) == self.microbatch:
-                        if len(queues[0]) >= self.caps[0]:
-                            break  # backpressured: admission halted
-                        enqueue(0, _Batch(next_bid, forming), now)
-                        next_bid += 1
-                        forming = []
-                        progress = True
-                    elif pending:
-                        req = pending.popleft()
-                        req.t_admit = now
-                        forming.append(req)
-                        progress = True
-                    else:
-                        break
-                # 5. end-of-stream: flush the final partial batch
-                if (
-                    arr_idx == n
-                    and not pending
-                    and forming
-                    and len(queues[0]) < self.caps[0]
-                ):
-                    enqueue(0, _Batch(next_bid, forming), now)
-                    next_bid += 1
-                    forming = []
-                    progress = True
+                else:
+                    break
+            # 5. flush the partial batch: at end of stream, or once its
+            # oldest frame has waited flush_after_ticks (straggler bound)
+            flush_due = (
+                rt.flush_cycles is not None
+                and rt.forming
+                and now - rt.forming[0].t_admit >= rt.flush_cycles
+            )
+            if (
+                rt.forming
+                and len(rt.queues[0]) < self.caps[0]
+                and (flush_due or (rt.arr_idx == rt.n and not rt.pending))
+            ):
+                enqueue(0, _Batch(rt.next_bid, rt.forming))
+                rt.next_bid += 1
+                rt.forming = []
+                progress = True
 
-        while completed < n:
-            settle(t)
-            if completed >= n:
+    def run(
+        self,
+        *,
+        arrival_rate: Fraction = Fraction(1),
+        max_ticks: int = 1_000_000,
+        flush_after_ticks: Optional[Fraction] = None,
+    ) -> ServeReport:
+        """Serve every submitted frame; return the telemetry report.
+
+        ``arrival_rate`` is in frames/tick (1 = frames arriving exactly
+        at the plan's input rate; ``best_rate`` is the sustainable
+        ceiling).  ``flush_after_ticks`` bounds partial-batch waiting
+        (see ``begin``).  The run is a deterministic discrete-event loop
+        on an exact rational clock; it ends when the pipeline drains.
+        """
+        rt = self.begin(
+            arrival_rate=arrival_rate,
+            max_ticks=max_ticks,
+            flush_after_ticks=flush_after_ticks,
+        )
+        while True:
+            self.advance(rt.t)
+            if self.finished:
                 break
-            cands = [reqs[arr_idx].t_submit] if arr_idx < n else []
-            # a blocked stage (service done, downstream full) has no
-            # future event of its own — the downstream completion that
-            # unblocks it is in this list, and settle() re-examines it.
-            cands += [
-                st.busy_until
-                for st in stages
-                if st.busy_until is not None and st.busy_until > t
-            ]
-            cands = [c for c in cands if c > t]
-            if not cands:
+            nxt = self.next_event(rt.t)
+            if nxt is None:
                 raise ServingError(
-                    f"serving deadlock at tick {float(t / self.slot):.1f} "
-                    f"({completed}/{n} frames served)"
+                    f"serving deadlock at tick {float(rt.t / self.slot):.1f} "
+                    f"({rt.completed}/{rt.n} frames served)"
                 )
-            t = min(cands)
-            if t > horizon:
+            if nxt > rt.horizon:
                 raise ServingError(
-                    f"exceeded max_ticks={max_ticks} with {completed}/{n} "
-                    f"frames served"
+                    f"exceeded max_ticks={max_ticks} with {rt.completed}/"
+                    f"{rt.n} frames served"
                 )
-
-        return self._report(arrival_rate, stages, max_q, qev, t, req_peak)
+            rt.t = nxt
+        return self.finish()
 
     # -- report assembly ---------------------------------------------------
 
@@ -715,6 +824,7 @@ def serve_frames(
     jit: bool = True,
     execute: bool = True,
     max_ticks: int = 1_000_000,
+    flush_after_ticks: Optional[Fraction] = None,
     **dse_kwargs,
 ):
     """Plan, stream, and serve ``frames`` through a staged pipeline.
@@ -724,10 +834,17 @@ def serve_frames(
     the micro-batch (``rate_matched=True``), and serves every frame at
     ``arrival_rate`` (frames/tick).  Returns ``(outputs, report)``;
     ``outputs`` is None when ``execute=False`` (timing model only).
+    A ``replicate=`` kwarg flows through to ``plan_graph`` — the engine
+    then runs the rewritten graph with the hot node's params aliased
+    onto the lanes.
     """
     from repro.core.graph import plan_graph
+    from repro.core.replicate import replicate_params
 
     plan = plan_graph(graph, input_rate, n_stages=n_stages, **dse_kwargs)
+    if plan.replications:
+        graph = plan.graph
+        params = replicate_params(params, plan.replications)
     kp = plan.kernel_plan(batch=microbatch) if rate_matched else None
     engine = CNNStreamEngine(
         graph,
@@ -746,6 +863,10 @@ def serve_frames(
     else:
         for _ in range(int(frames) if isinstance(frames, int) else len(frames)):
             engine.submit(None)
-    report = engine.run(arrival_rate=arrival_rate, max_ticks=max_ticks)
+    report = engine.run(
+        arrival_rate=arrival_rate,
+        max_ticks=max_ticks,
+        flush_after_ticks=flush_after_ticks,
+    )
     outputs = engine.outputs() if execute else None
     return outputs, report

@@ -1,0 +1,191 @@
+"""Multi-CLP bottleneck replication (core/replicate.py).
+
+Property surface, per the fleet subsystem's acceptance bar:
+
+* rate algebra — for every registry family and R in {2, 3}, the
+  replicated plan's discrete-event run (``simulate_graph``) is
+  stall-free with every FIFO within its analytic bound, and the merge
+  restores exactly the unreplicated output rate;
+* executor — split/merge round-trips are bit-exact: fp32 allclose and
+  int8 bit-exact against the *unreplicated* ``apply_graph``, including
+  2D (dense) replication and staged execution;
+* planning — the replication DSE strictly improves the ResNet-18
+  S=3 min-bottleneck balance at equal total arithmetic (the pinned
+  ``benchmarks/table7_fleet.py`` row), and the baseline always competes
+  (``best_replication`` is never worse than ``plan_graph``);
+* validation — bad node names, kinds, and R values fail loudly.
+"""
+from fractions import Fraction as F
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.graph import GraphError, plan_graph
+from repro.core.replicate import (
+    apply_replications,
+    best_replication,
+    lane_multiplicity,
+    replicable_nodes,
+    replicate_node,
+    replicate_params,
+    select_bottleneck,
+)
+from repro.core.schedule import simulate_graph
+from repro.models import cnn
+from repro.models.registry import cnn_families, get_cnn_api
+
+RATE = F(1, 2)
+HW = 16
+
+
+def _family_graph(family, hw=HW, num_classes=4):
+    api = get_cnn_api(family)
+    cfg = api.make_config(input_hw=(hw, hw), num_classes=num_classes)
+    return api, cfg, cfg.graph()
+
+
+# ---------------------------------------------------------------------------
+# rate algebra: replicated plans keep continuous flow, lanes carry rate/R
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", cnn_families())
+@pytest.mark.parametrize("r", (2, 3))
+def test_replicated_sim_stall_free_within_bounds(family, r):
+    _, _, graph = _family_graph(family)
+    plan = plan_graph(graph, RATE, replicate=r)
+    rep = plan.replications[0]
+    res = simulate_graph(plan, n_pixels=64)
+    assert res.stall_free, res.stalled_nodes
+    assert res.within_bounds
+    # the merge restores the unreplicated output rate; lanes carry 1/R
+    base = plan_graph(graph, RATE)
+    assert plan.timing[rep.merge].q_out == base.timing[rep.node].q_out
+    for lane in rep.lanes:
+        assert plan.demands[lane] == base.demands[rep.node] / r
+        assert lane_multiplicity(plan, lane) == r
+    assert lane_multiplicity(plan, rep.merge) == 1
+
+
+@pytest.mark.parametrize("r", (2, 3))
+def test_lanes_identical_and_sized_for_dealt_rate(r):
+    """All R lanes get the same impl, chosen for demand/R (Eq. 9 on the
+    lane); sums may differ from the base by divisor granularity — at
+    even splits (R=2 here) arithmetic is exactly preserved."""
+    _, _, graph = _family_graph("resnet18")
+    base = plan_graph(graph, RATE)
+    plan = plan_graph(graph, RATE, replicate=r)
+    rep = plan.replications[0]
+    impls = [plan.impls[lane] for lane in rep.lanes]
+    assert all((i.j, i.h, i.mults) == (impls[0].j, impls[0].h,
+                                       impls[0].mults) for i in impls)
+    for i in impls:
+        assert i.capacity >= base.demands[rep.node] / r  # Eq. 9 per lane
+    if r == 2:
+        assert sum(i.mults for i in impls) == base.impls[rep.node].mults
+    # split/merge are wiring: no multipliers
+    assert plan.impls[rep.split].mults == 0
+    assert plan.impls[rep.merge].mults == 0
+
+
+# ---------------------------------------------------------------------------
+# executor: split/merge round-trip vs the unreplicated apply_graph
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", ("mobilenet_v2", "resnet18"))
+@pytest.mark.parametrize("r", (2, 3))
+def test_replicated_apply_matches_unreplicated(family, r):
+    api, cfg, graph = _family_graph(family)
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    rg, reps = apply_replications(graph, r, input_rate=RATE)
+    rparams = replicate_params(params, reps)
+    x = np.random.default_rng(1).standard_normal((5, HW, HW, 3))
+    x = x.astype(np.float32)
+    ref = np.asarray(cnn.apply_graph(params, x, graph))
+    got = np.asarray(cnn.apply_graph(rparams, x, rg))
+    np.testing.assert_array_equal(got, ref)  # bit-exact: same math per lane
+
+
+def test_replicated_apply_int8_bit_exact():
+    api, cfg, graph = _family_graph("resnet18")
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    q_params, scales = api.quantize(params)
+    rg, reps = apply_replications(graph, (select_bottleneck(
+        plan_graph(graph, RATE)), 2), input_rate=RATE)
+    x = np.random.default_rng(2).standard_normal((4, HW, HW, 3))
+    x = x.astype(np.float32)
+    ref = np.asarray(cnn.apply_int8(q_params, scales, x, graph))
+    got = np.asarray(cnn.apply_int8(
+        replicate_params(q_params, reps), replicate_params(scales, reps),
+        x, rg))
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_dense_replication_2d_round_trip():
+    """Replicating the classifier exercises the 2D deal/merge path."""
+    api, cfg, graph = _family_graph("mobilenet_v1")
+    params = api.init(cfg, jax.random.PRNGKey(3))
+    dense = [n for n in replicable_nodes(graph)
+             if graph.spec(n).kind == "dense"][-1]
+    rg, reps = apply_replications(graph, (dense, 3), input_rate=RATE)
+    x = np.random.default_rng(4).standard_normal((7, HW, HW, 3))
+    x = x.astype(np.float32)
+    ref = np.asarray(cnn.apply_graph(params, x, graph))
+    got = np.asarray(cnn.apply_graph(replicate_params(params, reps), x, rg))
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_staged_apply_over_replicated_graph():
+    api, cfg, graph = _family_graph("resnet18")
+    params = api.init(cfg, jax.random.PRNGKey(5))
+    plan = plan_graph(graph, RATE, n_stages=3, replicate=2)
+    rparams = replicate_params(params, plan.replications)
+    x = np.random.default_rng(6).standard_normal((3, HW, HW, 3))
+    x = x.astype(np.float32)
+    ref = np.asarray(cnn.apply_graph(params, x, graph))
+    got = np.asarray(
+        cnn.apply_staged(rparams, x, plan.graph, partition=plan))
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# planning: the replication DSE and its strict-improvement pin
+# ---------------------------------------------------------------------------
+
+def test_best_replication_strictly_improves_resnet18_s3():
+    """The table7 pin: bottleneck 18944 -> 18624 at equal arithmetic."""
+    api = get_cnn_api("resnet18")
+    graph = api.graph(api.make_config())
+    base = plan_graph(graph, F(3), n_stages=3)
+    rep = best_replication(graph, F(3), n_stages=3)
+    assert max(base.stage_mults()) == 18944
+    assert rep.replications, "replication DSE kept the baseline"
+    assert max(rep.stage_mults()) == 18624
+    assert rep.total_mults == base.total_mults == 54736
+
+
+def test_best_replication_never_worse_than_baseline():
+    _, _, graph = _family_graph("mobilenet_v1")
+    base = plan_graph(graph, RATE, n_stages=2)
+    rep = best_replication(graph, RATE, n_stages=2)
+    assert max(rep.stage_mults()) <= max(base.stage_mults())
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+
+def test_replicate_validation_errors():
+    _, _, graph = _family_graph("resnet18")
+    hot = replicable_nodes(graph)[0]
+    with pytest.raises(GraphError, match="R must be >= 2"):
+        replicate_node(graph, hot, 1)
+    with pytest.raises(GraphError, match="unknown node"):
+        replicate_node(graph, "nope", 2)
+    pool = next(n for n in graph.topo_order()
+                if graph.spec(n).kind not in ("conv", "dwconv", "pointwise",
+                                              "dense"))
+    with pytest.raises(GraphError, match="not replicable"):
+        replicate_node(graph, pool, 2)
+    with pytest.raises(GraphError, match="expected node/R spec"):
+        apply_replications(graph, True)

@@ -295,3 +295,70 @@ def test_timing_only_has_no_outputs():
     eng.run()
     with pytest.raises(ServingError, match="execute=False"):
         eng.outputs()
+
+
+# ---------------------------------------------------------------------------
+# straggler flush (flush_after_ticks)
+# ---------------------------------------------------------------------------
+
+def test_flush_after_ticks_bounds_straggler_latency():
+    """At arrival rates far below the micro-batch fill rate, a partial
+    batch used to wait for the whole stream; the flush knob bounds the
+    wait to ``flush_after_ticks`` ticks per straggler."""
+    _, cfg, graph, plan = _setup("mobilenet_v2", n_stages=2)
+    mb, n, arrival = 4, 6, F(1, 8)  # one frame every 8 ticks
+
+    def run(flush):
+        eng = CNNStreamEngine(graph, None, plan, microbatch=mb,
+                              execute=False)
+        for _ in range(n):
+            eng.submit(None)
+        return eng.run(arrival_rate=arrival, flush_after_ticks=flush)
+
+    held = run(None)
+    bounded = run(F(2))
+    # without the knob the first frame waits for 3 more arrivals
+    # (3 x 8 ticks) before its batch forms; with it, <= 2 ticks + service
+    assert held.p99_latency() > 3 * 8
+    assert bounded.p99_latency() < 8
+    assert bounded.stall_free and bounded.within_queue_bounds
+    assert bounded.completed == n
+    # every frame still served exactly once, in more (smaller) batches
+    assert bounded.completed == held.completed == n
+    assert bounded.stages[0].batches_served > held.stages[0].batches_served
+
+
+def test_flush_none_is_event_identical_to_legacy_run():
+    """flush_after_ticks=None must not perturb the event sequence the
+    table6 baselines pin (the steppable refactor is behavior-neutral)."""
+    _, cfg, graph, plan = _setup("resnet18", n_stages=3)
+
+    def run(**kw):
+        eng = CNNStreamEngine(graph, None, plan, microbatch=4,
+                              execute=False)
+        for _ in range(12):
+            eng.submit(None)
+        return eng.run(arrival_rate=F(1, 3), **kw)
+
+    a, b = run(), run(flush_after_ticks=None)
+    assert a.makespan_ticks == b.makespan_ticks
+    assert a.latency_ticks == b.latency_ticks
+    assert a.queue_events == b.queue_events
+
+
+def test_flush_zero_serves_singleton_batches():
+    _, cfg, graph, plan = _setup("mobilenet_v2", n_stages=2)
+    eng = CNNStreamEngine(graph, None, plan, microbatch=4, execute=False)
+    for _ in range(5):
+        eng.submit(None)
+    rep = eng.run(arrival_rate=F(1, 4), flush_after_ticks=F(0))
+    assert rep.stages[0].batches_served == 5  # nothing ever waits
+    assert rep.completed == 5
+
+
+def test_flush_rejects_negative():
+    _, cfg, graph, plan = _setup("mobilenet_v2", n_stages=2)
+    eng = CNNStreamEngine(graph, None, plan, execute=False)
+    eng.submit(None)
+    with pytest.raises(ServingError, match="flush_after_ticks"):
+        eng.run(flush_after_ticks=F(-1))
