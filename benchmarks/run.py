@@ -18,6 +18,10 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
                           stage-balance win at equal arithmetic) + the
                           multi-tenant chip-pool planner and shared-clock
                           fleet scheduler (deterministic models)
+  table8_overload       — overload-resilient serving: bursty/diurnal/
+                          adversarial traffic x {baseline, SLA shed,
+                          plan switch} with p99 growth verdicts
+                          (deterministic tick model)
   rate_aware_serving    — the technique applied to LM serving (DESIGN §3)
   kernel_bench          — Pallas kernels vs oracles + tile stats
   roofline              — 40-cell roofline summary (needs dry-run JSONs)
@@ -47,6 +51,7 @@ MODULES = [
     ("table5", "benchmarks.table5_partition"),
     ("table6", "benchmarks.table6_serving"),
     ("table7", "benchmarks.table7_fleet"),
+    ("table8", "benchmarks.table8_overload"),
     ("rate_aware", "benchmarks.rate_aware_serving"),
     ("kernels", "benchmarks.kernel_bench"),
     ("roofline", "benchmarks.roofline"),

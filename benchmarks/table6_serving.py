@@ -30,6 +30,7 @@ from fractions import Fraction as F
 
 from repro.core.graph import plan_graph
 from repro.models.registry import get_cnn_api
+from repro.serving import ServeConfig
 from repro.serving.cnn_stream import (
     CNNStreamEngine,
     best_rate_frames,
@@ -48,33 +49,16 @@ ARRIVALS = ((F(1, 2), "0.5br"), (F(1), "1.0br"), (F(2), "2.0br"))
 
 
 def _run_one(graph, plan, arrival):
-    eng = CNNStreamEngine(graph, None, plan, microbatch=MICROBATCH,
-                          execute=False)
+    cfg = ServeConfig(microbatch=MICROBATCH, execute=False, arrival=arrival)
+    eng = CNNStreamEngine(graph, None, plan, cfg)
     for _ in range(N_FRAMES):
         eng.submit(None)
-    return eng.run(arrival_rate=arrival)
+    return eng.run()
 
 
 def _row(rep, over_best):
-    bott = rep.stages[rep.bottleneck_stage]
-    occ_ok = abs(bott.measured_occupancy - float(bott.analytic_occupancy)) <= 0.05
-    verdict = "OK" if occ_ok else "DRIFT (bug)"
-    if over_best:
-        ticks = sum(s.stall_cycles for s in rep.stages) / rep.slot_cycles
-        stalls = f"upstream stalls {float(ticks):.1f}t"
-    else:
-        stalls = "stall-free" if rep.stall_free else "STALLED (bug)"
-    maxq = [s.max_queue_batches for s in rep.stages]
-    caps = [s.queue_cap_batches for s in rep.stages]
-    bounded = "bounded" if rep.within_queue_bounds else "UNBOUNDED (bug)"
-    return (
-        f"thr {float(rep.throughput):.3f} f/tick, "
-        f"p50 {rep.p50_latency():.1f} p99 {rep.p99_latency():.1f} ticks, "
-        f"occ[s{rep.bottleneck_stage}] {bott.measured_occupancy:.3f} "
-        f"(bound {float(bott.analytic_occupancy):.3f}, {verdict}), "
-        f"q {maxq} <= cap {caps} ({bounded}), {stalls}, "
-        f"req-q peak {rep.request_queue_peak}"
-    )
+    # the unified telemetry schema renders the pinned row verbatim
+    return rep.summary().line(over_best=over_best)
 
 
 def run() -> list:

@@ -36,6 +36,7 @@ from repro.fleet import (
     plan_pool,
 )
 from repro.models.registry import get_cnn_api
+from repro.serving import ServeConfig
 
 # the pinned Multi-CLP scenario: ResNet-18, ImageNet-size frames, the
 # 3-chip partition at a rate with divisor-granularity headroom
@@ -115,20 +116,17 @@ def _pool_rows():
 
 def _fleet_rows(pp) -> list:
     rows = []
-    sched = FleetScheduler(pp, execute=False)
+    sched = FleetScheduler(pp, config=ServeConfig(execute=False))
     t0 = time.perf_counter()
     rep = sched.serve(list(WORKLOADS))
     dt = (time.perf_counter() - t0) * 1e6
+    summaries = rep.summaries()
     for w in WORKLOADS:
-        r = rep.reports[w.tenant]
-        stalls = "stall-free" if r.stall_free else "STALLED (bug)"
-        bounded = "bounded" if r.within_queue_bounds else "UNBOUNDED (bug)"
+        # the unified telemetry schema renders the pinned row verbatim
         rows.append((
             f"table7/fleet/{w.tenant}", dt if w is WORKLOADS[0] else 0.0,
-            f"arr {float(w.arrival_rate):.2f} f/tick: served {r.completed}, "
-            f"thr {float(r.throughput):.3f} f/tick, "
-            f"p50 {r.p50_latency():.1f} p99 {r.p99_latency():.1f} ticks, "
-            f"{stalls}, {bounded}"))
+            f"arr {float(w.arrival_rate):.2f} f/tick: "
+            f"{summaries[w.tenant].fleet_line()}"))
     occ = ", ".join(
         f"{chip} {v:.3f}" for chip, v in sorted(rep.chip_occupancy.items()))
     rows.append((

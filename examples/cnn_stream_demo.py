@@ -10,6 +10,9 @@
    next to the analytical bounds.
 3. Push the arrival rate past BestRate and watch the engine throttle to
    exactly BestRate with the excess parked outside the pipeline.
+4. Serve adversarial traffic (just above BestRate, forever) under an
+   SLA shedding policy and under online plan switching over the DSE
+   ladder — the two overload policies behind ``ServeConfig.overload``.
 
 Usage:  PYTHONPATH=src python examples/cnn_stream_demo.py
 """
@@ -20,7 +23,14 @@ import numpy as np
 
 from repro.core.graph import plan_graph
 from repro.models.registry import get_cnn_api
-from repro.serving import CNNStreamEngine
+from repro.serving import (
+    CNNStreamEngine,
+    PlanLadder,
+    ServeConfig,
+    ShedPolicy,
+    SwitchPolicy,
+    adversarial,
+)
 from repro.serving.cnn_stream import best_rate_frames, stage_rates
 
 RATE = F(5, 2)     # features/clock at the RGB input
@@ -47,10 +57,11 @@ def main() -> None:
     print("=== 2. serve at the plan rate (admitted <= BestRate) ===")
     frames = np.asarray(jax.random.normal(jax.random.key(1), (8, 32, 32, 3)))
     kp = plan.kernel_plan(batch=MICROBATCH)   # pixel tiles pinned to B
-    eng = CNNStreamEngine(graph, params, plan, microbatch=MICROBATCH,
-                          kernel_plan=kp, dtype=cfg.dtype)
+    serve_cfg = ServeConfig(microbatch=MICROBATCH, kernel_plan=kp,
+                            dtype=cfg.dtype, arrival=F(1))
+    eng = CNNStreamEngine(graph, params, plan, serve_cfg)
     eng.submit_all(frames)
-    rep = eng.run(arrival_rate=F(1))
+    rep = eng.run()
     print(f"  {rep.completed} frames, throughput "
           f"{float(rep.throughput):.3f} f/tick, "
           f"p50/p99 latency {rep.p50_latency():.1f}/"
@@ -65,18 +76,46 @@ def main() -> None:
     print(f"  served outputs match apply_graph: {ok}\n")
 
     print("=== 3. overload: arrivals at 2 x BestRate ===")
-    eng2 = CNNStreamEngine(graph, None, plan, microbatch=MICROBATCH,
-                           execute=False)
+    eng2 = CNNStreamEngine(
+        graph, None, plan,
+        ServeConfig(microbatch=MICROBATCH, execute=False, arrival=2 * br))
     for _ in range(32):
         eng2.submit(None)
-    rep2 = eng2.run(arrival_rate=2 * br)
+    rep2 = eng2.run()
     bott = rep2.stages[rep2.bottleneck_stage]
     print(f"  admitted rate {rep2.admitted_rate} (= BestRate), "
           f"throughput {float(rep2.throughput):.3f} f/tick")
     print(f"  bottleneck stage {bott.stage} occupancy "
           f"{bott.measured_occupancy:.3f}, queues bounded: "
           f"{rep2.within_queue_bounds}, request-queue peak "
-          f"{rep2.request_queue_peak} frames")
+          f"{rep2.request_queue_peak} frames\n")
+
+    print("=== 4. overload policies: shed vs switch ===")
+    adv = adversarial(br, margin=F(5, 4))   # 5/4 x BestRate, forever
+    shed_eng = CNNStreamEngine(
+        graph, None, plan,
+        ServeConfig(microbatch=MICROBATCH, execute=False, arrival=adv,
+                    overload=ShedPolicy(deadline_ticks=F(24))))
+    for _ in range(200):
+        shed_eng.submit(None)
+    shed = shed_eng.run()
+    print(f"  shed:   {shed.summary('shed').to_rows()[0][1]} "
+          f"(p99 total {shed.p99_total_latency():.1f} ticks, "
+          f"pinned near the 24-tick deadline)")
+
+    ladder = PlanLadder.build(graph, RATE, n_stages=N_STAGES,
+                              rate_factors=(1, 2), try_replicate=True)
+    print(f"  ladder: {ladder.describe()}")
+    sw_eng = CNNStreamEngine(
+        graph, None, ladder.rungs[0].plan,
+        ServeConfig(microbatch=MICROBATCH, execute=False,
+                    arrival=adversarial(best_rate_frames(ladder.rungs[0].plan)),
+                    overload=SwitchPolicy(ladder)))
+    for _ in range(200):
+        sw_eng.submit(None)
+    sw = sw_eng.run()
+    print(f"  switch: {sw.summary('switch').to_rows()[0][1]} "
+          f"(p99 total {sw.p99_total_latency():.1f} ticks, bounded)")
 
 
 if __name__ == "__main__":

@@ -413,6 +413,61 @@ def plan_network(
     return impls
 
 
+def plan_ladder(
+    graph,
+    input_rate: Fraction,
+    *,
+    n_stages: int = 1,
+    rate_factors: Tuple = (1, 2),
+    try_replicate: bool = False,
+    r_options: Tuple[int, ...] = (2, 3),
+    **plan_kwargs,
+) -> List:
+    """Enumerate the downgrade ladder of plans for one graph.
+
+    The DSE already produces a whole family of configurations for the
+    same network — cheaper ones at lower rates (coarser (j, h) tiles,
+    fewer units) and costlier ones at higher rates, plus the Multi-CLP
+    replication variants (``core.replicate.best_replication``) that
+    raise the bottleneck stage's throughput at equal arithmetic.  This
+    collects them as *rungs of one ladder*: ``plan_graph`` at
+    ``input_rate * f`` for every factor in ``rate_factors`` (each with
+    the same ``n_stages`` partition so the serving pipeline shape is
+    comparable), and, with ``try_replicate``, the best replication
+    variant at the top rate (kept only when it strictly beats the plain
+    top-rate plan's bottleneck).
+
+    Returned in ``rate_factors`` order (cheapest first); the serving
+    layer (``serving.overload.PlanLadder``) prices each rung's
+    *request-level* sustainable rate and prunes non-improving rungs —
+    rate math at the frames/tick level lives there, not here.
+    """
+    from .graph import plan_graph
+
+    factors = sorted({Fraction(f) for f in rate_factors})
+    if not factors or factors[0] <= 0:
+        raise ValueError(f"rate_factors must be > 0, got {rate_factors}")
+    plans = [
+        plan_graph(
+            graph, Fraction(input_rate) * f, n_stages=n_stages, **plan_kwargs
+        )
+        for f in factors
+    ]
+    if try_replicate:
+        from .replicate import best_replication
+
+        rep = best_replication(
+            graph,
+            Fraction(input_rate) * factors[-1],
+            n_stages=n_stages,
+            r_options=r_options,
+            **plan_kwargs,
+        )
+        if rep.replications:
+            plans.append(rep)
+    return plans
+
+
 def plan_partitioned(graph, input_rate: Fraction, n_stages: int, **kwargs):
     """Stage-aware DSE over a ``LayerGraph``: select (j, h) per node AND
     cut the DAG into ``n_stages`` chips, with every cut-crossing edge

@@ -18,14 +18,27 @@ property ``tests/fleet/test_scheduler.py`` asserts.  Admission stays
 per-tenant: each engine gates at its own BestRate (Eq. 10 at the
 tenant's planned rate), so one tenant's burst never stalls another.
 
+Configuration is the unified ``serving.ServeConfig``: the scheduler
+takes a fleet-wide config (execution knobs shared by every engine) and
+``TenantWorkload.config`` overrides it per tenant — including per-
+tenant arrival scenarios (``serving.scenarios``) and overload policies
+(``serving.overload``), so one tenant can shed under an SLA while its
+neighbor plan-switches.  The pre-ServeConfig keyword arguments
+(``execute``/``interpret``/``check``/``jit`` on the scheduler,
+``arrival_rate``/``microbatch``/``flush_after_ticks`` on the workload)
+keep working as a deprecated shim.
+
 ``FleetReport`` aggregates per-tenant telemetry (p50/p99 service
-latency, stall/bound flags) with per-chip occupancy over the fleet
-makespan — the pool-level utilization the planner promised, measured.
+latency, stall/bound flags, shed/switch counts) with per-chip occupancy
+over the fleet makespan — the pool-level utilization the planner
+promised, measured.  Per-tenant rows share the ``ServeSummary`` schema
+with the single-engine report (``serving.telemetry``).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from fractions import Fraction
 from typing import Dict, List, Mapping, Optional, Tuple
 
@@ -35,6 +48,8 @@ import numpy as np
 from repro.core.replicate import replicate_params
 from repro.fleet.pool import PoolPlan
 from repro.serving.cnn_stream import CNNStreamEngine, ServeReport, ServingError
+from repro.serving.config import ServeConfig
+from repro.serving.telemetry import ServeSummary
 
 
 class FleetError(ServingError):
@@ -46,8 +61,13 @@ class TenantWorkload:
     """One tenant's offered load for a fleet run.
 
     ``frames`` is an array of frames when the scheduler executes, or a
-    bare count for the timing model.  ``arrival_rate`` is frames/tick
-    relative to the tenant's own planned rate (1 = exactly at rate).
+    bare count for the timing model.  ``config`` is the tenant's full
+    ``serving.ServeConfig`` (arrival source, flush, SLA/overload
+    policy, per-tenant execution overrides) layered over the
+    scheduler's fleet-wide config.  The pre-ServeConfig fields
+    (``arrival_rate`` in frames/tick relative to the tenant's planned
+    rate, ``microbatch``, ``flush_after_ticks``) remain as a shim —
+    with ``config`` they must stay at their defaults.
     """
 
     tenant: str
@@ -55,6 +75,18 @@ class TenantWorkload:
     arrival_rate: Fraction = Fraction(1)
     microbatch: int = 1
     flush_after_ticks: Optional[Fraction] = None
+    config: Optional[ServeConfig] = None
+
+    def __post_init__(self):
+        if self.config is not None and (
+            self.arrival_rate != Fraction(1)
+            or self.microbatch != 1
+            or self.flush_after_ticks is not None
+        ):
+            raise FleetError(
+                f"workload {self.tenant!r}: pass arrival/microbatch/flush "
+                "inside config=, not alongside it"
+            )
 
 
 @dataclasses.dataclass
@@ -80,16 +112,33 @@ class FleetReport:
     def p99_latency(self, tenant: str) -> float:
         return self.reports[tenant].p99_latency()
 
+    def summaries(self) -> Dict[str, ServeSummary]:
+        """Per-tenant views in the unified telemetry schema."""
+        return {
+            name: r.summary(label=name) for name, r in self.reports.items()
+        }
+
+    def to_rows(self) -> List[Tuple[str, str]]:
+        """Canonical (name, value) rows via the unified schema — the
+        fleet-side twin of ``ServeReport.to_rows``."""
+        rows: List[Tuple[str, str]] = []
+        for name, s in sorted(self.summaries().items()):
+            for suffix, val in s.to_rows():
+                rows.append((f"{name}/{suffix}", val))
+        for chip, occ in sorted(self.chip_occupancy.items()):
+            rows.append((chip, f"occupancy={occ:.3f}"))
+        return rows
+
     def summary_rows(self) -> List[Tuple[str, str]]:
         """(name, value) rows for logging / the benchmark table."""
         rows = []
-        for name, r in sorted(self.reports.items()):
+        for name, s in sorted(self.summaries().items()):
             rows.append(
                 (
                     f"{name}",
-                    f"served={r.completed} thr={float(r.throughput):.3f} "
-                    f"p50={r.p50_latency():.1f} p99={r.p99_latency():.1f} "
-                    f"stall_free={r.stall_free}",
+                    f"served={s.completed} thr={s.throughput:.3f} "
+                    f"p50={s.p50_ticks:.1f} p99={s.p99_ticks:.1f} "
+                    f"stall_free={s.stall_free}",
                 )
             )
         for chip, occ in sorted(self.chip_occupancy.items()):
@@ -97,13 +146,21 @@ class FleetReport:
         return rows
 
 
+_UNSET = object()
+
+_LEGACY_SCHED = ("execute", "interpret", "check", "jit")
+
+
 class FleetScheduler:
     """Drive every pooled tenant's pipeline on one shared clock.
 
     ``params`` maps tenant name -> that family's (unreplicated) params;
-    required per served tenant when ``execute=True`` (the scheduler
-    aliases the hot node's weights onto replication lanes itself).
-    ``execute=False`` runs the deterministic timing model alone.
+    required per served tenant when executing (the scheduler aliases
+    the hot node's weights onto replication lanes itself).  ``config``
+    is the fleet-wide ``serving.ServeConfig`` (default: timing model,
+    ``execute=False``); per-tenant ``TenantWorkload.config`` overrides
+    it wholesale.  The pre-ServeConfig keyword arguments keep working
+    as a deprecated shim.
     """
 
     def __init__(
@@ -111,17 +168,38 @@ class FleetScheduler:
         pool: PoolPlan,
         *,
         params: Optional[Mapping[str, object]] = None,
-        execute: bool = False,
-        interpret: bool = True,
-        check: bool = True,
-        jit: bool = True,
+        config: Optional[ServeConfig] = None,
+        execute=_UNSET,
+        interpret=_UNSET,
+        check=_UNSET,
+        jit=_UNSET,
     ) -> None:
+        legacy = {
+            k: v
+            for k, v in zip(_LEGACY_SCHED, (execute, interpret, check, jit))
+            if v is not _UNSET
+        }
+        if config is None:
+            if legacy:
+                warnings.warn(
+                    "FleetScheduler(..., execute=/interpret=/check=/jit=) is "
+                    "deprecated — pass a serving.ServeConfig",
+                    DeprecationWarning,
+                    stacklevel=2,
+                )
+            config = ServeConfig(execute=False).with_(**legacy)
+        elif legacy:
+            raise FleetError(
+                "pass either config= or the deprecated kwargs, not both: "
+                f"{sorted(legacy)}"
+            )
         self.pool = pool
         self.params = dict(params or {})
-        self.execute = execute
-        self.interpret = interpret
-        self.check = check
-        self.jit = jit
+        self.config = config
+
+    @property
+    def execute(self) -> bool:
+        return self.config.execute
 
     def init_params(self, tenant: str, rng: jax.Array) -> None:
         """Initialize (and store) one tenant's params from its config."""
@@ -132,10 +210,26 @@ class FleetScheduler:
         api = get_cnn_api(t.family)
         self.params[tenant] = api.init(cand.cfg, rng)
 
+    def _tenant_config(self, w: TenantWorkload, cand) -> ServeConfig:
+        if w.config is not None:
+            cfg = w.config
+        else:
+            cfg = self.config.with_(
+                microbatch=w.microbatch,
+                arrival=w.arrival_rate,
+                flush_after_ticks=w.flush_after_ticks,
+            )
+        if cfg.dtype is None:
+            dtype = getattr(cand.cfg, "dtype", None)
+            if dtype is not None:
+                cfg = cfg.with_(dtype=dtype)
+        return cfg
+
     def _engine(self, w: TenantWorkload) -> CNNStreamEngine:
         cand = self.pool.candidate_for(w.tenant)
+        cfg = self._tenant_config(w, cand)
         params = self.params.get(w.tenant)
-        if self.execute:
+        if cfg.execute:
             if params is None:
                 raise FleetError(
                     f"execute=True but no params for tenant {w.tenant!r} "
@@ -143,18 +237,8 @@ class FleetScheduler:
                 )
             if cand.plan.replications:
                 params = replicate_params(params, cand.plan.replications)
-        engine = CNNStreamEngine(
-            cand.plan.graph,
-            params,
-            cand.plan,
-            microbatch=w.microbatch,
-            interpret=self.interpret,
-            dtype=getattr(cand.cfg, "dtype", None),
-            check=self.check,
-            jit=self.jit,
-            execute=self.execute,
-        )
-        if self.execute:
+        engine = CNNStreamEngine(cand.plan.graph, params, cand.plan, cfg)
+        if cfg.execute:
             engine.submit_all(w.frames)
         else:
             n = w.frames if isinstance(w.frames, int) else len(w.frames)
@@ -184,11 +268,7 @@ class FleetScheduler:
 
         engines = {w.tenant: self._engine(w) for w in workloads}
         runs = {
-            w.tenant: engines[w.tenant].begin(
-                arrival_rate=w.arrival_rate,
-                max_ticks=max_ticks,
-                flush_after_ticks=w.flush_after_ticks,
-            )
+            w.tenant: engines[w.tenant].begin(max_ticks=max_ticks)
             for w in workloads
         }
 
@@ -224,7 +304,7 @@ class FleetScheduler:
 
         reports = {name: e.finish() for name, e in engines.items()}
         outputs = {
-            name: (e.outputs() if self.execute else None)
+            name: (e.outputs() if e.execute else None)
             for name, e in engines.items()
         }
         makespan = max(finish_at.values())
@@ -233,7 +313,16 @@ class FleetScheduler:
             r = reports.get(a.tenant)
             if r is None or makespan == 0:
                 continue  # tenant pooled but not served this run
-            busy = r.stages[a.stage].busy_cycles
+            # stage rows of the base rung only — the pool packer pinned
+            # one (base-plan) stage per chip
+            busy = sum(
+                (
+                    s.busy_cycles
+                    for s in r.stages
+                    if s.stage == a.stage and s.rung == 0
+                ),
+                Fraction(0),
+            )
             occupancy[a.chip] = float(busy / makespan)
         return FleetReport(
             reports=reports,

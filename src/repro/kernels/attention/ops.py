@@ -10,8 +10,9 @@ from repro.core.tpu_tiles import TileChoice
 from .flash_attention import flash_attention_p
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
-                                              "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
 def flash_attention(
     q: jax.Array,   # [B, H, Sq, d]
     k: jax.Array,   # [B, H, Sk, d]
@@ -51,9 +52,17 @@ def attention_impl(
     block_k = tile.bk if tile is not None else 128
 
     def impl(q, k, v):
-        y = flash_attention(q, k, v, causal=causal, block_q=block_q,
-                            block_k=block_k, interpret=interpret)
+        y = flash_attention(
+            q,
+            k,
+            v,
+            causal=causal,
+            block_q=block_q,
+            block_k=block_k,
+            interpret=interpret,
+        )
         if record is not None:
             record(block_q=block_q, block_k=block_k, seq=q.shape[2])
         return y
+
     return impl

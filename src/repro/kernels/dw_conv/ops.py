@@ -52,8 +52,9 @@ def dw_conv(
     wo, (pl_, pr) = _same_pads(wdt, kw, stride)
     xp = jnp.pad(x, ((0, 0), (pt, pb), (pl_, pr), (0, 0)))
     bc = bc or _pick_bc(c, rate)
-    return dw_conv_p(xp, w, out_hw=(ho, wo), stride=stride, bc=bc,
-                     interpret=interpret)
+    return dw_conv_p(
+        xp, w, out_hw=(ho, wo), stride=stride, bc=bc, interpret=interpret
+    )
 
 
 def dw_conv_impl(
@@ -76,11 +77,14 @@ def dw_conv_impl(
             raise NotImplementedError(
                 f"dw_conv kernel supports channel_multiplier == 1 only "
                 f"(got weights for {w.shape[-1]} outputs on "
-                f"{x.shape[-1]} channels); use the lax dwconv impl")
+                f"{x.shape[-1]} channels); use the lax dwconv impl"
+            )
         bc = tile.bk if tile is not None else None
-        y = dw_conv(x, w[:, :, 0, :], stride=stride, rate=rate,
-                    interpret=interpret, bc=bc)
+        y = dw_conv(
+            x, w[:, :, 0, :], stride=stride, rate=rate, interpret=interpret, bc=bc
+        )
         if record is not None:
             record(bk=bc, bn=1, d_in=x.shape[-1], d_out=x.shape[-1])
         return y
+
     return impl

@@ -29,8 +29,9 @@ def _same_pads(size: int, k: int, s: int):
     return out, (total // 2, total - total // 2)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("stride", "rate", "interpret", "bci", "bco"))
+@functools.partial(
+    jax.jit, static_argnames=("stride", "rate", "interpret", "bci", "bco")
+)
 def kpu_conv(
     x: jax.Array,            # [N, H, W, d_in]
     w: jax.Array,            # [kh, kw, d_in, d_out]
@@ -47,12 +48,14 @@ def kpu_conv(
     wo, (pl_, pr) = _same_pads(wdt, kw, stride)
     xp = jnp.pad(x, ((0, 0), (pt, pb), (pl_, pr), (0, 0)))
     if bci is None or bco is None:
-        t = select_tile(ho * wo, d_in, d_out, rate=rate,
-                        dtype_bytes=x.dtype.itemsize)
+        t = select_tile(
+            ho * wo, d_in, d_out, rate=rate, dtype_bytes=x.dtype.itemsize
+        )
         bci = bci or t.bk
         bco = bco or t.bn
-    return kpu_conv_p(xp, w, out_hw=(ho, wo), stride=stride,
-                      bci=bci, bco=bco, interpret=interpret)
+    return kpu_conv_p(
+        xp, w, out_hw=(ho, wo), stride=stride, bci=bci, bco=bco, interpret=interpret
+    )
 
 
 def conv_impl(
@@ -73,9 +76,11 @@ def conv_impl(
     def impl(x, w, stride):
         bci = tile.bk if tile is not None else None
         bco = tile.bn if tile is not None else None
-        y = kpu_conv(x, w, stride=stride, rate=rate, interpret=interpret,
-                     bci=bci, bco=bco)
+        y = kpu_conv(
+            x, w, stride=stride, rate=rate, interpret=interpret, bci=bci, bco=bco
+        )
         if record is not None:
             record(bk=bci, bn=bco, d_in=x.shape[-1], d_out=w.shape[-1])
         return y
+
     return impl

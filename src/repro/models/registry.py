@@ -180,10 +180,18 @@ class CNNApi:
 
 def _serve(params, frames, cfg, **kwargs):
     """Streaming serving for one family config — the request-level
-    continuous-flow engine (``serving.cnn_stream.serve_frames``)."""
+    continuous-flow engine (``serving.cnn_stream.serve_frames``).
+
+    Accepts the full ``serve_frames`` surface: ``config=`` (the unified
+    ``serving.ServeConfig`` — arrival scenarios, ``flush_after_ticks``,
+    SLA/overload policy) and/or the individual keyword overrides.  The
+    model config's dtype is the default compute dtype unless the caller
+    pins one (kwarg or ``config.dtype``)."""
     from repro.serving.cnn_stream import serve_frames
 
-    kwargs.setdefault("dtype", cfg.dtype)
+    config = kwargs.get("config")
+    if "dtype" not in kwargs and (config is None or config.dtype is None):
+        kwargs["dtype"] = cfg.dtype
     return serve_frames(cfg.graph(), params, frames, **kwargs)
 
 

@@ -10,6 +10,15 @@ capacity):
   micro-batching to the planned kernel tiles, and bounded inter-stage
   queues (``serve_frames`` / ``registry.CNNApi.serve`` are the
   one-call forms).
+
+The CNN engine is configured by one frozen ``ServeConfig`` (execution
+knobs + arrival source + flush/SLA/overload policy).  Traffic shapes
+come from ``serving.scenarios`` (constant / bursty / diurnal /
+adversarial — seeded, deterministic, exact-rational); overload behavior
+from ``serving.overload`` (``ShedPolicy`` SLA shedding, ``SwitchPolicy``
+online plan switching over a ``PlanLadder``); rendered telemetry from
+``serving.telemetry.ServeSummary``, the schema ``ServeReport`` and
+``fleet.FleetReport`` share.
 """
 
 from repro.serving.cnn_stream import (
@@ -20,15 +29,51 @@ from repro.serving.cnn_stream import (
     StageReport,
     serve_frames,
 )
+from repro.serving.config import ServeConfig
 from repro.serving.engine import Engine, Request
+from repro.serving.overload import (
+    LadderRung,
+    OverloadError,
+    PlanLadder,
+    ShedPolicy,
+    SwitchPolicy,
+)
+from repro.serving.scenarios import (
+    ArrivalProcess,
+    Bursty,
+    Constant,
+    Diurnal,
+    ScenarioError,
+    adversarial,
+    bursty,
+    constant,
+    diurnal,
+)
+from repro.serving.telemetry import ServeSummary
 
 __all__ = [
+    "ArrivalProcess",
+    "Bursty",
     "CNNStreamEngine",
+    "Constant",
+    "Diurnal",
     "Engine",
     "FrameRequest",
+    "LadderRung",
+    "OverloadError",
+    "PlanLadder",
     "Request",
+    "ScenarioError",
+    "ServeConfig",
     "ServeReport",
+    "ServeSummary",
     "ServingError",
+    "ShedPolicy",
     "StageReport",
+    "SwitchPolicy",
+    "adversarial",
+    "bursty",
+    "constant",
+    "diurnal",
     "serve_frames",
 ]

@@ -22,17 +22,18 @@ as a software pipeline under load:
   rate) BestRate is exactly ``1 / max_n utilization_n`` — the plan's
   bottleneck utilization read as request headroom.
 
-* **Admission control = Eq. 9 at the request level.**  Frames arrive at
-  a configurable rate into a request queue; they are admitted into the
-  pipeline only while the bottleneck stage has slack.  Mechanically the
-  admission gate checks space in the stage-0 queue — the inter-stage
-  queues are bounded and every stage blocks when its successor is full,
-  so bottleneck saturation propagates upstream to the gate within a
-  pipeline-depth of batches.  The resulting admitted rate is
-  ``min(arrival_rate, BestRate)``: below BestRate everything is
-  admitted immediately and no stage ever stalls; above it the engine
-  serves at exactly BestRate with the excess parked *outside* the
-  pipeline (the request queue), keeping the in-pipeline queues bounded.
+* **Admission control = Eq. 9 at the request level.**  Frames arrive
+  (at a constant rate or any ``serving.scenarios.ArrivalProcess``) into
+  a request queue; they are admitted into the pipeline only while the
+  bottleneck stage has slack.  Mechanically the admission gate checks
+  space in the stage-0 queue — the inter-stage queues are bounded and
+  every stage blocks when its successor is full, so bottleneck
+  saturation propagates upstream to the gate within a pipeline-depth of
+  batches.  The resulting admitted rate is ``min(arrival_rate,
+  BestRate)``: below BestRate everything is admitted immediately and no
+  stage ever stalls; above it the engine serves at exactly BestRate
+  with the excess parked *outside* the pipeline (the request queue),
+  keeping the in-pipeline queues bounded.
 
 * **Micro-batching fills the planned tiles.**  Admitted frames are
   grouped into micro-batches of ``microbatch`` frames, the batch the
@@ -53,6 +54,18 @@ as a software pipeline under load:
   always floors to the bare double buffer — the analytically honest
   version of "queues of 2".
 
+* **Overload is a policy, not a failure mode.**  Excess arrivals used
+  to mean unbounded request-queue latency.  ``ServeConfig.overload``
+  plugs a policy into the event loop (``serving.overload``):
+  ``ShedPolicy`` drops the oldest pending frame once its *projected*
+  completion misses an SLA deadline (counted in ``ServeReport.shed``;
+  survivors are never reordered), and ``SwitchPolicy`` re-plans online
+  — a precomputed downgrade ladder of ``GraphPlan``s keyed by
+  arrival-rate bands, swapped at micro-batch boundaries by draining the
+  in-flight batches before re-pinning the kernel plan, with the
+  continuous-flow invariant (zero stalls at <= the *active* plan's
+  BestRate) re-asserted after every switch.
+
 * **Telemetry against the analytical model.**  The engine records
   per-stage busy/stall intervals and queue-depth events on an exact
   rational clock.  ``ServeReport`` exposes per-tick occupancy and
@@ -63,6 +76,9 @@ as a software pipeline under load:
   whenever the admitted rate <= BestRate, and queue depths within the
   stream-buffer bounds under backpressure above it.
 
+Configuration is one frozen ``serving.ServeConfig`` (execution knobs +
+arrival source + flush/SLA/overload policy); the pre-ServeConfig
+kwargs of ``__init__``/``run`` keep working as a deprecated shim.
 Timing is a deterministic tick model (exact ``fractions.Fraction``
 cycle arithmetic), never wall-clock; the JAX execution underneath
 produces the real outputs (bit-exact vs ``models.cnn.apply_graph``)
@@ -73,6 +89,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from collections import deque
 from fractions import Fraction
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -80,8 +97,12 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.replicate import lane_multiplicity
+from repro.core.replicate import lane_multiplicity, replicate_params
 from repro.models import cnn
+from repro.serving.config import ServeConfig
+from repro.serving.overload import ShedPolicy, SwitchPolicy
+from repro.serving.scenarios import ArrivalProcess
+from repro.serving.telemetry import ServeSummary
 
 
 class ServingError(ValueError):
@@ -178,6 +199,13 @@ def best_rate_frames(plan) -> Fraction:
     return min(Fraction(1) / sr.utilization for sr in stage_rates(plan))
 
 
+def sustainable_rate_cycles(plan) -> Fraction:
+    """BestRate in *frames per hardware cycle* — the plan-independent
+    unit the downgrade ladder compares rungs in (each plan's tick is its
+    own input rate, so frames/tick is not comparable across rungs)."""
+    return best_rate_frames(plan) / slot_cycles(plan)
+
+
 def queue_caps_batches(plan, microbatch: int) -> List[int]:
     """Capacity (in micro-batches) of each stage's input queue.
 
@@ -224,6 +252,8 @@ class FrameRequest:
     t_submit: Fraction = Fraction(0)
     t_admit: Optional[Fraction] = None
     t_done: Optional[Fraction] = None
+    t_shed: Optional[Fraction] = None  # SLA shed (never admitted)
+    rung: int = 0  # ladder rung whose pipeline served the frame
     out: Optional[np.ndarray] = None
 
 
@@ -231,6 +261,7 @@ class FrameRequest:
 class _Batch:
     bid: int
     frames: List[FrameRequest]
+    rung: int = 0  # active rung at enqueue == rung that executes it
     boundary: Optional[Dict] = None  # node name -> tensor (execute mode)
 
 
@@ -250,12 +281,27 @@ class _StageState:
 
 
 @dataclasses.dataclass
+class _Segment:
+    """Telemetry of one plan-switch segment (archived at each switch)."""
+
+    rung: int
+    start: Fraction
+    end: Fraction
+    stages: List[_StageState]
+    max_q: List[int]
+    qev: List[List[Tuple[Fraction, int]]]
+
+
+@dataclasses.dataclass
 class _RunState:
     """Mutable state of one serving run (``begin`` .. ``finish``).
 
     Hoisted out of ``run``'s closure so the event loop is steppable:
     a multi-tenant scheduler (``fleet.scheduler``) drives several
     engines on one shared clock via ``advance`` / ``next_event``.
+    ``queues``/``stages``/``qev``/``max_q`` always describe the *active*
+    plan-switch segment; finished segments are archived in ``history``
+    (empty unless a ``SwitchPolicy`` actually switched).
     """
 
     arrival_rate: Fraction
@@ -274,6 +320,14 @@ class _RunState:
     completed: int = 0
     req_peak: int = 0
     t: Fraction = Fraction(0)
+    # -- overload-policy state (inert without a policy) --------------------
+    shed_rids: List[int] = dataclasses.field(default_factory=list)
+    switch_target: Optional[int] = None  # draining toward this rung
+    switches: List[Tuple[Fraction, int, int]] = dataclasses.field(
+        default_factory=list
+    )  # (t_cycles, from_rung, to_rung)
+    history: List[_Segment] = dataclasses.field(default_factory=list)
+    seg_start: Fraction = Fraction(0)
 
 
 # ==========================================================================
@@ -297,6 +351,7 @@ class StageReport:
     batches_served: int
     max_queue_batches: int
     queue_cap_batches: int
+    rung: int = 0  # ladder rung this row belongs to (0 without switching)
 
     @property
     def stall_free(self) -> bool:
@@ -313,7 +368,11 @@ class ServeReport:
 
     Latencies and the makespan are in *ticks* (frame slots at the
     plan's input rate); all aggregates are exact Fractions, floated
-    only in the convenience percentile accessors.
+    only in the convenience percentile accessors.  With a
+    ``SwitchPolicy``, ``stages`` holds one row per (segment, stage) in
+    time order (``StageReport.rung`` names the segment's rung) and
+    ``switches`` records every swap; without one, the layout is exactly
+    the single-plan report it always was.
     """
 
     n_stages: int
@@ -331,6 +390,9 @@ class ServeReport:
     stages: List[StageReport]
     request_queue_peak: int  # frames parked outside the pipeline
     queue_events: List[List[Tuple[Fraction, int]]]  # per stage (tick, depth)
+    shed: int = 0  # frames dropped by the SLA policy
+    shed_rids: Tuple[int, ...] = ()
+    switches: Tuple[Tuple[Fraction, int, int], ...] = ()  # (tick, from, to)
 
     @property
     def stall_free(self) -> bool:
@@ -343,6 +405,10 @@ class ServeReport:
     @property
     def bottleneck_stage(self) -> int:
         return max(self.stages, key=lambda s: s.utilization).stage
+
+    @property
+    def shed_fraction(self) -> float:
+        return self.shed / self.frames if self.frames else 0.0
 
     @staticmethod
     def _pct(values: Sequence[Fraction], q: float) -> float:
@@ -366,7 +432,8 @@ class ServeReport:
 
     def tick_occupancy(self, stage: int) -> List[float]:
         """Per-tick busy fraction of one stage — the occupancy trace the
-        analytical bound is asserted against."""
+        analytical bound is asserted against.  ``stage`` indexes
+        ``self.stages`` rows (== pipeline stages without switching)."""
         n = max(1, math.ceil(self.makespan_ticks))
         out = [0.0] * n
         for start, end in self._stage_intervals[stage]:
@@ -390,6 +457,53 @@ class ServeReport:
             out.append(depth)
         return out
 
+    def summary(self, label: str = "") -> ServeSummary:
+        """The unified telemetry schema shared with ``FleetReport``
+        (``serving.telemetry.ServeSummary``) — what the benchmark
+        tables render instead of hand-flattening report attributes."""
+        bott = self.stages[self.bottleneck_stage] if self.stages else None
+        stall_ticks = (
+            sum((s.stall_cycles for s in self.stages), Fraction(0))
+            / self.slot_cycles
+        )
+        return ServeSummary(
+            label=label,
+            submitted=self.frames,
+            completed=self.completed,
+            shed=self.shed,
+            switches=len(self.switches),
+            throughput=float(self.throughput),
+            p50_ticks=self.p50_latency(),
+            p99_ticks=self.p99_latency(),
+            p50_total_ticks=self.p50_total_latency(),
+            p99_total_ticks=self.p99_total_latency(),
+            stall_free=self.stall_free,
+            stall_ticks=float(stall_ticks),
+            within_queue_bounds=self.within_queue_bounds,
+            request_queue_peak=self.request_queue_peak,
+            bottleneck_stage=self.bottleneck_stage,
+            bottleneck_occupancy=(
+                bott.measured_occupancy if bott else 0.0
+            ),
+            bottleneck_bound=(
+                float(bott.analytic_occupancy) if bott else 0.0
+            ),
+            max_queue=tuple(s.max_queue_batches for s in self.stages),
+            queue_caps=tuple(s.queue_cap_batches for s in self.stages),
+            # best_rate is the *fastest* rung's ceiling; a run that had
+            # to shed or switch was by definition offered more than the
+            # rung it was on could sustain
+            overloaded=(
+                self.arrival_rate > self.best_rate
+                or self.shed > 0
+                or bool(self.switches)
+            ),
+        )
+
+    def to_rows(self, prefix: str = "") -> List[Tuple[str, str]]:
+        """(name, value) rows via the unified summary schema."""
+        return self.summary(label=prefix).to_rows()
+
     # filled by the engine (not part of the dataclass repr/eq surface)
     _stage_intervals: List[List[Tuple[Fraction, Fraction]]] = dataclasses.field(
         default_factory=list, repr=False, compare=False
@@ -397,72 +511,46 @@ class ServeReport:
 
 
 # ==========================================================================
-# The engine
+# Ladder rungs (runtime view of one plan; rung 0 = the engine's base plan)
 # ==========================================================================
 
 
-class CNNStreamEngine:
-    """Streaming server for one planned CNN (see module docstring).
-
-    ``plan`` must be a ``core.graph.GraphPlan`` carrying a stage
-    partition (``plan_graph(..., n_stages=S)``; S=1 is the single-chip
-    pipeline).  ``kernel_plan`` optionally threads the rate-matched
-    per-node Pallas tiling (pass ``plan.kernel_plan(batch=microbatch)``
-    so the pixel tiles are pinned to the micro-batch — the engine
-    checks the pin matches).  ``execute=False`` runs the deterministic
-    tick model alone (no JAX, no outputs) — what the benchmark tables
-    use; tests run ``execute=True`` and assert the served outputs
-    bit-exact against ``models.cnn.apply_graph``.
-    """
+class _Rung:
+    """Runtime state of one ladder rung: the plan's request-level rates,
+    queue caps, and (execute mode) the jitted per-stage pipeline."""
 
     def __init__(
         self,
         graph,
         params,
         plan,
+        kernel_plan,
         *,
-        microbatch: int = 1,
-        kernel_plan=None,
-        impls=None,
-        overrides=None,
-        interpret: bool = True,
-        dtype=jnp.float32,
-        check: bool = True,
-        jit: bool = True,
-        execute: bool = True,
+        config: ServeConfig,
+        base_slot: Fraction,
     ) -> None:
-        if microbatch < 1:
-            raise ServingError(f"microbatch must be >= 1, got {microbatch}")
-        if kernel_plan is not None:
-            pinned = {p.batch for p in kernel_plan.values() if p.batch is not None}
-            if pinned and pinned != {microbatch}:
-                raise ServingError(
-                    f"kernel plan pinned to batch {sorted(pinned)} but the "
-                    f"engine micro-batches {microbatch} frames — build it "
-                    f"with plan.kernel_plan(batch={microbatch})"
-                )
         self.graph = graph
         self.params = params
         self.plan = plan
-        self.microbatch = microbatch
-        self.dtype = dtype
-        self.execute = execute
+        self.kernel_plan = kernel_plan
         self.rates = stage_rates(plan)  # raises without a stage partition
         self.n_stages = len(self.rates)
-        self.slot = slot_cycles(plan)
-        self.best_rate = min(Fraction(1) / sr.utilization for sr in self.rates)
-        self.caps = queue_caps_batches(plan, microbatch)
+        self.caps = queue_caps_batches(plan, config.microbatch)
+        # frames per base tick this rung sustains (cross-rung comparable)
+        self.best_rate = sustainable_rate_cycles(plan) * base_slot
+        self.bottleneck_svc = max(sr.svc_cycles for sr in self.rates)
         self.pipeline = None
-        if execute:
+        self._keep_after: List[set] = []
+        if config.execute:
             self.pipeline = cnn.stage_functions(
                 graph,
                 partition=plan.stage_plan,
-                impls=impls,
+                impls=config.impls,
                 plan=kernel_plan,
-                overrides=overrides,
-                interpret=interpret,
-                check=check,
-                jit=jit,
+                overrides=config.overrides,
+                interpret=config.interpret,
+                check=config.check,
+                jit=config.jit,
             )
             # after stage s, a batch only needs the tensors later stages
             # import (plus the graph output once the last stage ran)
@@ -474,13 +562,219 @@ class CNNStreamEngine:
                 else:
                     keep = keep | set(self.pipeline.imports[s + 1])
                 self._keep_after[s] = set(keep)
+
+
+# ==========================================================================
+# The engine
+# ==========================================================================
+
+_UNSET = object()
+
+_LEGACY_INIT = (
+    "microbatch",
+    "kernel_plan",
+    "impls",
+    "overrides",
+    "interpret",
+    "dtype",
+    "check",
+    "jit",
+    "execute",
+)
+
+
+class CNNStreamEngine:
+    """Streaming server for one planned CNN (see module docstring).
+
+    ``plan`` must be a ``core.graph.GraphPlan`` carrying a stage
+    partition (``plan_graph(..., n_stages=S)``; S=1 is the single-chip
+    pipeline).  ``config`` is the unified ``serving.ServeConfig``
+    (execution knobs + arrival source + flush/SLA/overload policy); the
+    pre-ServeConfig keyword arguments keep working as a deprecated shim
+    that builds the equivalent config.  ``config.kernel_plan``
+    optionally threads the rate-matched per-node Pallas tiling (pass
+    ``plan.kernel_plan(batch=microbatch)`` so the pixel tiles are
+    pinned to the micro-batch — the engine checks the pin matches).
+    ``execute=False`` runs the deterministic tick model alone (no JAX,
+    no outputs) — what the benchmark tables use; tests run
+    ``execute=True`` and assert the served outputs bit-exact against
+    ``models.cnn.apply_graph``.
+
+    With ``config.overload = SwitchPolicy(ladder)`` the engine serves
+    through whichever ladder rung matches the observed arrival rate:
+    ``plan`` must be the ladder's base rung (rung 0, unreplicated), and
+    each further rung gets its own pipeline, queue caps, and (when the
+    base had one) batch-pinned kernel plan.  Switches happen only at
+    micro-batch boundaries with the pipeline fully drained.
+    """
+
+    def __init__(
+        self,
+        graph,
+        params,
+        plan,
+        config: Optional[ServeConfig] = None,
+        *,
+        microbatch=_UNSET,
+        kernel_plan=_UNSET,
+        impls=_UNSET,
+        overrides=_UNSET,
+        interpret=_UNSET,
+        dtype=_UNSET,
+        check=_UNSET,
+        jit=_UNSET,
+        execute=_UNSET,
+    ) -> None:
+        legacy = {
+            k: v
+            for k, v in zip(
+                _LEGACY_INIT,
+                (
+                    microbatch,
+                    kernel_plan,
+                    impls,
+                    overrides,
+                    interpret,
+                    dtype,
+                    check,
+                    jit,
+                    execute,
+                ),
+            )
+            if v is not _UNSET
+        }
+        if config is None:
+            if legacy:
+                warnings.warn(
+                    "CNNStreamEngine(..., **kwargs) is deprecated — pass a "
+                    "serving.ServeConfig instead",
+                    DeprecationWarning,
+                    stacklevel=2,
+                )
+            config = ServeConfig(**legacy)
+        elif legacy:
+            raise ServingError(
+                "pass either config= or the deprecated kwargs, not both: "
+                f"{sorted(legacy)}"
+            )
+        if config.microbatch < 1:
+            raise ServingError(
+                f"microbatch must be >= 1, got {config.microbatch}"
+            )
+        if config.kernel_plan is not None:
+            pinned = {
+                p.batch
+                for p in config.kernel_plan.values()
+                if p.batch is not None
+            }
+            if pinned and pinned != {config.microbatch}:
+                raise ServingError(
+                    f"kernel plan pinned to batch {sorted(pinned)} but the "
+                    f"engine micro-batches {config.microbatch} frames — "
+                    f"build it with plan.kernel_plan("
+                    f"batch={config.microbatch})"
+                )
+        self.config = config
+        self.graph = graph
+        self.params = params
+        self.plan = plan
+        self.microbatch = config.microbatch
+        self.dtype = config.dtype if config.dtype is not None else jnp.float32
+        self.execute = config.execute
+        self.slot = slot_cycles(plan)
+        self._shed, self._switch = self._resolve_policy(config.overload)
+        self._rungs = self._build_rungs()
+        self._active = 0
         self._requests: List[FrameRequest] = []
+
+    def _resolve_policy(self, overload):
+        if overload is None:
+            return None, None
+        if isinstance(overload, ShedPolicy):
+            return overload, None
+        if isinstance(overload, SwitchPolicy):
+            return None, overload
+        raise ServingError(
+            f"unknown overload policy {type(overload).__name__} — expected "
+            "serving.overload.ShedPolicy or SwitchPolicy"
+        )
+
+    def _build_rungs(self) -> List[_Rung]:
+        cfg = self.config
+        base = _Rung(
+            self.graph,
+            self.params,
+            self.plan,
+            cfg.kernel_plan,
+            config=cfg,
+            base_slot=self.slot,
+        )
+        if self._switch is None:
+            return [base]
+        ladder = self._switch.ladder
+        if ladder.rungs[0].plan is not self.plan:
+            raise ServingError(
+                "with a SwitchPolicy the engine's plan must be the ladder's "
+                "base rung — build the engine from ladder.rungs[0].plan"
+            )
+        if self.plan.replications:
+            raise ServingError(
+                "the switch ladder's base rung must be unreplicated (the "
+                "engine derives replication-lane params per rung itself)"
+            )
+        rungs = [base]
+        for lr in ladder.rungs[1:]:
+            rplan = lr.plan
+            rparams = self.params
+            if self.execute and rplan.replications:
+                rparams = replicate_params(rparams, rplan.replications)
+            rkp = None
+            if cfg.kernel_plan is not None:
+                rkp = rplan.kernel_plan(batch=cfg.microbatch)
+            rungs.append(
+                _Rung(
+                    rplan.graph,
+                    rparams,
+                    rplan,
+                    rkp,
+                    config=cfg,
+                    base_slot=self.slot,
+                )
+            )
+        return rungs
+
+    # -- active-rung views (the single-rung attribute surface) -------------
+
+    @property
+    def rates(self) -> List[StageRate]:
+        return self._rungs[self._active].rates
+
+    @property
+    def n_stages(self) -> int:
+        return self._rungs[self._active].n_stages
+
+    @property
+    def caps(self) -> List[int]:
+        return self._rungs[self._active].caps
+
+    @property
+    def best_rate(self) -> Fraction:
+        """Sustainable frames per (base) tick of the *active* rung."""
+        return self._rungs[self._active].best_rate
+
+    @property
+    def pipeline(self):
+        return self._rungs[self._active].pipeline
+
+    @property
+    def active_rung(self) -> int:
+        return self._active
 
     # -- request intake ----------------------------------------------------
 
     def submit(self, x: Optional[np.ndarray], rid: Optional[int] = None) -> int:
         """Queue one frame ([H, W, C]); arrival times are assigned by
-        ``run`` from its arrival rate.  Returns the request id."""
+        ``run`` from its arrival source.  Returns the request id."""
         rid = len(self._requests) if rid is None else rid
         self._requests.append(FrameRequest(rid=rid, x=x))
         return rid
@@ -495,6 +789,7 @@ class CNNStreamEngine:
     def _start_batch_exec(self, s: int, batch: _Batch) -> None:
         if not self.execute:
             return
+        rung = self._rungs[batch.rung]
         if s == 0:
             xs = [f.x for f in batch.frames]
             pad = self.microbatch - len(xs)
@@ -502,10 +797,10 @@ class CNNStreamEngine:
                 xs = xs + [np.zeros_like(xs[0])] * pad
             x = jnp.asarray(np.stack(xs)).astype(self.dtype)
             batch.boundary = {}
-            self.pipeline.run_stage(0, self.params, batch.boundary, x)
+            rung.pipeline.run_stage(0, rung.params, batch.boundary, x)
         else:
-            self.pipeline.run_stage(s, self.params, batch.boundary)
-        keep = self._keep_after[s]
+            rung.pipeline.run_stage(s, rung.params, batch.boundary)
+        keep = rung._keep_after[s]
         for k in list(batch.boundary):
             if k not in keep:
                 del batch.boundary[k]
@@ -513,9 +808,11 @@ class CNNStreamEngine:
     def _finish_batch(self, batch: _Batch, t: Fraction) -> None:
         out = None
         if self.execute:
-            out = np.asarray(batch.boundary[self.pipeline.out_name])
+            rung = self._rungs[batch.rung]
+            out = np.asarray(batch.boundary[rung.pipeline.out_name])
         for i, f in enumerate(batch.frames):
             f.t_done = t
+            f.rung = batch.rung
             if out is not None:
                 f.out = out[i]
 
@@ -531,11 +828,15 @@ class CNNStreamEngine:
     def begin(
         self,
         *,
-        arrival_rate: Fraction = Fraction(1),
-        max_ticks: int = 1_000_000,
-        flush_after_ticks: Optional[Fraction] = None,
+        arrival_rate=None,
+        max_ticks: Optional[int] = None,
+        flush_after_ticks=_UNSET,
     ) -> _RunState:
         """Install a fresh run over the submitted frames.
+
+        The arrival source, run bound, and flush knob default to the
+        engine's ``ServeConfig``; the keyword arguments override them
+        per run (the pre-ServeConfig calling convention).
 
         ``flush_after_ticks`` bounds how long a partial micro-batch may
         wait for more arrivals: once the *oldest* admitted frame has been
@@ -544,9 +845,14 @@ class CNNStreamEngine:
         flush).  ``None`` keeps the original behavior — partial batches
         flush only when the stream ends.
         """
-        arrival_rate = Fraction(arrival_rate)
-        if arrival_rate <= 0:
-            raise ServingError(f"arrival_rate must be > 0, got {arrival_rate}")
+        cfg = self.config
+        arrival = cfg.arrival if arrival_rate is None else arrival_rate
+        max_ticks = cfg.max_ticks if max_ticks is None else max_ticks
+        flush_after_ticks = (
+            cfg.flush_after_ticks
+            if flush_after_ticks is _UNSET
+            else flush_after_ticks
+        )
         flush_cycles = None
         if flush_after_ticks is not None:
             flush_cycles = Fraction(flush_after_ticks) * self.slot
@@ -558,11 +864,27 @@ class CNNStreamEngine:
         n = len(reqs)
         if n == 0:
             raise ServingError("no frames submitted")
-        inter = self.slot / arrival_rate
-        for i, r in enumerate(reqs):
-            r.t_submit = i * inter
+        if isinstance(arrival, ArrivalProcess):
+            ticks = arrival.times(n)
+            if any(b < a for a, b in zip(ticks, ticks[1:])) or ticks[0] < 0:
+                raise ServingError(
+                    f"{arrival.name}: arrival times must be nondecreasing "
+                    "and >= 0"
+                )
+            for r, tk in zip(reqs, ticks):
+                r.t_submit = tk * self.slot
+            offered = arrival.mean_rate(n)
+        else:
+            rate = Fraction(arrival)
+            if rate <= 0:
+                raise ServingError(f"arrival_rate must be > 0, got {rate}")
+            inter = self.slot / rate
+            for i, r in enumerate(reqs):
+                r.t_submit = i * inter
+            offered = rate
+        self._active = 0
         self._rt = _RunState(
-            arrival_rate=arrival_rate,
+            arrival_rate=offered,
             horizon=self.slot * max_ticks,
             max_ticks=max_ticks,
             flush_cycles=flush_cycles,
@@ -578,9 +900,9 @@ class CNNStreamEngine:
 
     @property
     def finished(self) -> bool:
-        """Every submitted frame served (valid between begin and finish)."""
+        """Every submitted frame served or shed (begin .. finish)."""
         rt = self._rt
-        return rt.completed >= rt.n
+        return rt.completed + len(rt.shed_rids) >= rt.n
 
     def advance(self, t: Fraction) -> None:
         """Move the run's clock to ``t`` and settle every consequence."""
@@ -609,10 +931,83 @@ class CNNStreamEngine:
         """Assemble the report once the run has drained."""
         rt = self._rt
         if not self.finished:
-            raise ServingError(f"run not drained: {rt.completed}/{rt.n} frames served")
-        return self._report(
-            rt.arrival_rate, rt.stages, rt.max_q, rt.qev, rt.t, rt.req_peak
+            raise ServingError(
+                f"run not drained: {rt.completed}/{rt.n} frames served"
+            )
+        return self._report(rt)
+
+    # -- overload-policy hooks ---------------------------------------------
+
+    def _frames_in_flight(self, rt: _RunState) -> int:
+        """Frames admitted but not yet served (forming + queued + in a
+        stage) — the backlog ahead of the next admission."""
+        n = len(rt.forming)
+        n += sum(len(b.frames) for q in rt.queues for b in q)
+        n += sum(
+            len(st.batch.frames) for st in rt.stages if st.batch is not None
         )
+        return n
+
+    def _past_deadline(self, rt: _RunState, req: FrameRequest, now) -> bool:
+        """SLA projection for the oldest pending frame: its completion,
+        were it admitted now behind the current backlog, in submit-
+        relative ticks vs the policy deadline.  The projection uses the
+        active rung's bottleneck service time — the pace the pipeline
+        provably sustains (Eq. 10), so the estimate is exact in steady
+        state and conservative during drains."""
+        svc = self._rungs[self._active].bottleneck_svc
+        wait = (self._frames_in_flight(rt) + 1) * svc
+        projected = now + wait - req.t_submit
+        return projected > self._shed.deadline_ticks * self.slot
+
+    def _recent_rate(self, rt: _RunState, now) -> Fraction:
+        """Offered rate (frames/base tick) over the trailing decision
+        window — arrivals are scanned backward from the admission index,
+        so the estimate is exact, deterministic, and O(window)."""
+        window = self._switch.window_ticks * self.slot
+        lo = now - window
+        cnt = 0
+        i = rt.arr_idx - 1
+        while i >= 0 and self._requests[i].t_submit > lo:
+            cnt += 1
+            i -= 1
+        return Fraction(cnt) / self._switch.window_ticks
+
+    def _pipeline_drained(self, rt: _RunState) -> bool:
+        return all(st.batch is None for st in rt.stages) and all(
+            not q for q in rt.queues
+        )
+
+    def _perform_switch(self, rt: _RunState, now) -> None:
+        """Swap the active rung at a fully drained micro-batch boundary:
+        archive the finished segment's telemetry, install the new rung's
+        queues/stage states, and re-assert the continuous-flow invariant
+        (the new rung is a feasible Eq. 9 plan and starts stall-free)."""
+        to = rt.switch_target
+        rt.history.append(
+            _Segment(
+                rung=self._active,
+                start=rt.seg_start,
+                end=now,
+                stages=rt.stages,
+                max_q=rt.max_q,
+                qev=rt.qev,
+            )
+        )
+        rt.switches.append((now, self._active, to))
+        self._active = to
+        rung = self._rungs[to]
+        if not rung.plan.continuous_flow:
+            raise ServingError(
+                f"switch to rung {to} violates continuous flow: "
+                f"{rung.plan.infeasible_nodes}"
+            )
+        rt.stages = [_StageState() for _ in range(rung.n_stages)]
+        rt.queues = [deque() for _ in range(rung.n_stages)]
+        rt.qev = [[] for _ in range(rung.n_stages)]
+        rt.max_q = [0] * rung.n_stages
+        rt.seg_start = now
+        rt.switch_target = None
 
     def _settle(self, now: Fraction) -> None:
         rt = self._rt
@@ -631,12 +1026,13 @@ class CNNStreamEngine:
         progress = True
         while progress:
             progress = False
+            n_stages = self.n_stages
             # 1. completions + pushes, downstream first (drain first)
-            for s in range(self.n_stages - 1, -1, -1):
+            for s in range(n_stages - 1, -1, -1):
                 st = rt.stages[s]
                 if st.batch is None or st.busy_until > now:
                     continue
-                if s == self.n_stages - 1:
+                if s == n_stages - 1:
                     self._finish_batch(st.batch, now)
                     rt.completed += len(st.batch.frames)
                 elif len(rt.queues[s + 1]) < self.caps[s + 1]:
@@ -649,7 +1045,7 @@ class CNNStreamEngine:
                 st.busy_until = None
                 progress = True
             # 2. starts (a freed stage pulls from its queue)
-            for s in range(self.n_stages - 1, -1, -1):
+            for s in range(n_stages - 1, -1, -1):
                 st = rt.stages[s]
                 if st.batch is not None or not rt.queues[s]:
                     continue
@@ -671,12 +1067,37 @@ class CNNStreamEngine:
                 rt.arr_idx += 1
                 progress = True
             rt.req_peak = max(rt.req_peak, len(rt.pending) + len(rt.forming))
+            # 3a. SLA shedding: drop pending-head frames whose projected
+            # completion misses the deadline (FIFO pops — survivors are
+            # never reordered; shed frames are never admitted)
+            if self._shed is not None:
+                while rt.pending and self._past_deadline(
+                    rt, rt.pending[0], now
+                ):
+                    req = rt.pending.popleft()
+                    req.t_shed = now
+                    rt.shed_rids.append(req.rid)
+                    progress = True
+            # 3b. plan switching: pick the ladder rung for the observed
+            # arrival rate; a decided switch first drains the pipeline
+            # (admission below holds new batches back), then swaps at
+            # the empty micro-batch boundary
+            if self._switch is not None:
+                if rt.switch_target is None:
+                    est = self._recent_rate(rt, now) / self.slot
+                    target = self._switch.target(est, self._active)
+                    if target != self._active:
+                        rt.switch_target = target
+                if rt.switch_target is not None and self._pipeline_drained(rt):
+                    self._perform_switch(rt, now)
+                    progress = True
+            draining = rt.switch_target is not None
             # 4. admission (Eq. 9 gate: pipeline slack at the gate)
             while rt.pending or rt.forming:
                 if len(rt.forming) == self.microbatch:
-                    if len(rt.queues[0]) >= self.caps[0]:
-                        break  # backpressured: admission halted
-                    enqueue(0, _Batch(rt.next_bid, rt.forming))
+                    if draining or len(rt.queues[0]) >= self.caps[0]:
+                        break  # backpressured (or draining for a switch)
+                    enqueue(0, _Batch(rt.next_bid, rt.forming, self._active))
                     rt.next_bid += 1
                     rt.forming = []
                     progress = True
@@ -696,10 +1117,11 @@ class CNNStreamEngine:
             )
             if (
                 rt.forming
+                and not draining
                 and len(rt.queues[0]) < self.caps[0]
                 and (flush_due or (rt.arr_idx == rt.n and not rt.pending))
             ):
-                enqueue(0, _Batch(rt.next_bid, rt.forming))
+                enqueue(0, _Batch(rt.next_bid, rt.forming, self._active))
                 rt.next_bid += 1
                 rt.forming = []
                 progress = True
@@ -707,17 +1129,20 @@ class CNNStreamEngine:
     def run(
         self,
         *,
-        arrival_rate: Fraction = Fraction(1),
-        max_ticks: int = 1_000_000,
-        flush_after_ticks: Optional[Fraction] = None,
+        arrival_rate=None,
+        max_ticks: Optional[int] = None,
+        flush_after_ticks=_UNSET,
     ) -> ServeReport:
         """Serve every submitted frame; return the telemetry report.
 
-        ``arrival_rate`` is in frames/tick (1 = frames arriving exactly
-        at the plan's input rate; ``best_rate`` is the sustainable
-        ceiling).  ``flush_after_ticks`` bounds partial-batch waiting
-        (see ``begin``).  The run is a deterministic discrete-event loop
-        on an exact rational clock; it ends when the pipeline drains.
+        With no arguments the run uses the engine's ``ServeConfig``
+        (arrival source, run bound, flush knob); the keyword arguments
+        override it per run.  ``arrival_rate`` is a constant rate in
+        frames/tick (1 = frames arriving exactly at the plan's input
+        rate; ``best_rate`` is the sustainable ceiling) or any
+        ``ArrivalProcess``.  The run is a deterministic discrete-event
+        loop on an exact rational clock; it ends when the pipeline
+        drains (every frame served or shed).
         """
         rt = self.begin(
             arrival_rate=arrival_rate,
@@ -736,7 +1161,7 @@ class CNNStreamEngine:
                 )
             if nxt > rt.horizon:
                 raise ServingError(
-                    f"exceeded max_ticks={max_ticks} with {rt.completed}/"
+                    f"exceeded max_ticks={rt.max_ticks} with {rt.completed}/"
                     f"{rt.n} frames served"
                 )
             rt.t = nxt
@@ -744,62 +1169,103 @@ class CNNStreamEngine:
 
     # -- report assembly ---------------------------------------------------
 
-    def _report(self, arrival_rate, stages, max_q, qev, t_end, req_peak):
-        admitted = min(arrival_rate, self.best_rate)
-        reports: List[StageReport] = []
-        for s, (sr, st) in enumerate(zip(self.rates, stages)):
-            span = Fraction(0)
-            if st.first_start is not None and st.last_done is not None:
-                span = st.last_done - st.first_start
-            occ = float(st.busy_cycles / span) if span else 0.0
-            reports.append(
-                StageReport(
-                    stage=s,
-                    n_nodes=len(sr.nodes),
-                    bottleneck_node=sr.bottleneck_node,
-                    svc_cycles_per_frame=sr.svc_cycles,
-                    utilization=sr.utilization,
-                    analytic_occupancy=sr.occupancy_at(admitted),
-                    measured_occupancy=occ,
-                    busy_cycles=st.busy_cycles,
-                    stall_cycles=st.stall_cycles,
-                    batches_served=st.batches_served,
-                    max_queue_batches=max_q[s],
-                    queue_cap_batches=self.caps[s],
-                )
+    def _report(self, rt: _RunState) -> ServeReport:
+        segments = rt.history + [
+            _Segment(
+                rung=self._active,
+                start=rt.seg_start,
+                end=rt.t,
+                stages=rt.stages,
+                max_q=rt.max_q,
+                qev=rt.qev,
             )
-        makespan = t_end / self.slot
+        ]
+        best = max(self._rungs[seg.rung].best_rate for seg in segments)
+        admitted = min(rt.arrival_rate, best)
+        reports: List[StageReport] = []
+        intervals: List[List[Tuple[Fraction, Fraction]]] = []
+        qev_rows: List[List[Tuple[Fraction, int]]] = []
+        for seg in segments:
+            rung = self._rungs[seg.rung]
+            # within a segment admission was gated at *this* rung's
+            # ceiling, so its analytic occupancy is bounded by it even
+            # when a later (faster) rung lifts the run-level admitted
+            # rate above this rung's capacity
+            seg_admitted = min(rt.arrival_rate, rung.best_rate)
+            for s, (sr, st) in enumerate(zip(rung.rates, seg.stages)):
+                span = Fraction(0)
+                if st.first_start is not None and st.last_done is not None:
+                    span = st.last_done - st.first_start
+                occ = float(st.busy_cycles / span) if span else 0.0
+                reports.append(
+                    StageReport(
+                        stage=s,
+                        n_nodes=len(sr.nodes),
+                        bottleneck_node=sr.bottleneck_node,
+                        svc_cycles_per_frame=sr.svc_cycles,
+                        utilization=sr.utilization,
+                        analytic_occupancy=sr.occupancy_at(seg_admitted),
+                        measured_occupancy=occ,
+                        busy_cycles=st.busy_cycles,
+                        stall_cycles=st.stall_cycles,
+                        batches_served=st.batches_served,
+                        max_queue_batches=seg.max_q[s],
+                        queue_cap_batches=rung.caps[s],
+                        rung=seg.rung,
+                    )
+                )
+                intervals.append(st.intervals)
+                qev_rows.append(seg.qev[s])
+        makespan = rt.t / self.slot
         done = [r for r in self._requests if r.t_done is not None]
         report = ServeReport(
-            n_stages=self.n_stages,
+            n_stages=self._rungs[0].n_stages,
             microbatch=self.microbatch,
             slot_cycles=self.slot,
-            best_rate=self.best_rate,
-            arrival_rate=arrival_rate,
+            best_rate=best,
+            arrival_rate=rt.arrival_rate,
             admitted_rate=admitted,
             frames=len(self._requests),
             completed=len(done),
             makespan_ticks=makespan,
             throughput=Fraction(len(done)) / makespan if makespan else Fraction(0),
             latency_ticks=[(r.t_done - r.t_submit) / self.slot for r in done],
-            service_latency_ticks=[(r.t_done - r.t_admit) / self.slot for r in done],
+            service_latency_ticks=[
+                (r.t_done - r.t_admit) / self.slot for r in done
+            ],
             stages=reports,
-            request_queue_peak=req_peak,
-            queue_events=qev,
+            request_queue_peak=rt.req_peak,
+            queue_events=qev_rows,
+            shed=len(rt.shed_rids),
+            shed_rids=tuple(rt.shed_rids),
+            switches=tuple(
+                (t / self.slot, a, b) for t, a, b in rt.switches
+            ),
         )
-        report._stage_intervals = [st.intervals for st in stages]
+        report._stage_intervals = intervals
         return report
 
     # -- results -----------------------------------------------------------
 
     def outputs(self) -> np.ndarray:
-        """Served outputs stacked in request order (execute mode only)."""
+        """Served outputs stacked in request order (execute mode only);
+        SLA-shed frames are skipped — ``ServeReport.shed_rids`` names
+        them."""
         if not self.execute:
             raise ServingError("engine ran with execute=False — no outputs")
-        missing = [r.rid for r in self._requests if r.out is None]
+        missing = [
+            r.rid
+            for r in self._requests
+            if r.out is None and r.t_shed is None
+        ]
         if missing:
             raise ServingError(f"frames not served yet: {missing[:5]}")
-        ordered = sorted(self._requests, key=lambda r: r.rid)
+        ordered = sorted(
+            (r for r in self._requests if r.out is not None),
+            key=lambda r: r.rid,
+        )
+        if not ordered:
+            raise ServingError("every frame was shed — no outputs")
         return np.stack([r.out for r in ordered])
 
 
@@ -815,58 +1281,63 @@ def serve_frames(
     *,
     input_rate,
     n_stages: int = 1,
-    arrival_rate: Fraction = Fraction(1),
-    microbatch: int = 1,
+    config: Optional[ServeConfig] = None,
+    arrival_rate=None,
+    microbatch: Optional[int] = None,
     rate_matched: bool = False,
-    interpret: bool = True,
-    dtype=jnp.float32,
-    check: bool = True,
-    jit: bool = True,
-    execute: bool = True,
-    max_ticks: int = 1_000_000,
-    flush_after_ticks: Optional[Fraction] = None,
+    interpret: Optional[bool] = None,
+    dtype=None,
+    check: Optional[bool] = None,
+    jit: Optional[bool] = None,
+    execute: Optional[bool] = None,
+    max_ticks: Optional[int] = None,
+    flush_after_ticks=_UNSET,
     **dse_kwargs,
 ):
     """Plan, stream, and serve ``frames`` through a staged pipeline.
 
     Runs the DAG DSE at ``input_rate`` with an ``n_stages`` partition,
     optionally lowers the rate-matched per-node kernel plan pinned to
-    the micro-batch (``rate_matched=True``), and serves every frame at
-    ``arrival_rate`` (frames/tick).  Returns ``(outputs, report)``;
-    ``outputs`` is None when ``execute=False`` (timing model only).
-    A ``replicate=`` kwarg flows through to ``plan_graph`` — the engine
-    then runs the rewritten graph with the hot node's params aliased
-    onto the lanes.
+    the micro-batch (``rate_matched=True``), and serves every frame
+    from the configured arrival source.  ``config`` is the unified
+    ``serving.ServeConfig``; the individual keyword arguments override
+    its fields (and keep the pre-ServeConfig calling convention
+    working).  Returns ``(outputs, report)``; ``outputs`` is None when
+    ``execute=False`` (timing model only).  A ``replicate=`` kwarg
+    flows through to ``plan_graph`` — the engine then runs the
+    rewritten graph with the hot node's params aliased onto the lanes.
     """
     from repro.core.graph import plan_graph
-    from repro.core.replicate import replicate_params
+
+    cfg = config if config is not None else ServeConfig()
+    overrides = {
+        "microbatch": microbatch,
+        "interpret": interpret,
+        "dtype": dtype,
+        "check": check,
+        "jit": jit,
+        "execute": execute,
+        "arrival": arrival_rate,
+        "max_ticks": max_ticks,
+    }
+    overrides = {k: v for k, v in overrides.items() if v is not None}
+    if flush_after_ticks is not _UNSET:
+        overrides["flush_after_ticks"] = flush_after_ticks
+    if overrides:
+        cfg = cfg.with_(**overrides)
 
     plan = plan_graph(graph, input_rate, n_stages=n_stages, **dse_kwargs)
     if plan.replications:
         graph = plan.graph
         params = replicate_params(params, plan.replications)
-    kp = plan.kernel_plan(batch=microbatch) if rate_matched else None
-    engine = CNNStreamEngine(
-        graph,
-        params,
-        plan,
-        microbatch=microbatch,
-        kernel_plan=kp,
-        interpret=interpret,
-        dtype=dtype,
-        check=check,
-        jit=jit,
-        execute=execute,
-    )
-    if execute:
+    if rate_matched:
+        cfg = cfg.with_(kernel_plan=plan.kernel_plan(batch=cfg.microbatch))
+    engine = CNNStreamEngine(graph, params, plan, cfg)
+    if cfg.execute:
         engine.submit_all(frames)
     else:
         for _ in range(int(frames) if isinstance(frames, int) else len(frames)):
             engine.submit(None)
-    report = engine.run(
-        arrival_rate=arrival_rate,
-        max_ticks=max_ticks,
-        flush_after_ticks=flush_after_ticks,
-    )
-    outputs = engine.outputs() if execute else None
+    report = engine.run()
+    outputs = engine.outputs() if cfg.execute else None
     return outputs, report

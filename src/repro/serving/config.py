@@ -1,0 +1,65 @@
+"""ServeConfig: the one serving surface.
+
+The serving knobs had sprawled: ``CNNStreamEngine.__init__`` took nine
+kwargs, ``run`` three more, and ``CNNApi.serve`` / ``FleetScheduler``
+each re-threaded overlapping subsets.  ``ServeConfig`` collects the
+whole surface in one frozen dataclass with three clearly separated
+groups:
+
+* **execution knobs** — how admitted micro-batches are computed
+  (``microbatch``, ``kernel_plan``, ``impls``, ``overrides``,
+  ``interpret``, ``dtype``, ``check``, ``jit``, ``execute``);
+* **arrival source** — what traffic the run sees: a bare rate
+  (frames/tick, the legacy constant process) or any
+  ``serving.scenarios.ArrivalProcess`` (``arrival``), plus the run
+  bound ``max_ticks``;
+* **flush / SLA / overload policy** — ``flush_after_ticks`` (straggler
+  bound on partial micro-batches) and ``overload`` (``None``,
+  ``serving.overload.ShedPolicy``, or ``serving.overload.SwitchPolicy``).
+
+``CNNStreamEngine(graph, params, plan, config)``, ``CNNApi.serve(...,
+config=...)``, ``serve_frames(..., config=...)``, and
+``FleetScheduler(pool, config=...)`` (with per-tenant overrides via
+``TenantWorkload.config``) all consume it uniformly.  The pre-existing
+kwargs keep working as a thin deprecated shim that builds the
+equivalent ``ServeConfig`` (``tests/serving/test_serve_config.py`` pins
+kwargs == config equivalence event-for-event).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from fractions import Fraction
+from typing import Any, Mapping, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Everything one serving run needs, in one frozen value.
+
+    ``dtype=None`` resolves to the engine default (float32).
+    ``arrival`` is a constant rate in frames/tick (``Fraction``/int) or
+    an ``ArrivalProcess``.  ``kernel_plan`` must be pinned to
+    ``microbatch`` when given (``GraphPlan.kernel_plan(batch=B)``).
+    """
+
+    # -- execution knobs ---------------------------------------------------
+    microbatch: int = 1
+    kernel_plan: Optional[Mapping[str, Any]] = None
+    impls: Optional[Mapping[str, Any]] = None
+    overrides: Optional[Mapping[str, Any]] = None
+    interpret: bool = True
+    dtype: Any = None
+    check: bool = True
+    jit: bool = True
+    execute: bool = True
+    # -- arrival source ----------------------------------------------------
+    arrival: Any = Fraction(1)
+    max_ticks: int = 1_000_000
+    # -- flush / SLA / overload policy ---------------------------------------
+    flush_after_ticks: Optional[Fraction] = None
+    overload: Optional[Any] = None
+
+    def with_(self, **changes) -> "ServeConfig":
+        """A copy with ``changes`` applied (frozen-friendly update)."""
+        return dataclasses.replace(self, **changes)

@@ -1,0 +1,148 @@
+"""Traffic scenarios (serving/scenarios.py).
+
+The contract: an ArrivalProcess is a seeded, deterministic map from a
+frame count to exact-Fraction submit times in ticks — nondecreasing,
+reproducible across calls, and (for Constant) identical to the legacy
+``run(arrival_rate=)`` timing.
+"""
+from fractions import Fraction as F
+
+import pytest
+
+from repro.core.graph import plan_graph
+from repro.models.registry import get_cnn_api
+from repro.serving import ServeConfig
+from repro.serving.cnn_stream import CNNStreamEngine, best_rate_frames
+from repro.serving.scenarios import (
+    Bursty,
+    Diurnal,
+    ScenarioError,
+    adversarial,
+    bursty,
+    constant,
+    diurnal,
+)
+
+
+def _plan(family="resnet18", n_stages=2, rate=F(3)):
+    api = get_cnn_api(family)
+    cfg = api.make_config(input_hw=(32, 32), num_classes=10)
+    graph = cfg.graph()
+    return graph, plan_graph(graph, rate, n_stages=n_stages)
+
+
+# ---------------------------------------------------------------------------
+# constant: the legacy timing, exactly
+# ---------------------------------------------------------------------------
+
+def test_constant_times_match_legacy_spacing():
+    c = constant(F(3, 2))
+    assert c.times(4) == [F(0), F(2, 3), F(4, 3), F(2)]
+    assert c.mean_rate(4) == F(3, 2)
+
+
+def test_constant_process_is_event_identical_to_legacy_rate():
+    """run(arrival_rate=r) and ServeConfig(arrival=constant(r)) are the
+    same run, event for event."""
+    graph, plan = _plan()
+    reps = []
+    for arrival in (F(3, 2), constant(F(3, 2))):
+        cfg = ServeConfig(microbatch=2, execute=False, arrival=arrival)
+        eng = CNNStreamEngine(graph, None, plan, cfg)
+        for _ in range(12):
+            eng.submit(None)
+        reps.append(eng.run())
+    a, b = reps
+    assert a.makespan_ticks == b.makespan_ticks
+    assert a.latency_ticks == b.latency_ticks
+    assert a.queue_events == b.queue_events
+    assert [s.busy_cycles for s in a.stages] == [s.busy_cycles for s in b.stages]
+
+
+# ---------------------------------------------------------------------------
+# bursty: seeded on/off
+# ---------------------------------------------------------------------------
+
+def test_bursty_unjittered_shape():
+    """burst frames at on_rate, then a gap, repeated — exact rationals."""
+    b = bursty(F(2), burst=3, gap=4)
+    # bursts of 3 at spacing 1/2, burst span 3/2, next burst at +gap
+    assert b.times(7) == [
+        F(0), F(1, 2), F(1),
+        F(11, 2), F(6), F(13, 2),
+        F(11),
+    ]
+
+
+def test_bursty_jitter_is_seeded_and_deterministic():
+    a = bursty(F(2), burst=8, gap=6, burst_jitter=3, gap_jitter=2, seed=7)
+    b = bursty(F(2), burst=8, gap=6, burst_jitter=3, gap_jitter=2, seed=7)
+    c = bursty(F(2), burst=8, gap=6, burst_jitter=3, gap_jitter=2, seed=8)
+    assert a.times(40) == b.times(40)  # same seed -> same process
+    assert a.times(40) != c.times(40)  # different seed -> different draws
+    ts = a.times(40)
+    assert all(t2 >= t1 for t1, t2 in zip(ts, ts[1:]))
+    assert all(isinstance(t, F) for t in ts)
+
+
+def test_bursty_validation():
+    with pytest.raises(ScenarioError):
+        Bursty(on_rate=F(0))
+    with pytest.raises(ScenarioError):
+        Bursty(burst=0)
+    with pytest.raises(ScenarioError):
+        Bursty(gap=2, gap_jitter=3)  # jitter could make the gap negative
+    with pytest.raises(ScenarioError):
+        Bursty(burst=4, burst_jitter=4)  # jitter could empty a burst
+
+
+# ---------------------------------------------------------------------------
+# diurnal: exact inhomogeneous inversion
+# ---------------------------------------------------------------------------
+
+def test_diurnal_inverts_integrated_rate_exactly():
+    """rate 1 for 4 ticks, idle 2 ticks, cycling: arrivals land exactly
+    where the integrated rate crosses each integer — the zero-rate night
+    is skipped, the pending fraction carries across the boundary."""
+    d = diurnal(((F(1), F(4)), (F(0), F(2))))
+    assert d.times(9) == [
+        F(0), F(1), F(2), F(3), F(4),
+        F(7), F(8), F(9), F(10),
+    ]
+
+
+def test_diurnal_fractional_carry_across_phases():
+    # rate 1/2 for 3 ticks integrates 3/2: one arrival at t=2, then 1/2
+    # credit spent into the rate-2 phase -> next arrival 1/4 tick in
+    d = diurnal(((F(1, 2), F(3)), (F(2), F(1))))
+    ts = d.times(4)
+    assert ts[0] == F(0)
+    assert ts[1] == F(2)
+    assert ts[2] == F(3) + F(1, 4)
+    assert ts[3] == F(3) + F(3, 4)
+
+
+def test_diurnal_validation():
+    with pytest.raises(ScenarioError):
+        Diurnal(phases=())
+    with pytest.raises(ScenarioError):
+        Diurnal(phases=((F(1), F(0)),))  # zero-length phase
+    with pytest.raises(ScenarioError):
+        Diurnal(phases=((F(0), F(2)),))  # all-zero rates never arrive
+
+
+# ---------------------------------------------------------------------------
+# adversarial: just above BestRate
+# ---------------------------------------------------------------------------
+
+def test_adversarial_sits_just_above_best_rate():
+    _, plan = _plan()
+    br = best_rate_frames(plan)
+    adv = adversarial(br)
+    assert adv.name == "adversarial"
+    assert adv.rate == br * F(17, 16)
+    assert adv.rate > br
+    with pytest.raises(ScenarioError):
+        adversarial(br, margin=F(1))  # must be strictly above
+    with pytest.raises(ScenarioError):
+        adversarial(F(0))
