@@ -22,6 +22,10 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
                           adversarial traffic x {baseline, SLA shed,
                           plan switch} with p99 growth verdicts
                           (deterministic tick model)
+  table9_memory         — memory-efficient streams: fp32-vs-int8 cut
+                          crossing bits (the 4x wire narrowing) and
+                          bram_budget-constrained fallback cuts for all
+                          four families at S in {2,3}
   rate_aware_serving    — the technique applied to LM serving (DESIGN §3)
   kernel_bench          — Pallas kernels vs oracles + tile stats
   roofline              — 40-cell roofline summary (needs dry-run JSONs)
@@ -52,6 +56,7 @@ MODULES = [
     ("table6", "benchmarks.table6_serving"),
     ("table7", "benchmarks.table7_fleet"),
     ("table8", "benchmarks.table8_overload"),
+    ("table9", "benchmarks.table9_memory"),
     ("rate_aware", "benchmarks.rate_aware_serving"),
     ("kernels", "benchmarks.kernel_bench"),
     ("roofline", "benchmarks.roofline"),

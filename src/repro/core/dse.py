@@ -477,7 +477,9 @@ def plan_partitioned(graph, input_rate: Fraction, n_stages: int, **kwargs):
     ``core.graph.plan_graph(..., n_stages=...)`` (imported lazily —
     graph imports this module).  Returns the ``GraphPlan`` with
     ``stage_plan`` / ``stream_bufs`` populated; ``kwargs`` pass through
-    (scheme, objective, chain_cuts, stage_cost_key, link_cycles).
+    (scheme, objective, chain_cuts, stage_cost_key, link_cycles,
+    link_dtype, bram_budget — the latter raising ``ValueError`` when no
+    cut fits the per-chip BRAM bits).
     """
     from .graph import plan_graph
 

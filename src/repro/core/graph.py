@@ -65,10 +65,13 @@ from .hw_specs import TPU_V5E, TPUSpec
 from .rate import LayerSpec, RatePoint
 from .stage_partition import (
     DEFAULT_LINK_CYCLES,
+    EdgeTraffic,
     GraphStagePlan,
+    LinkDtype,
     StreamBuffer,
     partition_graph,
     plan_node_costs,
+    stage_stream_bits,
     stream_buffers,
 )
 from .tpu_tiles import TileChoice, select_tile_for_impl
@@ -574,6 +577,9 @@ class GraphPlan:
     buffers: List[JoinBuffer]
     stage_plan: Optional[GraphStagePlan] = None
     stream_bufs: Optional[List[StreamBuffer]] = None
+    # Wire format of cut-crossing activations (str, or per-producer
+    # mapping) — what every stream buffer's width was sized with.
+    link_dtype: LinkDtype = "int8"
     # Multi-CLP replications applied before planning (core.replicate
     # records; empty for an unreplicated plan).  The serving engine uses
     # these to amortize lane service over the R frames a lane sees 1 of.
@@ -651,6 +657,12 @@ class GraphPlan:
         self._require_stages()
         return sum(b.bits for b in self.stream_bufs or [])
 
+    def stage_stream_bits(self) -> List[int]:
+        """Cut-crossing buffer bits parked on each stage's chip (buffers
+        live on the consuming stage) — what a ``bram_budget`` caps."""
+        sp = self._require_stages()
+        return list(stage_stream_bits(self.stream_bufs or [], sp.n_stages))
+
     def kernel_plan(
         self,
         *,
@@ -701,6 +713,29 @@ class GraphPlan:
         return plans
 
 
+def _plan_edge_traffic(plan: GraphPlan) -> Dict[Tuple[str, str], EdgeTraffic]:
+    """Exact per-edge traffic from a solved plan — the q_in / d /
+    absorbed-FIFO base that ``stream_buffers`` prices, handed to the
+    budgeted DP so feasibility and pricing agree bit-for-bit."""
+    graph = plan.graph
+    out: Dict[Tuple[str, str], EdgeTraffic] = {}
+    for dst in graph.topo_order():
+        q = plan.timing[dst].q_in
+        for src in graph.preds(dst):
+            try:
+                base = plan.buffer_for(dst, src).bound_pixels
+            except KeyError:
+                base = 1
+            out[(src, dst)] = EdgeTraffic(
+                src=src,
+                dst=dst,
+                q=q,
+                d=graph.spec(src).d_out,
+                base_pixels=base,
+            )
+    return out
+
+
 def plan_graph(
     graph: LayerGraph,
     input_rate: Fraction,
@@ -712,6 +747,8 @@ def plan_graph(
     chain_cuts: bool = False,
     stage_cost_key: str = "mults",
     link_cycles: int = DEFAULT_LINK_CYCLES,
+    link_dtype: LinkDtype = "int8",
+    bram_budget=None,
     replicate=None,
 ) -> GraphPlan:
     """Select an implementation for every node of a DAG.
@@ -734,6 +771,15 @@ def plan_graph(
     ``stream_bufs``; the executor (``models.cnn.apply_staged``) and the
     resource model (``estimate_graph`` / ``estimate_stages``) both
     consume it.
+
+    ``link_dtype`` sets the wire format of cut-crossing activations
+    (``'int8'``/``'bf16'``/``'fp32'``, or a per-producer mapping) — it
+    scales both the DP's cut weights and every stream buffer's width.
+    ``bram_budget`` (bits per chip; scalar or one per stage) makes the
+    partition buffer-aware: the DP only admits cuts whose parked stream
+    bits fit each stage's chip, using the plan's exact edge traffic, so
+    the ``stream_buffers`` it prices afterwards can never exceed the
+    budget (asserted).  Raises ``ValueError`` when no partition fits.
 
     ``replicate`` turns on Multi-CLP bottleneck replication *before*
     planning: a ``(node, R)`` pair, a ``{node: R}`` mapping, or a bare
@@ -773,6 +819,7 @@ def plan_graph(
         timing=timing,
         buffers=join_buffers(graph, impls, timing)
         + deal_buffers(graph, impls, timing),
+        link_dtype=link_dtype,
         replications=replications,
     )
     if n_stages is not None:
@@ -781,8 +828,22 @@ def plan_graph(
             plan_node_costs(plan, stage_cost_key),
             n_stages,
             chain_cuts=chain_cuts,
+            link_dtype=link_dtype,
+            bram_budget=bram_budget,
+            edge_traffic=(
+                _plan_edge_traffic(plan) if bram_budget is not None else None
+            ),
+            link_cycles=link_cycles,
         )
         plan.stream_bufs = stream_buffers(
-            plan, plan.stage_plan, link_cycles=link_cycles
+            plan, plan.stage_plan, link_cycles=link_cycles, link_dtype=link_dtype
         )
+        if plan.stage_plan.bram_budget is not None:
+            parked = stage_stream_bits(plan.stream_bufs, n_stages)
+            if tuple(parked) != plan.stage_plan.stage_buffer_bits:
+                raise GraphError(
+                    f"budgeted DP parked bits {plan.stage_plan.stage_buffer_bits}"
+                    f" != priced stream buffers {tuple(parked)} — "
+                    f"edge_buffer_geometry drifted from stream_buffers"
+                )
     return plan

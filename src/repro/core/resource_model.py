@@ -276,7 +276,9 @@ def estimate_stream_buffer(buf) -> ResourceEstimate:
     """One inter-chip stream buffer (a ``core.stage_partition.
     StreamBuffer``): the same width-configurable FIFO mapping as the
     join skew FIFOs, plus the link interface logic (serialization and
-    credit-based flow control toward the neighbour chip)."""
+    credit-based flow control toward the neighbour chip).  The buffer's
+    ``link_dtype`` is already folded into ``width_bits`` — an int8
+    crossing prices 4x narrower than fp32 here with no special case."""
     est = estimate_join_buffer(buf)
     est.lut += _LINK_IFACE_LUT
     return est

@@ -35,21 +35,58 @@ DAG tools (the LayerGraph lift):
   inter-chip stream buffer: its depth is the ``core.graph``
   join-skew bound (the offset difference already equals the
   cross-stage latency difference of the trunk path) plus link slack
-  for every chip boundary crossed.
+  for every chip boundary crossed.  Each buffer carries a
+  ``link_dtype`` (fp32 / bf16 / int8) setting the bits per feature on
+  the link — narrow crossings shrink both the buffer and the cut
+  weight the DP minimizes.
+* ``bram_budget`` on ``partition_graph`` — the Petrica et al. lift
+  ("Memory-Efficient Dataflow Inference for Deep CNNs on FPGA"):
+  on-chip memory, not arithmetic, bounds deep dataflow designs, so the
+  cut-crossing buffer bits parked on each chip become a *constraint*,
+  not a tie-break.  The DP is then min-bottleneck **subject to** every
+  stage's incoming stream-buffer bits fitting its chip's budget,
+  falling back to the next-best bottleneck when the min-cut optimum is
+  infeasible (``_budgeted_search``).
 """
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import math
 from fractions import Fraction
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 # Cycles of slack per chip-boundary crossing: serialization + transport
 # latency of one inter-chip hop (Aurora-class link at core clock).  The
 # stream buffer must park this many cycles of pixels on top of the
 # analytic skew bound so the downstream chip never starves.
 DEFAULT_LINK_CYCLES = 64
+
+# Bits per feature a cut-crossing link carries.  'int8' is the paper's
+# 8-bit datapath (the historical hardcoded width); 'fp32' is what an
+# unquantized crossing actually costs — the latent 4x under-pricing the
+# link_dtype machinery closes.
+LINK_DTYPE_BITS: Dict[str, int] = {"int8": 8, "bf16": 16, "fp32": 32}
+
+# str = one dtype for every crossing; mapping = per-producer override
+# (keyed by the *src* node name — one physical stream leaves each
+# producer, so all its out-edges share a width).
+LinkDtype = Union[str, Mapping[str, str]]
+
+
+def resolve_link_dtype(link_dtype: LinkDtype, src: str) -> str:
+    """The link dtype of the crossing stream leaving ``src``."""
+    if isinstance(link_dtype, str):
+        dtype = link_dtype
+    else:
+        dtype = link_dtype.get(src, "int8")
+    if dtype not in LINK_DTYPE_BITS:
+        raise ValueError(
+            f"unknown link_dtype {dtype!r} for edge source {src!r} "
+            f"(known: {sorted(LINK_DTYPE_BITS)})"
+        )
+    return dtype
 
 
 @dataclasses.dataclass(frozen=True)
@@ -246,6 +283,60 @@ def service_rates(
 
 
 @dataclasses.dataclass(frozen=True)
+class EdgeTraffic:
+    """Steady-state traffic on one graph edge — what the budgeted DP and
+    ``stream_buffers`` both size a cut-crossing FIFO from.
+
+    ``base_pixels`` is the analytic skew/deal bound the buffer absorbs
+    when the edge carries a join or deal FIFO (1 for plain pipeline
+    edges); ``q`` / ``d`` are the pixel rate and channel count.
+    ``plan_graph`` builds these from the solved timing; callers without
+    a plan get the rate-free approximation ``default_edge_traffic``.
+    """
+
+    src: str
+    dst: str
+    q: Fraction  # pixel rate through the edge
+    d: int  # channels per pixel
+    base_pixels: int = 1  # absorbed skew/deal FIFO bound
+
+
+def default_edge_traffic(graph) -> Dict[Tuple[str, str], EdgeTraffic]:
+    """Rate-free traffic (q = 1 pixel/clock, no absorbed skew) for every
+    edge — the approximation used when ``partition_graph`` is handed a
+    ``bram_budget`` but no plan-derived ``edge_traffic``."""
+    out: Dict[Tuple[str, str], EdgeTraffic] = {}
+    for v in graph.topo_order():
+        for u in graph.preds(v):
+            out[(u, v)] = EdgeTraffic(
+                src=u, dst=v, q=Fraction(1), d=graph.spec(u).d_out
+            )
+    return out
+
+
+def edge_buffer_geometry(
+    traffic: EdgeTraffic,
+    crossings: int,
+    *,
+    bits_per_feature: int,
+    link_cycles: int = DEFAULT_LINK_CYCLES,
+) -> Tuple[int, int, int, int]:
+    """(bound_pixels, lanes, width_bits, depth_words) of the stream
+    buffer an edge needs when it crosses ``crossings`` chip boundaries.
+
+    The single source of truth for cut-crossing FIFO sizing: both
+    ``stream_buffers`` (pricing a chosen partition) and the budgeted DP
+    (checking candidate partitions) call this, so a plan admitted under
+    a ``bram_budget`` can never be re-priced over it afterwards.
+    """
+    bound = traffic.base_pixels + math.ceil(crossings * link_cycles * traffic.q)
+    lanes = max(1, math.ceil(traffic.q * traffic.d))
+    width = bits_per_feature * lanes
+    depth = max(2, math.ceil(Fraction(bound * traffic.d, lanes)))
+    return bound, lanes, width, depth
+
+
+@dataclasses.dataclass(frozen=True)
 class GraphStagePlan:
     """A contiguous-in-topo-order partition of a ``LayerGraph``.
 
@@ -255,6 +346,11 @@ class GraphStagePlan:
     crossing interior boundary ``b`` (so a residual shortcut whose
     branch and join land in different stages appears here, and is
     priced as an inter-chip stream buffer by ``stream_buffers``).
+
+    When partitioned under a ``bram_budget``, ``bram_budget`` records
+    the per-stage bit budgets the DP honoured and ``stage_buffer_bits``
+    the cut-crossing buffer bits actually parked on each stage (always
+    elementwise <= the budget; stage 0 has no incoming cut, so 0).
     """
 
     order: Tuple[str, ...]
@@ -264,6 +360,8 @@ class GraphStagePlan:
     balance: float  # mean/max stage cost
     cut_edges: Tuple[Tuple[Tuple[str, str], ...], ...]  # per interior cut
     chain_legal: bool  # every cut crossed by exactly one edge
+    bram_budget: Optional[Tuple[int, ...]] = None  # bits per stage, if budgeted
+    stage_buffer_bits: Optional[Tuple[int, ...]] = None  # bits parked per stage
 
     @property
     def n_stages(self) -> int:
@@ -310,12 +408,108 @@ def legal_cut_positions(graph, *, chain_only: bool = False) -> List[int]:
     ]
 
 
+def _stage_bits(
+    graph,
+    order: Sequence[str],
+    bounds: Sequence[int],
+    edge_traffic: Mapping[Tuple[str, str], EdgeTraffic],
+    link_dtype: LinkDtype,
+    link_cycles: int,
+) -> Tuple[int, ...]:
+    """Cut-crossing buffer bits parked on each stage of a candidate
+    partition — same geometry as ``stream_buffers``, parked on the
+    consuming (dst) stage, matching ``estimate_stages`` attribution."""
+    interior = list(bounds[1:-1])
+    n_stages = len(bounds) - 1
+    idx = {name: i for i, name in enumerate(order)}
+
+    def stage_of(i: int) -> int:
+        return bisect.bisect_right(interior, i)
+
+    bits = [0] * n_stages
+    for v in order:
+        sv = stage_of(idx[v])
+        for u in graph.preds(v):
+            crossings = sv - stage_of(idx[u])
+            if crossings <= 0:
+                continue
+            bpf = LINK_DTYPE_BITS[resolve_link_dtype(link_dtype, u)]
+            _, _, width, depth = edge_buffer_geometry(
+                edge_traffic[(u, v)],
+                crossings,
+                bits_per_feature=bpf,
+                link_cycles=link_cycles,
+            )
+            bits[sv] += width * depth
+    return tuple(bits)
+
+
+def _budgeted_search(
+    cost_list: Sequence[float],
+    n_stages: int,
+    positions: Sequence[int],
+    cut_weight: Mapping[int, float],
+    feasible,
+) -> Optional[Tuple[int, ...]]:
+    """Exhaustive fallback when the unconstrained optimum busts the
+    budget: lexicographic min (bottleneck, total cut weight) over all
+    boundary combinations whose parked bits ``feasible`` accepts.
+
+    DFS over increasing interior boundaries, pruning any prefix whose
+    running max segment already exceeds the best feasible bottleneck
+    (segments only grow rightward, so the loop breaks, not skips).
+    Among exact (bottleneck, cut) ties the lexicographically smallest
+    boundary tuple wins — the DFS visits tuples in that order and only
+    replaces on strict improvement.  Returns None if nothing fits.
+    """
+    n = len(cost_list)
+    prefix = [0.0]
+    for c in cost_list:
+        prefix.append(prefix[-1] + c)
+
+    def seg(a: int, b: int) -> float:
+        return prefix[b] - prefix[a]
+
+    pts = sorted(positions)
+    best: Optional[Tuple[float, float, Tuple[int, ...]]] = None
+    chosen: List[int] = []
+
+    def dfs(start: int, prev: int, maxseg: float, cutw: float) -> None:
+        nonlocal best
+        remaining = n_stages - 1 - len(chosen)
+        if remaining == 0:
+            bot = max(maxseg, seg(prev, n))
+            if best is not None and (bot, cutw) >= best[:2]:
+                return
+            bounds = (0, *chosen, n)
+            if feasible(bounds):
+                best = (bot, cutw, bounds)
+            return
+        for j in range(start, len(pts) - remaining + 1):
+            pos = pts[j]
+            if pos <= prev:
+                continue
+            new_max = max(maxseg, seg(prev, pos))
+            if best is not None and new_max > best[0]:
+                break  # seg(prev, pos) grows with pos — no later j helps
+            chosen.append(pos)
+            dfs(j + 1, pos, new_max, cutw + cut_weight.get(pos, 0.0))
+            chosen.pop()
+
+    dfs(0, 0, 0.0, 0.0)
+    return best[2] if best is not None else None
+
+
 def partition_graph(
     graph,
     costs: Mapping[str, float],
     n_stages: int,
     *,
     chain_cuts: bool = False,
+    link_dtype: LinkDtype = "int8",
+    bram_budget: Optional[Union[int, Sequence[int]]] = None,
+    edge_traffic: Optional[Mapping[Tuple[str, str], EdgeTraffic]] = None,
+    link_cycles: int = DEFAULT_LINK_CYCLES,
 ) -> GraphStagePlan:
     """Min-bottleneck partition of a ``LayerGraph`` into ``n_stages``.
 
@@ -325,12 +519,24 @@ def partition_graph(
     is the hardware the DSE actually instantiates.
 
     The DP minimizes (bottleneck, total cut width in bits)
-    lexicographically over contiguous-in-topo-order stages.  With
+    lexicographically over contiguous-in-topo-order stages.  Cut width
+    is ``LINK_DTYPE_BITS[link_dtype] * d_out`` per crossing edge, so a
+    narrow link is genuinely cheaper to cut than a wide one.  With
     ``chain_cuts=False`` (the DAG formulation) every interior position
     is a legal boundary; edges spanning it are recorded in
     ``cut_edges`` and later priced by ``stream_buffers``.  With
     ``chain_cuts=True`` boundaries are restricted to single-stream
     positions — the chain-DP baseline.
+
+    ``bram_budget`` (bits; a scalar for homogeneous chips or one value
+    per stage, mirroring ``allocate_chips`` budgets) turns the buffer
+    bits from a tie-break into a constraint: every stage's incoming
+    cut-crossing buffer bits (sized by ``edge_buffer_geometry`` on
+    ``edge_traffic``, defaulting to the rate-free
+    ``default_edge_traffic``) must fit its chip.  When the
+    unconstrained optimum already fits it is returned unchanged;
+    otherwise ``_budgeted_search`` finds the best feasible fallback, or
+    raises ``ValueError`` when no partition fits.
     """
     order = graph.topo_order()
     missing = [name for name in order if name not in costs]
@@ -344,10 +550,53 @@ def partition_graph(
         if not (chain_cuts and len(edges) != 1)
     ]
     cut_weight = {
-        pos: float(sum(8 * graph.spec(u).d_out for u, _ in crossing[pos]))
+        pos: float(
+            sum(
+                LINK_DTYPE_BITS[resolve_link_dtype(link_dtype, u)]
+                * graph.spec(u).d_out
+                for u, _ in crossing[pos]
+            )
+        )
         for pos in positions
     }
     bounds = _dp_min_bottleneck(cost_list, n_stages, positions, cut_weight)
+
+    budget: Optional[Tuple[int, ...]] = None
+    parked: Optional[Tuple[int, ...]] = None
+    if bram_budget is not None:
+        if isinstance(bram_budget, int):
+            budget = (bram_budget,) * n_stages
+        else:
+            budget = tuple(int(b) for b in bram_budget)
+            if len(budget) != n_stages:
+                raise ValueError(
+                    f"{len(budget)} bram budgets for {n_stages} stages"
+                )
+        traffic = (
+            edge_traffic if edge_traffic is not None else default_edge_traffic(graph)
+        )
+
+        def bits_of(b: Sequence[int]) -> Tuple[int, ...]:
+            return _stage_bits(graph, order, b, traffic, link_dtype, link_cycles)
+
+        parked = bits_of(bounds)
+        if any(p > cap for p, cap in zip(parked, budget)):
+            # unconstrained optimum busts a chip — fall back
+            found = _budgeted_search(
+                cost_list,
+                n_stages,
+                positions,
+                cut_weight,
+                lambda b: all(p <= cap for p, cap in zip(bits_of(b), budget)),
+            )
+            if found is None:
+                raise ValueError(
+                    f"no {n_stages}-stage partition fits bram_budget "
+                    f"{budget} bits (min-bottleneck plan parks {parked})"
+                )
+            bounds = found
+            parked = bits_of(bounds)
+
     prefix = [0.0]
     for c in cost_list:
         prefix.append(prefix[-1] + c)
@@ -363,6 +612,8 @@ def partition_graph(
         balance=_balance(stage_cost),
         cut_edges=cut_edges,
         chain_legal=all(len(e) == 1 for e in cut_edges),
+        bram_budget=budget,
+        stage_buffer_bits=parked,
     )
 
 
@@ -394,6 +645,10 @@ class StreamBuffer:
     difference) and adds ``crossings * link_cycles`` of link slack.
     Plain pipeline edges (src feeding the next stage's first node) need
     only the link slack plus one in-flight pixel.
+
+    ``link_dtype`` is the wire format of the crossing activations —
+    ``width_bits`` is ``LINK_DTYPE_BITS[link_dtype] * lanes``, so an
+    int8 crossing is 4x narrower than fp32 at identical depth.
     """
 
     src: str
@@ -406,6 +661,7 @@ class StreamBuffer:
     bound_pixels: int
     width_bits: int
     depth_words: int
+    link_dtype: str = "int8"
 
     @property
     def bits(self) -> int:
@@ -421,6 +677,7 @@ def stream_buffers(
     stage_plan: GraphStagePlan,
     *,
     link_cycles: int = DEFAULT_LINK_CYCLES,
+    link_dtype: LinkDtype = "int8",
 ) -> List[StreamBuffer]:
     """Size the stream buffer on every edge of ``plan.graph`` whose
     endpoints land in different stages of ``stage_plan``.
@@ -455,10 +712,13 @@ def stream_buffers(
             except KeyError:
                 base = 1
                 skew = Fraction(0)
-            bound = base + math.ceil(crossings * link_cycles * q)
-            lanes = max(1, math.ceil(q * d))
-            width = 8 * lanes
-            depth = max(2, math.ceil(Fraction(bound * d, lanes)))
+            dtype = resolve_link_dtype(link_dtype, src)
+            bound, _, width, depth = edge_buffer_geometry(
+                EdgeTraffic(src=src, dst=dst, q=q, d=d, base_pixels=base),
+                crossings,
+                bits_per_feature=LINK_DTYPE_BITS[dtype],
+                link_cycles=link_cycles,
+            )
             bufs.append(
                 StreamBuffer(
                     src=src,
@@ -471,6 +731,18 @@ def stream_buffers(
                     bound_pixels=bound,
                     width_bits=width,
                     depth_words=depth,
+                    link_dtype=dtype,
                 )
             )
     return bufs
+
+
+def stage_stream_bits(
+    bufs: Sequence[StreamBuffer], n_stages: int
+) -> Tuple[int, ...]:
+    """Cut-crossing buffer bits parked on each stage (buffers live on
+    the consuming chip, matching ``estimate_stages`` attribution)."""
+    bits = [0] * n_stages
+    for sb in bufs:
+        bits[sb.dst_stage] += sb.bits
+    return tuple(bits)

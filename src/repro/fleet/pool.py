@@ -41,7 +41,17 @@ from repro.core.graph import GraphPlan, plan_graph
 from repro.core.hw_specs import XCVU37P
 from repro.core.replicate import best_replication
 from repro.core.resource_model import ResourceEstimate, estimate_stages
-from repro.core.stage_partition import allocate_chips
+from repro.core.stage_partition import LinkDtype, allocate_chips
+
+
+def pool_bram_budget(chips: Sequence["Chip"]) -> int:
+    """Stream-buffer bit budget the partitioner plans against: the
+    largest chip's BRAM, in bits.  Deliberately optimistic — the packer
+    may later place a stage on a smaller chip, but ``_candidate``'s
+    fits() check still gates that exactly; the budget's job is to stop
+    the DP from ever *proposing* a cut no chip in the pool could host.
+    """
+    return max(c.bram36 for c in chips) * XCVU37P.bram36_kbits * 1024
 
 
 class PoolError(ValueError):
@@ -148,30 +158,52 @@ def enumerate_candidates(
     try_replicate: bool = True,
     r_options: Tuple[int, ...] = (2,),
     scheme: str = "ours",
+    link_dtype: LinkDtype = "int8",
 ) -> List[TenantCandidate]:
     """All feasible (S, replication) plans for one tenant on this pool.
 
     Each S contributes the plain plan and, when ``try_replicate`` and
     the replication DSE actually improves the bottleneck, the
-    replicated one — both planned at the tenant's target rate.
+    replicated one — both planned at the tenant's target rate, with
+    cut-crossing streams at ``link_dtype`` width and the partition DP
+    constrained to the pool's BRAM budget (``pool_bram_budget``): an S
+    whose every cut would overflow the largest chip is skipped here,
+    before ``_candidate`` even prices it.
     """
     cfg = tenant.config()
     graph = cfg.graph()
+    budget = pool_bram_budget(chips)
     out: List[TenantCandidate] = []
     for s in s_options:
-        plans = [
-            plan_graph(graph, tenant.input_rate, n_stages=s, scheme=scheme)
-        ]
-        if try_replicate:
-            rep = best_replication(
-                graph,
-                tenant.input_rate,
-                n_stages=s,
-                r_options=r_options,
-                scheme=scheme,
+        plans = []
+        try:
+            plans.append(
+                plan_graph(
+                    graph,
+                    tenant.input_rate,
+                    n_stages=s,
+                    scheme=scheme,
+                    link_dtype=link_dtype,
+                    bram_budget=budget,
+                )
             )
-            if rep.replications:  # baseline competes: empty = no win
-                plans.append(rep)
+        except ValueError:
+            pass  # no S-stage cut fits the pool's BRAM — drop this S
+        if try_replicate:
+            try:
+                rep = best_replication(
+                    graph,
+                    tenant.input_rate,
+                    n_stages=s,
+                    r_options=r_options,
+                    scheme=scheme,
+                    link_dtype=link_dtype,
+                    bram_budget=budget,
+                )
+                if rep.replications:  # baseline competes: empty = no win
+                    plans.append(rep)
+            except ValueError:
+                pass
         for plan in plans:
             cand = _candidate(tenant, cfg, plan, chips)
             if cand is not None:
@@ -264,10 +296,14 @@ def plan_pool(
     try_replicate: bool = True,
     r_options: Tuple[int, ...] = (2,),
     scheme: str = "ours",
+    link_dtype: LinkDtype = "int8",
     max_combos: int = 4096,
 ) -> PoolPlan:
     """Pack every tenant onto the pool (see module docstring).
 
+    Candidates are planned with ``link_dtype`` crossings under the
+    pool's BRAM budget (see ``enumerate_candidates``), so every packed
+    plan is BRAM-feasible by construction, not just by the fits() check.
     Raises ``PoolError`` when a tenant has no feasible candidate or no
     candidate combination packs onto the chips.
     """
@@ -290,6 +326,7 @@ def plan_pool(
             try_replicate=try_replicate,
             r_options=r_options,
             scheme=scheme,
+            link_dtype=link_dtype,
         )
         if not cands:
             raise PoolError(

@@ -25,9 +25,21 @@ from jax.experimental.pallas import tpu as pltpu
 _NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-                  scale: float, causal: bool, block_q: int, block_k: int,
-                  grid_k: int):
+def _flash_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_ref,
+    l_ref,
+    acc_ref,
+    *,
+    scale: float,
+    causal: bool,
+    block_q: int,
+    block_k: int,
+    grid_k: int,
+):
     kb = pl.program_id(2)
 
     @pl.when(kb == 0)
@@ -39,16 +51,17 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     q = q_ref[0]                               # [bq, d]
     k = k_ref[0]                               # [bk, d]
     v = v_ref[0]                               # [bk, d]
-    s = jax.lax.dot_general(
-        q, k, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32) * scale   # [bq, bk]
+    qk = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    s = qk * scale  # [bq, bk]
 
     if causal:
         qi = pl.program_id(1)
-        q_pos = qi * block_q + jax.lax.broadcasted_iota(
-            jnp.int32, (block_q, block_k), 0)
-        k_pos = kb * block_k + jax.lax.broadcasted_iota(
-            jnp.int32, (block_q, block_k), 1)
+        iota_q = jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        iota_k = jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        q_pos = qi * block_q + iota_q
+        k_pos = kb * block_k + iota_k
         s = jnp.where(q_pos >= k_pos, s, _NEG_INF)
 
     m_prev = m_ref[...]                        # [bq, 1]
@@ -57,9 +70,13 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     p = jnp.exp(s - m_new)                     # [bq, bk]
     alpha = jnp.exp(m_prev - m_new)            # [bq, 1]
     l_new = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
-    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
-        p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+    pv = jax.lax.dot_general(
+        p,
+        v.astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    acc_ref[...] = acc_ref[...] * alpha + pv
     m_ref[...] = m_new
     l_ref[...] = l_new
 
@@ -88,8 +105,14 @@ def flash_attention_p(
     scale = scale if scale is not None else 1.0 / math.sqrt(d)
     grid = (bh, sq // block_q, sk // block_k)
     return pl.pallas_call(
-        functools.partial(_flash_kernel, scale=scale, causal=causal,
-                          block_q=block_q, block_k=block_k, grid_k=grid[2]),
+        functools.partial(
+            _flash_kernel,
+            scale=scale,
+            causal=causal,
+            block_q=block_q,
+            block_k=block_k,
+            grid_k=grid[2],
+        ),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),

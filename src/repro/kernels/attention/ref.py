@@ -9,8 +9,10 @@ def attention_ref(q, k, v, *, causal: bool = True, scale=None) -> jax.Array:
     """q: [BH, Sq, d], k/v: [BH, Sk, d]."""
     d = q.shape[-1]
     scale = scale if scale is not None else 1.0 / math.sqrt(d)
-    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
-                   k.astype(jnp.float32)) * scale
+    qk = jnp.einsum(
+        "bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    )
+    s = qk * scale
     if causal:
         sq, sk = s.shape[-2:]
         qi = jnp.arange(sq)[:, None]

@@ -29,7 +29,8 @@ def _dw_kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int, stride: int):
     for dy in range(kh):
         for dx in range(kw):
             win = jax.lax.slice(
-                x, (dy, dx, 0),
+                x,
+                (dy, dx, 0),
                 (dy + (ho - 1) * stride + 1, dx + (wo - 1) * stride + 1, bc),
                 (stride, stride, 1),
             )

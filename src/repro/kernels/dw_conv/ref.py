@@ -3,14 +3,17 @@ import jax
 import jax.numpy as jnp
 
 
-def dw_conv_ref(x: jax.Array, w: jax.Array, stride: int = 1,
-                padding: str = "SAME", out_dtype=None) -> jax.Array:
+def dw_conv_ref(
+    x: jax.Array, w: jax.Array, stride: int = 1, padding: str = "SAME", out_dtype=None
+) -> jax.Array:
     """x: [N, H, W, C], w: [kh, kw, C] (channel multiplier 1)."""
     out_dtype = out_dtype or x.dtype
     c = x.shape[-1]
     out = jax.lax.conv_general_dilated(
-        x.astype(jnp.float32), w[..., None, :].astype(jnp.float32),
-        window_strides=(stride, stride), padding=padding,
+        x.astype(jnp.float32),
+        w[..., None, :].astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=padding,
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
         feature_group_count=c,
     )

@@ -61,7 +61,8 @@ def fcu_matmul_p(
     d_in2, d_out = w.shape
     assert d_in == d_in2, (x.shape, w.shape)
     assert m % bm == 0 and d_in % bk == 0 and d_out % bn == 0, (
-        f"tiling ({bm},{bk},{bn}) must divide ({m},{d_in},{d_out})")
+        f"tiling ({bm},{bk},{bn}) must divide ({m},{d_in},{d_out})"
+    )
     grid = (m // bm, d_out // bn, d_in // bk)
     out_dtype = out_dtype or x.dtype
     return pl.pallas_call(

@@ -35,8 +35,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kpu_kernel(x_ref, w_ref, o_ref, acc_ref, *,
-                kh: int, kw: int, stride: int, grid_ci: int):
+def _kpu_kernel(
+    x_ref, w_ref, o_ref, acc_ref, *, kh: int, kw: int, stride: int, grid_ci: int
+):
     """Grid: (n, co_blocks, ci_blocks).  Blocks:
     x: [1, Hp, Wp, bci] (padded spatial), w: [kh, kw, bci, bco],
     o/acc: [1, Ho, Wo, bco]."""
@@ -55,13 +56,17 @@ def _kpu_kernel(x_ref, w_ref, o_ref, acc_ref, *,
             win = jax.lax.slice(
                 x,
                 (dy, dx, 0),
-                (dy + (ho - 1) * stride + 1, dx + (wo - 1) * stride + 1,
-                 x.shape[-1]),
+                (
+                    dy + (ho - 1) * stride + 1,
+                    dx + (wo - 1) * stride + 1,
+                    x.shape[-1],
+                ),
                 (stride, stride, 1),
-            )                          # [Ho, Wo, bci]
-            w_tap = w_ref[dy, dx]      # [bci, bco]
+            )  # [Ho, Wo, bci]
+            w_tap = w_ref[dy, dx]  # [bci, bco]
             acc_ref[0] += jax.lax.dot_general(
-                win, w_tap,
+                win,
+                w_tap,
                 dimension_numbers=(((2,), (0,)), ((), ())),
                 preferred_element_type=jnp.float32,
             )
@@ -86,13 +91,15 @@ def kpu_conv_p(
     kh, kw, d_in2, d_out = w.shape
     assert d_in == d_in2
     assert d_in % bci == 0 and d_out % bco == 0, (
-        f"(bci={bci}, bco={bco}) must divide ({d_in}, {d_out})")
+        f"(bci={bci}, bco={bco}) must divide ({d_in}, {d_out})"
+    )
     ho, wo = out_hw
     grid = (n, d_out // bco, d_in // bci)
     out_dtype = out_dtype or x_padded.dtype
     return pl.pallas_call(
-        functools.partial(_kpu_kernel, kh=kh, kw=kw, stride=stride,
-                          grid_ci=grid[2]),
+        functools.partial(
+            _kpu_kernel, kh=kh, kw=kw, stride=stride, grid_ci=grid[2]
+        ),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, hp, wp, bci), lambda nn, co, ci: (nn, 0, 0, ci)),

@@ -3,13 +3,16 @@ import jax
 import jax.numpy as jnp
 
 
-def kpu_conv_ref(x: jax.Array, w: jax.Array, stride: int = 1,
-                 padding: str = "SAME", out_dtype=None) -> jax.Array:
+def kpu_conv_ref(
+    x: jax.Array, w: jax.Array, stride: int = 1, padding: str = "SAME", out_dtype=None
+) -> jax.Array:
     """x: [N, H, W, C_in] (UNpadded), w: [kh, kw, C_in, C_out]."""
     out_dtype = out_dtype or x.dtype
     out = jax.lax.conv_general_dilated(
-        x.astype(jnp.float32), w.astype(jnp.float32),
-        window_strides=(stride, stride), padding=padding,
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=padding,
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
     )
     return out.astype(out_dtype)

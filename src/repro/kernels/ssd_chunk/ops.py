@@ -11,8 +11,17 @@ from .ssd_chunk import ssd_chunk_p
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "head_block", "interpret"))
-def ssd_chunk(x, dt, a, b, c, *, chunk: int = 128,
-              head_block: int | None = None, interpret: bool = True):
+def ssd_chunk(
+    x,
+    dt,
+    a,
+    b,
+    c,
+    *,
+    chunk: int = 128,
+    head_block: int | None = None,
+    interpret: bool = True,
+):
     """x: [B,L,H,P]; dt: [B,L,H]; a: [H]; b,c: [B,L,G,N] (G | H)."""
     h = x.shape[2]
     g = b.shape[2]
@@ -21,5 +30,6 @@ def ssd_chunk(x, dt, a, b, c, *, chunk: int = 128,
         c = jnp.repeat(c, h // g, axis=2)
     if head_block is None:
         head_block = max(d for d in divisors(h) if d <= 8)
-    return ssd_chunk_p(x, dt, a, b, c, chunk=chunk, head_block=head_block,
-                       interpret=interpret)
+    return ssd_chunk_p(
+        x, dt, a, b, c, chunk=chunk, head_block=head_block, interpret=interpret
+    )

@@ -25,8 +25,19 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, o_ref, s_ref, state_ref,
-                *, n_chunks: int, q: int):
+def _ssd_kernel(
+    x_ref,
+    dt_ref,
+    a_ref,
+    b_ref,
+    c_ref,
+    o_ref,
+    s_ref,
+    state_ref,
+    *,
+    n_chunks: int,
+    q: int,
+):
     ci = pl.program_id(2)
 
     @pl.when(ci == 0)
@@ -56,8 +67,9 @@ def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, o_ref, s_ref, state_ref,
 
     # state update: s = exp(sum ad) * s_prev + sum_j exp(acum_Q - acum_j) b_j xd_j
     decay_end = jnp.exp(a_cum[-1, :][None, :] - a_cum)    # [Q, hb]
-    s_new = (jnp.exp(a_cum[-1, :])[:, None, None] * s_prev
-             + jnp.einsum("jhn,jh,jhp->hpn", b, decay_end, xd))
+    s_new = jnp.exp(a_cum[-1, :])[:, None, None] * s_prev + jnp.einsum(
+        "jhn,jh,jhp->hpn", b, decay_end, xd
+    )
     state_ref[...] = s_new
 
     o_ref[0, 0] = y.astype(o_ref.dtype)
@@ -92,21 +104,25 @@ def ssd_chunk_p(
         functools.partial(_ssd_kernel, n_chunks=nc, q=chunk),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1, chunk, head_block, p),
-                         lambda bb, hb, ci: (bb, ci, 0, hb, 0)),
-            pl.BlockSpec((1, 1, chunk, head_block),
-                         lambda bb, hb, ci: (bb, ci, 0, hb)),
+            pl.BlockSpec(
+                (1, 1, chunk, head_block, p), lambda bb, hb, ci: (bb, ci, 0, hb, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, chunk, head_block), lambda bb, hb, ci: (bb, ci, 0, hb)
+            ),
             pl.BlockSpec((head_block,), lambda bb, hb, ci: (hb,)),
-            pl.BlockSpec((1, 1, chunk, head_block, n),
-                         lambda bb, hb, ci: (bb, ci, 0, hb, 0)),
-            pl.BlockSpec((1, 1, chunk, head_block, n),
-                         lambda bb, hb, ci: (bb, ci, 0, hb, 0)),
+            pl.BlockSpec(
+                (1, 1, chunk, head_block, n), lambda bb, hb, ci: (bb, ci, 0, hb, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, chunk, head_block, n), lambda bb, hb, ci: (bb, ci, 0, hb, 0)
+            ),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1, chunk, head_block, p),
-                         lambda bb, hb, ci: (bb, ci, 0, hb, 0)),
-            pl.BlockSpec((1, head_block, p, n),
-                         lambda bb, hb, ci: (bb, hb, 0, 0)),
+            pl.BlockSpec(
+                (1, 1, chunk, head_block, p), lambda bb, hb, ci: (bb, ci, 0, hb, 0)
+            ),
+            pl.BlockSpec((1, head_block, p, n), lambda bb, hb, ci: (bb, hb, 0, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((bsz, nc, chunk, h, p), x.dtype),

@@ -52,6 +52,8 @@ import numpy as np
 from repro.core.dse import NON_ARITH_KINDS
 from repro.core.graph import JOIN_KINDS, ImplPlan, LayerGraph
 from repro.core.rate import LayerSpec
+from repro.core.stage_partition import resolve_link_dtype
+from repro.nn.quant import dequantize_link, fake_quant_link, quantize_link
 
 Impl = Callable[..., jax.Array]
 Params = Dict[str, Dict[str, jax.Array]]
@@ -448,6 +450,77 @@ def _build_table(
     return table
 
 
+# --------------------------------------------------------------------------
+# Quantized cut crossings (the link_dtype wire format, executor side)
+# --------------------------------------------------------------------------
+
+
+def cut_edge_dtypes(
+    graph: LayerGraph, partition, link_dtype="int8"
+) -> Dict[tuple, str]:
+    """{(src, dst): dtype} for every cut-crossing edge of ``partition``
+    narrower than fp32 — the executor-side mirror of the ``link_dtype``
+    the DSE priced ``StreamBuffer`` widths with.  fp32 edges are
+    omitted: a full-width wire needs no transform, so the fp32 path is
+    bit-identical to no link quantization at all.
+    """
+    if hasattr(partition, "stage_plan"):  # a GraphPlan from n_stages=
+        partition = partition.stage_plan
+    stage_of = partition.stage_index()
+    out: Dict[tuple, str] = {}
+    for v in graph.topo_order():
+        for u in graph.preds(v):
+            if stage_of[u] != stage_of[v]:
+                dt = resolve_link_dtype(link_dtype, u)
+                if dt != "fp32":
+                    out[(u, v)] = dt
+    return out
+
+
+def _resolve_link_quant(link_quant, graph, partition) -> Dict[tuple, str]:
+    """Normalize the executor's ``link_quant`` option to an edge map.
+
+    ``None`` -> off; ``True`` -> the partition plan's own ``link_dtype``
+    (a ``GraphPlan``; plain partitions default to int8); a dtype str or
+    per-producer {src: dtype} -> resolved over the cut edges; an
+    edge-keyed {(src, dst): dtype} dict passes through.
+    """
+    if link_quant is None:
+        return {}
+    if link_quant is True:
+        link_quant = getattr(partition, "link_dtype", "int8")
+    if isinstance(link_quant, dict) and any(
+        isinstance(k, tuple) for k in link_quant
+    ):
+        return {k: v for k, v in link_quant.items() if v != "fp32"}
+    return cut_edge_dtypes(graph, partition, link_quant)
+
+
+def _link_encode(x: jax.Array, dtype: str):
+    """Producer side of a quantized crossing: the wire payload exported
+    into the boundary dict (an int8 {"__q__", "__s__"} pytree, or a bare
+    bf16 cast — both jit-safe boundary values)."""
+    if dtype == "int8":
+        return quantize_link(x)
+    if dtype == "bf16":
+        return x.astype(jnp.bfloat16)
+    return x
+
+
+def _link_decode(v, dtype: str, out_dtype=jnp.float32):
+    """Consumer side — and, on the monolithic reference path where the
+    operand was never encoded, the in-graph quantize-dequantize round
+    trip.  Staged decode and monolithic fake-quant produce identical
+    values, which is what makes staged int8 bit-exact vs monolithic."""
+    if isinstance(v, dict):
+        return dequantize_link(v, dtype=out_dtype)
+    if dtype == "int8":
+        return fake_quant_link(v, dtype=out_dtype)
+    if dtype == "bf16":
+        return v.astype(jnp.bfloat16).astype(out_dtype)
+    return v
+
+
 def _run_nodes(
     graph: LayerGraph,
     names,
@@ -460,6 +533,7 @@ def _run_nodes(
     executed: Optional[Dict[str, Dict[str, int]]] = None,
     overridden=frozenset(),
     check: bool = True,
+    link_quant: Optional[Mapping[tuple, str]] = None,
 ) -> None:
     """Execute ``names`` in order, reading/writing ``values``.
 
@@ -470,6 +544,13 @@ def _run_nodes(
     a user-supplied impl: they are exempt from the tile assertion
     unless the override recorded into ``executed`` itself (the shared
     dict), in which case the record is still validated.
+
+    ``link_quant`` maps cut-crossing edges (src, dst) to a wire dtype:
+    an operand read over such an edge is decoded (staged path — the
+    boundary carries the encoded payload) or fake-quantized in place
+    (monolithic path — same values, so the two stay comparable).  The
+    transform applies *before* split-lane slicing: the producer encodes
+    its full stream once, with one scale.
     """
     executed = executed if executed is not None else {}
     for name in names:
@@ -485,6 +566,10 @@ def _run_nodes(
             operands = []
             for pr in preds:
                 v = values[pr]
+                if link_quant:
+                    dt = link_quant.get((pr, name))
+                    if dt is not None:
+                        v = _link_decode(v, dt)
                 if graph.spec(pr).kind == "split":
                     # Replication lane: consume the dealt subsequence of
                     # the split stream (this lane's slot in deal order).
@@ -523,6 +608,7 @@ def apply_graph(
     executed: Optional[Dict[str, Dict[str, int]]] = None,
     dtype=jnp.float32,
     check: bool = True,
+    link_quant: Optional[Mapping[tuple, str]] = None,
 ) -> jax.Array:
     """Forward pass of a LayerGraph network.  ``x``: [N, H, W, d_in].
 
@@ -552,6 +638,12 @@ def apply_graph(
     ``executed``, when given, receives each node's executed tile (an
     out-param for introspection; a fresh private dict is used
     otherwise).
+
+    ``link_quant`` — an edge-keyed {(src, dst): dtype} map (e.g. from
+    ``cut_edge_dtypes``) — fake-quantizes each mapped operand read in
+    place, making this the monolithic *reference* for staged execution
+    with quantized cut crossings: identical transform at identical
+    edges, so the staged int8 path can be compared bit-exactly.
     """
     out_name = _check_single_stream(graph)
     if executed is None:
@@ -576,6 +668,7 @@ def apply_graph(
         executed=executed,
         overridden=frozenset(overrides or ()),
         check=check,
+        link_quant=link_quant,
     )
     return values[out_name]
 
@@ -620,6 +713,7 @@ def stage_functions(
     executed: Optional[Dict[str, Dict[str, int]]] = None,
     check: bool = True,
     jit: bool = True,
+    link_quant=None,
 ) -> "StagePipeline":
     """Compile the per-stage callables of a stage partition — the unit
     the streaming serving engine (``serving/cnn_stream.py``) pipelines.
@@ -634,6 +728,16 @@ def stage_functions(
     its outgoing cut (plus the graph output on the final stage).  Each
     fn is wrapped in ``jax.jit`` exactly once (``jit=True``), so a
     serving loop hits the jit cache every tick.
+
+    ``link_quant`` turns on quantized cut crossings (opt-in — off, the
+    boundary carries full-precision tensors exactly as before): the
+    producing stage encodes each crossing activation to its wire dtype
+    (``_link_encode``) and every consuming stage decodes it inside its
+    own jitted fn, so what moves between stages is what the plan's
+    ``StreamBuffer`` widths were priced for.  Accepts ``True`` (use the
+    plan's ``link_dtype``), a dtype str, a per-producer {src: dtype}, or
+    an edge-keyed {(src, dst): dtype} map.  The graph output is never
+    encoded (it crosses no cut).
     """
     out_name = _check_single_stream(graph)
     if hasattr(partition, "stage_plan"):  # a GraphPlan from n_stages=
@@ -641,7 +745,17 @@ def stage_functions(
             raise GraphExecutionError(
                 "GraphPlan has no stage partition — plan with n_stages=S"
             )
+        qmap = _resolve_link_quant(link_quant, graph, partition)
         partition = partition.stage_plan
+    else:
+        qmap = _resolve_link_quant(link_quant, graph, partition)
+    wire: Dict[str, str] = {}  # producer -> wire dtype (one stream each)
+    for (u, _v), dt in qmap.items():
+        if wire.setdefault(u, dt) != dt:
+            raise GraphExecutionError(
+                f"conflicting link dtypes for producer {u!r}: one physical "
+                f"stream leaves it, so all its cut edges must share a width"
+            )
     if list(partition.order) != graph.topo_order():
         raise GraphExecutionError(
             "partition does not cover this graph (node order differs)"
@@ -681,8 +795,12 @@ def stage_functions(
                 executed=executed,
                 overridden=overridden,
                 check=check,
+                link_quant=qmap,
             )
-            return {e: values[e] for e in out}
+            return {
+                e: _link_encode(values[e], wire[e]) if e in wire else values[e]
+                for e in out
+            }
 
         stage_fns.append(jax.jit(run_stage) if jit else run_stage)
 
@@ -692,6 +810,7 @@ def stage_functions(
         imports=imports,
         exports=exports,
         out_name=out_name,
+        link_quant_edges=qmap,
     )
 
 
@@ -704,12 +823,25 @@ class StagePipeline:
     advance; ``staged_forward``'s returned callable is just the s-loop.
     """
 
-    def __init__(self, *, partition, stage_fns, imports, exports, out_name):
+    def __init__(
+        self,
+        *,
+        partition,
+        stage_fns,
+        imports,
+        exports,
+        out_name,
+        link_quant_edges=None,
+    ):
         self.partition = partition
         self.stage_fns = stage_fns
         self.imports = imports
         self.exports = exports
         self.out_name = out_name
+        # {(src, dst): wire dtype} of the quantized crossings ({} = off);
+        # boundary values for encoded producers are wire payloads, not
+        # activations — decode with ``decode_boundary`` before comparing.
+        self.link_quant_edges = dict(link_quant_edges or {})
 
     @property
     def n_stages(self) -> int:
@@ -733,6 +865,18 @@ class StagePipeline:
         boundary.update(out)
         return boundary
 
+    def decode_boundary(
+        self, boundary: Dict[str, jax.Array]
+    ) -> Dict[str, jax.Array]:
+        """The boundary dict with every wire payload decoded back into
+        an activation (int8 dequantized, bf16 upcast) — what to compare
+        against the monolithic reference when link quantization is on."""
+        wire = {u: dt for (u, _v), dt in self.link_quant_edges.items()}
+        return {
+            name: _link_decode(v, wire[name]) if name in wire else v
+            for name, v in boundary.items()
+        }
+
 
 def staged_forward(
     graph: LayerGraph,
@@ -746,6 +890,7 @@ def staged_forward(
     dtype=jnp.float32,
     check: bool = True,
     jit: bool = True,
+    link_quant=None,
 ) -> Callable[[Params, jax.Array], Dict[str, jax.Array]]:
     """Compile the staged pipeline ONCE; returns ``fn(params, x)``.
 
@@ -757,6 +902,10 @@ def staged_forward(
     by node name.  ``apply_staged`` is the one-shot convenience wrapper;
     ``stage_functions`` exposes the stages individually for the
     streaming serving engine's software pipeline.
+
+    With ``link_quant`` (see ``stage_functions``) the wire payloads are
+    decoded before the boundary is returned — the caller sees
+    activations as quantized crossings actually delivered them.
     """
     pipeline = stage_functions(
         graph,
@@ -768,6 +917,7 @@ def staged_forward(
         executed=executed,
         check=check,
         jit=jit,
+        link_quant=link_quant,
     )
 
     def forward(params: Params, x: jax.Array) -> Dict[str, jax.Array]:
@@ -775,7 +925,7 @@ def staged_forward(
         boundary: Dict[str, jax.Array] = {}
         for s in range(pipeline.n_stages):
             pipeline.run_stage(s, params, boundary, x if s == 0 else None)
-        return boundary
+        return pipeline.decode_boundary(boundary)
 
     return forward
 
@@ -795,6 +945,7 @@ def apply_staged(
     check: bool = True,
     jit: bool = True,
     check_monolithic: bool = False,
+    link_quant=None,
 ) -> jax.Array:
     """Multi-chip forward pass: execute ``graph`` stage by stage.
 
@@ -818,7 +969,9 @@ def apply_staged(
     ``check_monolithic=True`` additionally runs the monolithic
     ``apply_graph`` on the same inputs and asserts every cut-crossing
     tensor (and the final output) matches it — the staged execution
-    provably computes the same network.
+    provably computes the same network.  With ``link_quant`` the
+    monolithic reference applies the identical fake-quant on the mapped
+    edges, so the contract holds for quantized crossings too.
     """
     out_name = _check_single_stream(graph)
     if executed is None:
@@ -834,6 +987,7 @@ def apply_staged(
         dtype=dtype,
         check=check,
         jit=jit,
+        link_quant=link_quant,
     )
     boundary = forward(params, x)
 
@@ -846,6 +1000,7 @@ def apply_staged(
             interpret=interpret,
             executed=executed,
         )
+        qmap = _resolve_link_quant(link_quant, graph, partition)
         mono: Dict[str, jax.Array] = {}
         _run_nodes(
             graph,
@@ -858,10 +1013,18 @@ def apply_staged(
             executed=executed,
             overridden=frozenset(overrides or ()),
             check=False,
+            link_quant=qmap,
         )
+        wire = {u: dt for (u, _v), dt in qmap.items()}
         for name, val in boundary.items():
+            ref = mono[name]
+            if name in wire:
+                # staged boundary values for encoded producers are the
+                # *delivered* (decoded) activations — round-trip the
+                # reference through the same wire format before comparing
+                ref = _link_decode(ref, wire[name])
             if not np.allclose(
-                np.asarray(val), np.asarray(mono[name]), rtol=1e-5, atol=1e-5
+                np.asarray(val), np.asarray(ref), rtol=1e-5, atol=1e-5
             ):
                 raise GraphExecutionError(
                     f"staged output for {name!r} diverges from the "

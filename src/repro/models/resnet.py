@@ -177,6 +177,7 @@ def apply_staged(
     check: bool = True,
     jit: bool = True,
     check_monolithic: bool = False,
+    link_quant=None,
 ) -> jax.Array:
     """Multi-chip forward pass over a stage partition (a
     ``GraphStagePlan`` or a ``GraphPlan`` planned with ``n_stages=``):
@@ -195,6 +196,7 @@ def apply_staged(
         check=check,
         jit=jit,
         check_monolithic=check_monolithic,
+        link_quant=link_quant,
     )
 
 

@@ -1,11 +1,22 @@
-"""Weight-only int8 quantization for serving (paper's 8-bit datapath,
-parameter edition).
+"""Int8 quantization for serving (paper's 8-bit datapath).
 
-Matrix leaves (ndim >= 2) become {"__q__": int8, "__s__": f32 per-output-
-channel scales}; vectors/norms stay full precision.  Dequantization
-happens per layer-slice inside the serve scan — so the HBM weight stream
-per decode step halves (the dominant term for 300B+-param decode; grok-1
-reads 39.5 GB/device/step in bf16).
+Two independent facilities share the {"__q__", "__s__"} wire format:
+
+* **Weight trees** (``quantize_tree`` / ``dequantize_tree``): matrix
+  leaves (ndim >= 2) become {"__q__": int8, "__s__": f32 per-output-
+  channel scales}; vectors/norms stay full precision.  Dequantization
+  happens per layer-slice inside the serve scan — so the HBM weight
+  stream per decode step halves (the dominant term for 300B+-param
+  decode; grok-1 reads 39.5 GB/device/step in bf16).
+
+* **Activation links** (``quantize_link`` / ``dequantize_link``): one
+  activation tensor crossing a pipeline-stage cut becomes
+  {"__q__": int8, "__s__": f32 scalar} — per-tensor dynamic symmetric,
+  matching the ``core.stage_partition.StreamBuffer`` int8 wire format,
+  so the staged executor moves 8 bits per feature between chips.
+  ``fake_quant_link`` is the QDQ round-trip in one call: the monolithic
+  reference applies it in-graph so the staged int8 path can be compared
+  bit-exactly.
 
 The sharding rules treat "__q__" like the parent tensor and zero the
 quantized-row axis for "__s__" (distributed/sharding.py normalizes the
@@ -28,8 +39,7 @@ def _should_quantize(leaf) -> bool:
     ndim >= 3 with a reasonable channel dim -> stacked matmul weights;
     ndim == 2 with both dims large -> embedding tables.  Stacked norms /
     biases ([L, d]) and tiny router heads stay full precision."""
-    if not hasattr(leaf, "ndim") or not jnp.issubdtype(leaf.dtype,
-                                                       jnp.floating):
+    if not hasattr(leaf, "ndim") or not jnp.issubdtype(leaf.dtype, jnp.floating):
         return False
     if leaf.ndim >= 3:
         return leaf.shape[-1] >= 16 and leaf.shape[-2] >= 16
@@ -63,6 +73,34 @@ def dequantize_tree(tree: Any, dtype=jnp.bfloat16) -> Any:
         return x
 
     return jax.tree.map(dq, tree, is_leaf=_is_qleaf)
+
+
+def quantize_link(x, *, bits: int = 8):
+    """Per-tensor dynamic symmetric int8 for one cut-crossing activation:
+    s = amax/127, q = clip(round(x/s)).  Returns the {"__q__", "__s__"}
+    payload dict (a jax pytree — safe to carry through jitted stage
+    boundaries).  ``bits`` != 8 is rejected: the stream-buffer widths
+    this mirrors are priced per LINK_DTYPE_BITS, and only the int8 entry
+    has an executor datapath (bf16 would be a cast, not a QDQ)."""
+    if bits != 8:
+        raise ValueError(f"quantize_link only implements int8, got {bits} bits")
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf))
+    s = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / s), -127, 127).astype(jnp.int8)
+    return {"__q__": q, "__s__": s.astype(jnp.float32)}
+
+
+def dequantize_link(payload, dtype=jnp.float32):
+    """Inverse of ``quantize_link`` on the consuming stage."""
+    return (payload["__q__"].astype(jnp.float32) * payload["__s__"]).astype(dtype)
+
+
+def fake_quant_link(x, dtype=jnp.float32):
+    """Quantize-dequantize round trip in one call — what the monolithic
+    reference applies at each would-be cut so staged int8 execution can
+    be compared bit-exactly against it."""
+    return dequantize_link(quantize_link(x), dtype=dtype)
 
 
 def is_quantized(tree: Any) -> bool:

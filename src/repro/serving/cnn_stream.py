@@ -98,6 +98,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.replicate import lane_multiplicity, replicate_params
+from repro.core.stage_partition import LINK_DTYPE_BITS
 from repro.models import cnn
 from repro.serving.config import ServeConfig
 from repro.serving.overload import ShedPolicy, SwitchPolicy
@@ -213,10 +214,13 @@ def queue_caps_batches(plan, microbatch: int) -> List[int]:
     queue gets 2 batches (per-stage in-flight double buffering); the
     analytic cut buffers — ``core.stage_partition.stream_buffers``
     sized the crossing FIFOs in pixels — convert to extra whole frames
-    at the cut's per-frame bit width.  Because the pixel bounds (join
-    skew + link slack) are a small fraction of a frame, the extra term
-    is almost always 0: the analytically sized queue IS the double
-    buffer.  Queue 0 (admission) is the plain double buffer.
+    at the cut's per-frame bit width.  Both sides of that division use
+    the buffer's own ``link_dtype``: a narrower wire shrinks the FIFO
+    and the frame it holds by the same factor, so quantizing a crossing
+    changes the *bits* moved, not the frames parked.  Because the pixel
+    bounds (join skew + link slack) are a small fraction of a frame,
+    the extra term is almost always 0: the analytically sized queue IS
+    the double buffer.  Queue 0 (admission) is the plain double buffer.
     """
     sp = plan.stage_plan
     if sp is None:
@@ -232,7 +236,10 @@ def queue_caps_batches(plan, microbatch: int) -> List[int]:
             if sb.src_stage < s <= sb.dst_stage:
                 buf_bits += sb.bits
                 src_spec = plan.graph.spec(sb.src)
-                frame_bits += 8 * sb.d * src_spec.out_hw[0] * src_spec.out_hw[1]
+                bpf = LINK_DTYPE_BITS[getattr(sb, "link_dtype", "int8")]
+                frame_bits += (
+                    bpf * sb.d * src_spec.out_hw[0] * src_spec.out_hw[1]
+                )
         if frame_bits:
             caps[s] += (buf_bits // frame_bits) // microbatch
     return caps
@@ -542,15 +549,19 @@ class _Rung:
         self.pipeline = None
         self._keep_after: List[set] = []
         if config.execute:
+            # partition=plan (not plan.stage_plan): stage_functions
+            # unwraps the GraphPlan itself, and link_quant=True needs it
+            # to read the plan's link_dtype.
             self.pipeline = cnn.stage_functions(
                 graph,
-                partition=plan.stage_plan,
+                partition=plan,
                 impls=config.impls,
                 plan=kernel_plan,
                 overrides=config.overrides,
                 interpret=config.interpret,
                 check=config.check,
                 jit=config.jit,
+                link_quant=config.link_quant,
             )
             # after stage s, a batch only needs the tensors later stages
             # import (plus the graph output once the last stage ran)
@@ -1306,6 +1317,10 @@ def serve_frames(
     ``execute=False`` (timing model only).  A ``replicate=`` kwarg
     flows through to ``plan_graph`` — the engine then runs the
     rewritten graph with the hot node's params aliased onto the lanes.
+    ``link_dtype=`` / ``bram_budget=`` flow through the same way (the
+    memory-efficient streams: narrow-wire buffer pricing and
+    buffer-aware cuts); pair them with ``config.link_quant`` to make
+    the executed boundaries match the priced wire format.
     """
     from repro.core.graph import plan_graph
 

@@ -53,6 +53,10 @@ class ServeConfig:
     check: bool = True
     jit: bool = True
     execute: bool = True
+    # Quantized cut crossings (models.cnn.stage_functions link_quant):
+    # None = full-precision boundaries (the default), True = the plan's
+    # link_dtype, or a dtype str / per-producer / per-edge mapping.
+    link_quant: Any = None
     # -- arrival source ----------------------------------------------------
     arrival: Any = Fraction(1)
     max_ticks: int = 1_000_000

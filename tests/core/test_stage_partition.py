@@ -1,17 +1,22 @@
 """DAG stage partitioning: cut legality, DP optimality vs brute force,
-cut-crossing stream buffers, and chip-allocation edge cases."""
+budgeted (BRAM-constrained) DP vs brute force, cut-crossing stream
+buffers, and chip-allocation edge cases."""
 import itertools
+import math
 from fractions import Fraction as F
 
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.core import (
     LayerSpec, estimate_graph, estimate_stages, plan_graph, plan_partitioned,
 )
 from repro.core.graph import LayerGraph
 from repro.core.stage_partition import (
-    allocate_chips, legal_cut_positions, partition_graph, plan_node_costs,
-    service_rates,
+    DEFAULT_LINK_CYCLES, LINK_DTYPE_BITS, _stage_bits, allocate_chips,
+    default_edge_traffic, legal_cut_positions, partition_graph,
+    plan_node_costs, resolve_link_dtype, service_rates,
 )
 
 
@@ -220,6 +225,236 @@ def test_cut_rates_and_plan_partitioned():
     from repro.core import GraphError
     with pytest.raises(GraphError):
         plan_graph(g, F(2)).stage_mults()
+
+
+# ---------------------------------------------------------------------------
+# link_dtype: quantized cut crossings
+# ---------------------------------------------------------------------------
+
+def test_resolve_link_dtype_and_unknown_rejected():
+    assert resolve_link_dtype("fp32", "any") == "fp32"
+    assert resolve_link_dtype({"stem": "bf16"}, "stem") == "bf16"
+    assert resolve_link_dtype({"stem": "bf16"}, "other") == "int8"
+    with pytest.raises(ValueError, match="unknown link_dtype"):
+        resolve_link_dtype("fp64", "x")
+    g = _diamond()
+    costs = {n: 1.0 for n in g.topo_order()}
+    with pytest.raises(ValueError, match="unknown link_dtype"):
+        partition_graph(g, costs, 2, link_dtype="fp64")
+
+
+def test_fp32_crossings_cost_exactly_4x_int8():
+    """Same depth, 4x the width: the wire format scales buffer bits and
+    the DP's cut weight together, so boundaries stay put while every
+    stream buffer prices 4x wider."""
+    g = _two_diamonds()
+    narrow = plan_graph(g, F(2), n_stages=3)                  # int8 default
+    wide = plan_graph(g, F(2), n_stages=3, link_dtype="fp32")
+    assert wide.stage_plan.boundaries == narrow.stage_plan.boundaries
+    assert wide.total_stream_bits == 4 * narrow.total_stream_bits
+    assert all(sb.link_dtype == "int8" for sb in narrow.stream_bufs)
+    assert all(sb.link_dtype == "fp32" for sb in wide.stream_bufs)
+    for w, n in zip(wide.stream_bufs, narrow.stream_bufs):
+        assert (w.src, w.dst) == (n.src, n.dst)
+        assert w.width_bits == 4 * n.width_bits
+        assert w.depth_words == n.depth_words
+
+
+def test_per_producer_link_dtype_mapping():
+    """Mapping keyed by src widens just that producer's stream."""
+    g = _diamond(depth=4)
+    plan = plan_graph(g, F(2), n_stages=2, link_dtype={"stem": "fp32"})
+    bufs = {(sb.src, sb.dst): sb for sb in plan.stream_bufs}
+    assert bufs[("stem", "join")].link_dtype == "fp32"
+    others = [sb for k, sb in bufs.items() if k != ("stem", "join")]
+    assert others and all(sb.link_dtype == "int8" for sb in others)
+
+
+# ---------------------------------------------------------------------------
+# budgeted DP: bram_budget as a constraint, not a tie-break
+# ---------------------------------------------------------------------------
+
+def _cut_weight_bits(g, bounds, link_dtype="int8"):
+    """Total cut width in bits across ``bounds`` — independent recompute
+    of the DP's lexicographic second objective."""
+    order = g.topo_order()
+    idx = {nm: i for i, nm in enumerate(order)}
+    total = 0
+    for pos in bounds[1:-1]:
+        for v in order:
+            for u in g.preds(v):
+                if idx[u] < pos <= idx[v]:
+                    bpf = LINK_DTYPE_BITS[resolve_link_dtype(link_dtype, u)]
+                    total += bpf * g.spec(u).d_out
+    return total
+
+
+def _brute_budgeted(g, costs, n_stages, budget):
+    """Exhaustive reference: lexicographic min (bottleneck, cut-weight,
+    boundary tuple) over every feasible boundary combination, or None
+    when no combination fits ``budget``."""
+    order = g.topo_order()
+    prefix = [0.0]
+    for nm in order:
+        prefix.append(prefix[-1] + float(costs[nm]))
+    traffic = default_edge_traffic(g)
+    best = None
+    for combo in itertools.combinations(legal_cut_positions(g), n_stages - 1):
+        bounds = (0, *combo, len(order))
+        bits = _stage_bits(g, order, bounds, traffic, "int8",
+                           DEFAULT_LINK_CYCLES)
+        if any(b > cap for b, cap in zip(bits, budget)):
+            continue
+        bot = max(prefix[bounds[s + 1]] - prefix[bounds[s]]
+                  for s in range(n_stages))
+        key = (bot, _cut_weight_bits(g, bounds), bounds)
+        if best is None or key < best:
+            best = key
+    return best
+
+
+def _rand_graph(costs, dims, shortcut):
+    """Either a width-varying chain (every position a distinct cut
+    weight) or a cost-varying diamond (the shortcut spans every interior
+    position, exercising multi-crossing buffer bits)."""
+    n = len(costs)
+    g = LayerGraph()
+    if shortcut:
+        d = dims[0]
+        stem = g.add(_pw("n0", d, d))
+        prev = stem
+        for i in range(1, n - 1):
+            prev = g.add(_pw(f"n{i}", d, d), [prev])
+        g.add(LayerSpec(name=f"n{n - 1}", kind="add", d_in=d, d_out=d,
+                        in_hw=(8, 8), out_hw=(8, 8)), [prev, stem])
+    else:
+        prev = g.add(_pw("n0", dims[0], dims[0]))
+        for i in range(1, n):
+            prev = g.add(_pw(f"n{i}", dims[i - 1], dims[i]), [prev])
+    return g
+
+
+@settings(max_examples=40)
+@given(
+    costs=st.lists(st.integers(min_value=1, max_value=12),
+                   min_size=5, max_size=9),
+    dims=st.lists(st.sampled_from([4, 8, 16, 32]), min_size=9, max_size=9),
+    n_stages=st.sampled_from([2, 3]),
+    shortcut=st.booleans(),
+    frac=st.sampled_from([F(1, 8), F(1, 3), F(1, 2), F(3, 4), F(1), F(2)]),
+)
+def test_budgeted_dp_matches_brute_force(costs, dims, n_stages, shortcut,
+                                         frac):
+    """The budgeted DP is exactly the brute-force optimum: feasible under
+    the per-stage budget, bottleneck-optimal among feasible cuts,
+    min-cut-weight among those, and (on the fallback path) the
+    lexicographically smallest boundary tuple among exact ties; when the
+    brute force finds nothing feasible, partition_graph raises."""
+    g = _rand_graph(costs, dims, shortcut)
+    order = g.topo_order()
+    cmap = {nm: float(c) for nm, c in zip(order, costs)}
+    free = partition_graph(g, cmap, n_stages)
+    traffic = default_edge_traffic(g)
+    parked_free = _stage_bits(g, order, free.boundaries, traffic, "int8",
+                              DEFAULT_LINK_CYCLES)
+    # scale the budget off the unconstrained plan's worst stage so the
+    # sweep hits all three regimes: fast path / fallback / infeasible
+    cap = max(1, math.ceil(frac * max(parked_free)))
+    budget = (cap,) * n_stages
+    best = _brute_budgeted(g, cmap, n_stages, budget)
+    if best is None:
+        with pytest.raises(ValueError, match="fits bram_budget"):
+            partition_graph(g, cmap, n_stages, bram_budget=cap)
+        return
+    sp = partition_graph(g, cmap, n_stages, bram_budget=cap)
+    # feasibility, with an independently recomputed bit accounting
+    assert sp.bram_budget == budget
+    assert sp.stage_buffer_bits == _stage_bits(
+        g, order, sp.boundaries, traffic, "int8", DEFAULT_LINK_CYCLES)
+    assert all(b <= cap for b in sp.stage_buffer_bits)
+    assert sp.stage_buffer_bits[0] == 0          # no incoming cut on stage 0
+    # optimality: (bottleneck, cut weight) match the exhaustive reference
+    assert sp.bottleneck == pytest.approx(best[0])
+    assert _cut_weight_bits(g, sp.boundaries) == best[1]
+    if any(b > cap for b, _ in zip(parked_free, budget)):
+        # fallback path: exact tie-break pinned (lex-smallest boundaries)
+        assert sp.boundaries == best[2]
+
+
+def test_generous_budget_returns_unconstrained_plan():
+    g = _two_diamonds()
+    plan = plan_graph(g, F(2))
+    costs = plan_node_costs(plan)
+    free = partition_graph(g, costs, 3)
+    budgeted = partition_graph(g, costs, 3, bram_budget=10 ** 12)
+    assert budgeted.boundaries == free.boundaries
+    assert budgeted.bram_budget == (10 ** 12,) * 3
+    assert budgeted.stage_buffer_bits is not None
+    # an unbudgeted partition records neither field
+    assert free.bram_budget is None and free.stage_buffer_bits is None
+
+
+def test_tight_budget_moves_boundary_and_costs_bottleneck():
+    """A chain whose balance-optimal cut falls on its widest stream: the
+    budget prices that FIFO out, so the DP trades bottleneck for memory
+    and falls back to a narrow cut that fits."""
+    dims = [4, 4, 32, 4, 4, 4]
+    costs_seq = [3.0, 1.0, 1.0, 1.0, 1.0, 3.0]
+    g = LayerGraph()
+    prev = g.add(_pw("n0", dims[0], dims[0]))
+    for i in range(1, 6):
+        prev = g.add(_pw(f"n{i}", dims[i - 1], dims[i]), [prev])
+    cmap = {f"n{i}": c for i, c in enumerate(costs_seq)}
+    free = partition_graph(g, cmap, 2)
+    assert free.boundaries == (0, 3, 6)          # bottleneck 5|5, wide cut
+    parked = _stage_bits(g, g.topo_order(), free.boundaries,
+                         default_edge_traffic(g), "int8", DEFAULT_LINK_CYCLES)
+    cap = max(parked) - 1
+    sp = partition_graph(g, cmap, 2, bram_budget=cap)
+    assert sp.boundaries == (0, 2, 6)            # narrow cut, lex-smallest tie
+    assert all(b <= cap for b in sp.stage_buffer_bits)
+    assert sp.bottleneck > free.bottleneck       # memory bought with balance
+
+
+def test_budget_arity_and_infeasible_raise():
+    g = _two_diamonds()
+    plan = plan_graph(g, F(2))
+    costs = plan_node_costs(plan)
+    with pytest.raises(ValueError, match="bram budgets"):
+        partition_graph(g, costs, 3, bram_budget=[10 ** 9, 10 ** 9])
+    # one bit per stage can never hold a cut-crossing FIFO
+    with pytest.raises(ValueError, match="fits bram_budget"):
+        partition_graph(g, costs, 3, bram_budget=1)
+
+
+def test_per_stage_budgets_steer_the_cut():
+    """Heterogeneous budgets (mirroring allocate_chips): starving the
+    stage that holds the unconstrained plan's biggest buffer moves the
+    cut, while the same total as a generous uniform budget does not."""
+    g = _two_diamonds()
+    plan = plan_graph(g, F(2))
+    costs = plan_node_costs(plan)
+    free = partition_graph(g, costs, 3)
+    order = g.topo_order()
+    parked = _stage_bits(g, order, free.boundaries, default_edge_traffic(g),
+                         "int8", DEFAULT_LINK_CYCLES)
+    big = max(range(3), key=lambda s: parked[s])
+    budgets = [10 ** 9] * 3
+    budgets[big] = parked[big] - 1
+    sp = partition_graph(g, costs, 3, bram_budget=budgets)
+    assert sp.boundaries != free.boundaries
+    assert all(b <= cap for b, cap in zip(sp.stage_buffer_bits, budgets))
+
+
+def test_plan_graph_budget_threads_through():
+    """plan_graph(bram_budget=) uses the solved timing's edge traffic and
+    its stream-buffer accounting agrees with the DP's, stage for stage."""
+    g = _two_diamonds()
+    plan = plan_graph(g, F(2), n_stages=3, bram_budget=10 ** 12)
+    sp = plan.stage_plan
+    assert sp.bram_budget == (10 ** 12,) * 3
+    assert list(sp.stage_buffer_bits) == plan.stage_stream_bits()
+    assert sum(sp.stage_buffer_bits) == plan.total_stream_bits
 
 
 # ---------------------------------------------------------------------------

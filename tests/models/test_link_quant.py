@@ -1,0 +1,149 @@
+"""Quantized cut crossings: the bit-exactness matrix.
+
+Every registry family x S in {2, 3} x link_dtype in {fp32, int8}:
+staged execution with quantized stage boundaries vs the monolithic
+executor with the same fake-quant applied at the would-be cuts —
+int8 bit-exact (eager, identical op sequence), fp32 a no-op (the
+edge maps omit full-precision edges entirely) — plus the served-output
+check through ``CNNApi.serve`` and the ``bram_budget`` respect pin.
+"""
+from fractions import Fraction as F
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import cnn
+from repro.models.registry import get_cnn_api
+from repro.serving import ServeConfig
+
+FAMILIES = ("mobilenet_v1", "mobilenet_v2", "resnet18", "resnet34")
+
+_CACHE = {}
+
+
+def _family(family):
+    """Per-family setup, cached across the matrix (init once)."""
+    if family not in _CACHE:
+        api = get_cnn_api(family)
+        cfg = api.make_config(input_hw=(32, 32), num_classes=10)
+        g = api.graph(cfg)
+        params = api.init(cfg, jax.random.key(0))
+        x = np.asarray(jax.random.normal(jax.random.key(1), (1, 32, 32, 3)))
+        _CACHE[family] = (api, cfg, g, params, x)
+    return _CACHE[family]
+
+
+# ---------------------------------------------------------------------------
+# staged vs monolithic: int8 bit-exact, fp32 a no-op
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", FAMILIES)
+@pytest.mark.parametrize("n_stages", [2, 3])
+def test_int8_links_bit_exact_vs_monolithic(family, n_stages):
+    """Staged execution with int8 stage boundaries (eager, so the op
+    sequence matches) is bit-exact vs the monolithic executor applying
+    the same QDQ at every would-be cut edge — and genuinely different
+    from the unquantized output (the wire narrowing is real)."""
+    api, cfg, g, params, x = _family(family)
+    gp = api.partition(cfg, F(3), n_stages)
+    staged = api.apply_staged(params, x, cfg, partition=gp, jit=False,
+                              link_quant="int8", check_monolithic=True)
+    emap = cnn.cut_edge_dtypes(g, gp, "int8")
+    assert emap                                  # the cuts exist
+    mono = cnn.apply_graph(params, x, g, link_quant=emap)
+    assert np.array_equal(np.asarray(staged), np.asarray(mono))
+    plain = cnn.apply_graph(params, x, g)
+    assert not np.array_equal(np.asarray(staged), np.asarray(plain))
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+@pytest.mark.parametrize("n_stages", [2, 3])
+def test_fp32_links_are_a_no_op(family, n_stages):
+    """Full-precision crossings never enter the edge maps, so staged
+    link_quant='fp32' is bit-identical to no link_quant at all and
+    holds the pre-existing allclose contract vs the monolithic pass."""
+    api, cfg, g, params, x = _family(family)
+    gp = api.partition(cfg, F(3), n_stages)
+    assert cnn.cut_edge_dtypes(g, gp, "fp32") == {}
+    staged_q = api.apply_staged(params, x, cfg, partition=gp, jit=False,
+                                link_quant="fp32")
+    staged = api.apply_staged(params, x, cfg, partition=gp, jit=False)
+    assert np.array_equal(np.asarray(staged_q), np.asarray(staged))
+    mono = cnn.apply_graph(params, x, g)
+    assert np.allclose(np.asarray(staged_q), np.asarray(mono),
+                       rtol=1e-5, atol=1e-5)
+
+
+def test_link_quant_true_reads_the_plans_dtype():
+    """link_quant=True resolves to the GraphPlan's own link_dtype — the
+    executed wire format matches the priced one by construction."""
+    api, cfg, g, params, x = _family("resnet18")
+    gp = api.partition(cfg, F(3), 3)             # link_dtype defaults int8
+    a = api.apply_staged(params, x, cfg, partition=gp, jit=False,
+                         link_quant=True)
+    b = api.apply_staged(params, x, cfg, partition=gp, jit=False,
+                         link_quant="int8")
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_bf16_links_pass_the_monolithic_cross_check():
+    """bf16 crossings are a bare cast (no QDQ payload): the staged
+    internal cross-check validates them against a cast-matched
+    monolithic reference."""
+    api, cfg, g, params, x = _family("mobilenet_v1")
+    gp = api.partition(cfg, F(3), 2)
+    y = api.apply_staged(params, x, cfg, partition=gp, jit=False,
+                         link_quant="bf16", check_monolithic=True)
+    mono = cnn.apply_graph(params, x, g)
+    assert np.allclose(np.asarray(y), np.asarray(mono), rtol=2e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# served outputs through CNNApi.serve
+# ---------------------------------------------------------------------------
+
+def test_served_outputs_match_staged_int8_links():
+    """Frames served with ServeConfig(link_quant='int8') — quantized
+    payloads riding the inter-stage queues — equal apply_staged with the
+    same wire format on the same micro-batches."""
+    family = "mobilenet_v1"
+    api, cfg, g, params, x = _family(family)
+    frames = np.asarray(jax.random.normal(jax.random.key(2), (4, 32, 32, 3)))
+    out, rep = api.serve(
+        params, frames, cfg, input_rate=F(3), n_stages=2,
+        config=ServeConfig(microbatch=2, link_quant="int8"),
+        link_dtype="int8",
+    )
+    assert rep.completed == 4
+    gp = api.partition(cfg, F(3), 2, link_dtype="int8")
+    ref = np.concatenate([
+        np.asarray(api.apply_staged(params, frames[i:i + 2], cfg,
+                                    partition=gp, link_quant="int8"))
+        for i in range(0, 4, 2)
+    ])
+    assert np.array_equal(np.asarray(out), ref)
+
+
+# ---------------------------------------------------------------------------
+# bram_budget respected end to end
+# ---------------------------------------------------------------------------
+
+def test_partition_under_budget_never_exceeds_it():
+    """Acceptance pin: no stage of a bram_budget-constrained plan parks
+    more cut-crossing buffer bits than its chip's budget — and the
+    budget genuinely binds (the unconstrained optimum busts it)."""
+    api, cfg, g, params, x = _family("resnet18")
+    free = api.partition(cfg, F(3), 3)
+    parked_free = free.stage_stream_bits()
+    cap = max(parked_free) - 1
+    gp = api.partition(cfg, F(3), 3, bram_budget=cap)
+    assert gp.stage_plan.bram_budget == (cap,) * 3
+    parked = gp.stage_stream_bits()
+    assert all(b <= cap for b in parked)
+    assert tuple(parked) == gp.stage_plan.stage_buffer_bits
+    assert gp.stage_plan.boundaries != free.stage_plan.boundaries
+    # the constrained plan still executes correctly
+    y = api.apply_staged(params, x, cfg, partition=gp, jit=False,
+                         link_quant=True, check_monolithic=True)
+    assert np.asarray(y).shape == (1, 10)
