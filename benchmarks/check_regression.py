@@ -38,7 +38,7 @@ from typing import Dict, List, Sequence
 # Timing rows: legitimately machine/run-dependent, never pinned.  The CI
 # gate, --update, and the baseline self-consistency test all use this
 # list — extend it here when a benchmark grows a new timing row.
-DEFAULT_EXCLUDES = ("/tiling_modes", "/batch_sweep", "/e2e_lax")
+DEFAULT_EXCLUDES = ("/tiling_modes", "/batch_sweep", "/e2e_lax", "/wallclock")
 
 
 def _excluded(name: str, exclude: Sequence[str]) -> bool:

@@ -26,6 +26,10 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
                           crossing bits (the 4x wire narrowing) and
                           bram_budget-constrained fallback cuts for all
                           four families at S in {2,3}
+  table10_wallclock     — wall-clock multi-device staged execution:
+                          GPipe placement ordinals + utilization bounds
+                          (pinned) and measured fps / overlap speedup
+                          (excluded from gating — timing, not structure)
   rate_aware_serving    — the technique applied to LM serving (DESIGN §3)
   kernel_bench          — Pallas kernels vs oracles + tile stats
   roofline              — 40-cell roofline summary (needs dry-run JSONs)
@@ -57,6 +61,7 @@ MODULES = [
     ("table7", "benchmarks.table7_fleet"),
     ("table8", "benchmarks.table8_overload"),
     ("table9", "benchmarks.table9_memory"),
+    ("table10", "benchmarks.table10_wallclock"),
     ("rate_aware", "benchmarks.rate_aware_serving"),
     ("kernels", "benchmarks.kernel_bench"),
     ("roofline", "benchmarks.roofline"),

@@ -10,6 +10,10 @@ paper's continuous-flow math at stage level:
   2. The GPipe bubble follows util = M/(M+S-1): measured step counts
      match the formula.
   3. Numerics: pipeline output == sequential stack output exactly.
+  4. Wall-clock: a real staged CNN on the same 4 virtual devices via
+     `distributed/device_pipeline.py` — stage s of the cut plan lands on
+     device s, micro-batches overlap under the GPipe schedule, and the
+     report shows measured frames/sec against the sequential baseline.
 
 Run: PYTHONPATH=src python examples/pipeline_demo.py
 (re-executes itself with XLA_FLAGS for 4 virtual devices)
@@ -68,6 +72,32 @@ def _main() -> None:
     print(f"  16 chips over stages {plan.stage_cost} -> {chips} "
           f"(min service rate {min(rates):.3f}/s vs even-split "
           f"{min(service_rates(list(plan.stage_cost), [4] * 4, 1.0)):.3f}/s)")
+    print("\n=== 4. wall-clock staged CNN on the 4-device mesh ===")
+    from fractions import Fraction as F
+
+    import numpy as np
+
+    from repro.distributed.device_pipeline import DevicePipeline
+    from repro.models.registry import get_cnn_api
+
+    api = get_cnn_api("resnet18")
+    cfg = api.make_config(input_hw=(32, 32), num_classes=10)
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    cut = api.partition(cfg, F(3), 4)
+    frames = np.asarray(
+        jax.random.normal(jax.random.key(2), (8, 32, 32, 3)), np.float32)
+    dp = DevicePipeline.build(
+        api.graph(cfg), params, partition=cut, placement=True)
+    print(f"  resnet18 cut into {dp.n_stages} stages on devices "
+          f"{dp.placement_ordinals()}")
+    rep = dp.measure(frames, microbatch=1, warmup=1, repeats=2)
+    print(f"  overlap {rep.fps_overlap:8.1f} frames/s   "
+          f"sequential {rep.fps_sequential:8.1f} frames/s   "
+          f"speedup {rep.speedup:.2f}x (bound {rep.utilization_bound:.2f})")
+    print("  stage busy fractions: "
+          + ", ".join(f"s{i}={f:.2f}" for i, f in
+                      enumerate(rep.stage_busy_frac)))
+
     print("\nContinuous flow at rack scale: every stage's service rate "
           "covers the stream — the paper's j/h >= r, in chips.")
 

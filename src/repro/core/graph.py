@@ -71,6 +71,7 @@ from .stage_partition import (
     StreamBuffer,
     partition_graph,
     plan_node_costs,
+    round_robin_placement,
     stage_stream_bits,
     stream_buffers,
 )
@@ -750,6 +751,7 @@ def plan_graph(
     link_dtype: LinkDtype = "int8",
     bram_budget=None,
     replicate=None,
+    n_devices: Optional[int] = None,
 ) -> GraphPlan:
     """Select an implementation for every node of a DAG.
 
@@ -781,6 +783,14 @@ def plan_graph(
     the ``stream_buffers`` it prices afterwards can never exceed the
     budget (asserted).  Raises ``ValueError`` when no partition fits.
 
+    ``n_devices`` (with ``n_stages``) records a round-robin device
+    placement on the stage plan — stage ``s`` on device ordinal
+    ``s % n_devices`` — which the multi-device executor
+    (``models.cnn.stage_functions(placement=True)`` /
+    ``distributed.device_pipeline.DevicePipeline``) resolves against
+    the live device list at run time.  Placement is advisory metadata:
+    it changes where stages execute, never what they compute.
+
     ``replicate`` turns on Multi-CLP bottleneck replication *before*
     planning: a ``(node, R)`` pair, a ``{node: R}`` mapping, or a bare
     ``R`` (auto-select the max-mults bottleneck).  The named node is
@@ -791,6 +801,8 @@ def plan_graph(
     dominant layer.  The applied ``Replication`` records land in
     ``GraphPlan.replications``.
     """
+    if n_devices is not None and n_stages is None:
+        raise GraphError("n_devices= requires n_stages= (placement is per stage)")
     replications: tuple = ()
     if replicate is not None:
         from .replicate import apply_replications
@@ -835,6 +847,11 @@ def plan_graph(
             ),
             link_cycles=link_cycles,
         )
+        if n_devices is not None:
+            plan.stage_plan = dataclasses.replace(
+                plan.stage_plan,
+                placement=round_robin_placement(n_stages, n_devices),
+            )
         plan.stream_bufs = stream_buffers(
             plan, plan.stage_plan, link_cycles=link_cycles, link_dtype=link_dtype
         )

@@ -351,6 +351,13 @@ class GraphStagePlan:
     the per-stage bit budgets the DP honoured and ``stage_buffer_bits``
     the cut-crossing buffer bits actually parked on each stage (always
     elementwise <= the budget; stage 0 has no incoming cut, so 0).
+
+    ``placement`` (optional) records which device *ordinal* each stage
+    runs on — device indices, not device objects, so the core stays
+    JAX-free; the executor (``models.cnn.stage_functions(placement=...)``
+    and ``distributed.device_pipeline``) resolves ordinals against the
+    live device list, folding modulo the live count when the host has
+    fewer devices than the plan assumed.
     """
 
     order: Tuple[str, ...]
@@ -362,6 +369,7 @@ class GraphStagePlan:
     chain_legal: bool  # every cut crossed by exactly one edge
     bram_budget: Optional[Tuple[int, ...]] = None  # bits per stage, if budgeted
     stage_buffer_bits: Optional[Tuple[int, ...]] = None  # bits parked per stage
+    placement: Optional[Tuple[int, ...]] = None  # device ordinal per stage
 
     @property
     def n_stages(self) -> int:
@@ -377,6 +385,29 @@ class GraphStagePlan:
             for name in self.stage_nodes(s):
                 idx[name] = s
         return idx
+
+    def place(self, n_devices: int) -> "GraphStagePlan":
+        """A copy with stage ``s`` assigned to device ordinal
+        ``s % n_devices`` (the round-robin ``DevicePipeline`` layout)."""
+        return dataclasses.replace(
+            self, placement=round_robin_placement(self.n_stages, n_devices)
+        )
+
+
+def round_robin_placement(n_stages: int, n_devices: int) -> Tuple[int, ...]:
+    """Stage ``s`` -> device ordinal ``s % n_devices``.
+
+    The canonical multi-device layout: with at least as many devices as
+    stages every stage gets its own device (true pipeline overlap);
+    with fewer, stages fold round-robin and co-resident stages simply
+    serialize on their shared device — the schedule stays correct, only
+    the overlap shrinks.
+    """
+    if n_stages < 1:
+        raise ValueError(f"n_stages must be >= 1, got {n_stages}")
+    if n_devices < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+    return tuple(s % n_devices for s in range(n_stages))
 
 
 def _crossing_map(graph, order: Sequence[str]) -> Dict[int, List[Tuple[str, str]]]:

@@ -41,8 +41,9 @@ def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
     return q.astype(jnp.float32) * scale
 
 
-def compressed_psum(grad: jax.Array, residual: jax.Array, axis_name: str
-                    ) -> Tuple[jax.Array, jax.Array]:
+def compressed_psum(
+    grad: jax.Array, residual: jax.Array, axis_name: str
+) -> Tuple[jax.Array, jax.Array]:
     """int8 all-reduce with error feedback.
 
     Returns (mean_grad_f32, new_residual).  Called per-leaf inside a
@@ -57,7 +58,7 @@ def compressed_psum(grad: jax.Array, residual: jax.Array, axis_name: str
     amax = jax.lax.pmax(jnp.max(jnp.abs(x)), axis_name)
     scale = jnp.maximum(amax, 1e-12) / 127.0
     q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
-    new_residual = x - q.astype(jnp.float32) * scale   # error feedback
+    new_residual = x - q.astype(jnp.float32) * scale  # error feedback
     # int8 payloads sum without overflow in int32
     total = jax.lax.psum(q.astype(jnp.int32), axis_name)
     n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
@@ -65,8 +66,9 @@ def compressed_psum(grad: jax.Array, residual: jax.Array, axis_name: str
     return mean, new_residual
 
 
-def compressed_tree_psum(grads: Any, residuals: Any, axis_name: str
-                         ) -> Tuple[Any, Any]:
+def compressed_tree_psum(
+    grads: Any, residuals: Any, axis_name: str
+) -> Tuple[Any, Any]:
     flat_g, treedef = jax.tree.flatten(grads)
     flat_r = treedef.flatten_up_to(residuals)
     out_g, out_r = [], []
@@ -74,5 +76,4 @@ def compressed_tree_psum(grads: Any, residuals: Any, axis_name: str
         mg, nr = compressed_psum(g, r, axis_name)
         out_g.append(mg.astype(g.dtype))
         out_r.append(nr)
-    return (jax.tree.unflatten(treedef, out_g),
-            jax.tree.unflatten(treedef, out_r))
+    return jax.tree.unflatten(treedef, out_g), jax.tree.unflatten(treedef, out_r)

@@ -32,9 +32,9 @@ import numpy as np
 
 @dataclasses.dataclass
 class StragglerWatchdog:
-    threshold: float = 1.8          # x EWMA counts as straggling
-    patience: int = 3               # consecutive slow steps before action
-    alpha: float = 0.1              # EWMA factor
+    threshold: float = 1.8  # x EWMA counts as straggling
+    patience: int = 3  # consecutive slow steps before action
+    alpha: float = 0.1  # EWMA factor
     _ewma: Optional[float] = None
     _slow_streak: int = 0
     flagged_steps: List[int] = dataclasses.field(default_factory=list)
@@ -58,8 +58,7 @@ class StragglerWatchdog:
         self._slow_streak = 0
 
 
-def viable_mesh_shape(n_devices: int, model_degree: int
-                      ) -> Optional[tuple]:
+def viable_mesh_shape(n_devices: int, model_degree: int) -> Optional[tuple]:
     """Largest (data, model) grid on the survivors, keeping TP intact."""
     if n_devices < model_degree:
         return None
@@ -70,6 +69,7 @@ def viable_mesh_shape(n_devices: int, model_degree: int
 @dataclasses.dataclass
 class ElasticMesh:
     """Rebuild a mesh after failures and re-shard state onto it."""
+
     model_degree: int
 
     def remesh(self, devices: Sequence[jax.Device]):
@@ -77,7 +77,8 @@ class ElasticMesh:
         if shape is None:
             raise RuntimeError(
                 f"{len(devices)} survivors cannot host model degree "
-                f"{self.model_degree}")
+                f"{self.model_degree}"
+            )
         usable = shape[0] * shape[1]
         grid = np.asarray(devices[:usable]).reshape(shape)
         return jax.sharding.Mesh(grid, ("data", "model"))
@@ -85,8 +86,8 @@ class ElasticMesh:
     def reshard(self, tree, new_shardings):
         """Move (gathered) host arrays onto the new mesh's shardings."""
         return jax.tree.map(
-            lambda x, s: jax.device_put(np.asarray(x), s), tree,
-            new_shardings)
+            lambda x, s: jax.device_put(np.asarray(x), s), tree, new_shardings
+        )
 
 
 @dataclasses.dataclass
@@ -95,8 +96,7 @@ class Heartbeat:
     stale_after: float = 300.0
 
     def beat(self, step: int) -> None:
-        Path(self.path).write_text(json.dumps(
-            {"step": step, "t": time.time()}))
+        Path(self.path).write_text(json.dumps({"step": step, "t": time.time()}))
 
     def last(self) -> Optional[dict]:
         p = Path(self.path)

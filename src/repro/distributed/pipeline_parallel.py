@@ -9,10 +9,17 @@ microbatches and S stages, utilization is M/(M+S-1) — the pipeline-level
 twin of the paper's j/h >= r utilization bound, asserted in tests.
 
 This module implements the schedule for a homogeneous stack of layer
-blocks (each stage runs `block_fn` over its parameter slice).  It is used
-by examples/pipeline_demo.py and tested on a CPU mesh; the 40-cell
-dry-run uses DP x TP (mesh (data, model)) as its baseline distribution,
-with PP as the documented scale-out axis for >16k-chip fleets.
+blocks (each stage runs `block_fn` over its parameter slice).  It is
+used by examples/pipeline_demo.py (a 4-device CPU mesh via
+``--xla_force_host_platform_device_count``) and tested on a CPU mesh in
+tests/distributed/test_substrate.py (``pipeline_forward`` vs the
+unpipelined stack, plus the utilization math).  The same schedule and
+``microbatch_utilization`` bound drive the *wall-clock* executor for
+staged CNNs in ``distributed.device_pipeline`` — there the stages are
+heterogeneous subgraphs placed per device rather than a homogeneous
+block stack sharded over a mesh axis.  The 40-cell dry-run uses DP x TP
+(mesh (data, model)) as its baseline distribution, with PP as the
+documented scale-out axis for >16k-chip fleets.
 """
 from __future__ import annotations
 
@@ -33,8 +40,8 @@ def microbatch_utilization(n_micro: int, n_stages: int) -> float:
 
 def pipeline_forward(
     block_fn: Callable[[Any, jax.Array], jax.Array],
-    stage_params: Any,            # leaves [S, layers_per_stage, ...]
-    x_micro: jax.Array,           # [M, mb, ...] microbatched input
+    stage_params: Any,  # leaves [S, layers_per_stage, ...]
+    x_micro: jax.Array,  # [M, mb, ...] microbatched input
     mesh: Mesh,
     *,
     stage_axis: str = "stage",
@@ -61,19 +68,19 @@ def pipeline_forward(
         mb_shape = x_all.shape[1:]
         # carries are stage-varying (each stage holds different values):
         # annotate for shard_map's vma type system.
-        buf = compat.pcast(jnp.zeros(mb_shape, x_all.dtype),
-                           (stage_axis,), to="varying")
-        outs = compat.pcast(jnp.zeros((m,) + mb_shape, x_all.dtype),
-                            (stage_axis,), to="varying")
+        buf = compat.pcast(
+            jnp.zeros(mb_shape, x_all.dtype), (stage_axis,), to="varying"
+        )
+        outs = compat.pcast(
+            jnp.zeros((m,) + mb_shape, x_all.dtype), (stage_axis,), to="varying"
+        )
 
         def tick(carry, t):
             buf, outs = carry
             # stage 0 ingests microbatch t (if any remain)
             take = jnp.clip(t, 0, m - 1)
-            fresh = jax.lax.dynamic_index_in_dim(x_all, take, 0,
-                                                 keepdims=False)
-            buf = jnp.where(stage_id == 0,
-                            jnp.where(t < m, fresh, buf), buf)
+            fresh = jax.lax.dynamic_index_in_dim(x_all, take, 0, keepdims=False)
+            buf = jnp.where(stage_id == 0, jnp.where(t < m, fresh, buf), buf)
             # compute
             y = block_fn(params_s, buf)
             # last stage banks its result for microbatch t - (S-1)
@@ -83,8 +90,8 @@ def pipeline_forward(
             outs = jnp.where(bank, outs_upd, outs)
             # forward activations around the ring
             y_next = jax.lax.ppermute(
-                y, stage_axis,
-                [(i, (i + 1) % n_stages) for i in range(n_stages)])
+                y, stage_axis, [(i, (i + 1) % n_stages) for i in range(n_stages)]
+            )
             return (y_next, outs), None
 
         (_, outs), _ = jax.lax.scan(tick, (buf, outs), jnp.arange(ticks))
@@ -93,15 +100,17 @@ def pipeline_forward(
         return jax.lax.psum(outs, stage_axis)
 
     fn = compat.shard_map(
-        per_stage, mesh=mesh,
+        per_stage,
+        mesh=mesh,
         in_specs=(P(stage_axis), P()),
         out_specs=P(),
     )
     return fn(stage_params, x_micro)
 
 
-def plan_stages_for_layers(costs: Sequence[float], n_stages: int,
-                           scan_block: int = 1) -> StagePlan:
+def plan_stages_for_layers(
+    costs: Sequence[float], n_stages: int, scan_block: int = 1
+) -> StagePlan:
     """Rate-aware stage boundaries (divisibility-constrained DP)."""
     return partition_blocks(list(costs), n_stages, scan_block)
 
@@ -122,5 +131,6 @@ def stack_stage_params(params_layers: Any, plan: StagePlan) -> Any:
                 pad = jnp.zeros((s_max - size,) + leaf.shape[1:], leaf.dtype)
                 sl = jnp.concatenate([sl, pad], 0)
             pieces.append(sl)
-        return jnp.stack(pieces)     # [S, s_max, ...]
+        return jnp.stack(pieces)  # [S, s_max, ...]
+
     return jax.tree.map(per_leaf, params_layers)

@@ -55,6 +55,7 @@ def _guard(shape, mesh, spec_axes):
 # parameter rules (match on path suffix)
 # ---------------------------------------------------------------------------
 
+
 def param_spec(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
     # int8-serving trees wrap leaves as parent/{__q__,__s__}: __q__ shards
     # like the parent; __s__ (per-output-channel scales, row dim == 1)
@@ -62,16 +63,15 @@ def param_spec(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
     scale_leaf = path.endswith("__s__")
     path = path.replace("/__q__", "").replace("/__s__", "")
     if scale_leaf and len(shape) >= 2:
-        spec = param_spec(path, shape[:-2] + (max(shape[-2], 2), shape[-1]),
-                          mesh)
+        spec = param_spec(path, shape[:-2] + (max(shape[-2], 2), shape[-1]), mesh)
         parts = list(spec) + [None] * (len(shape) - len(spec))
         if len(parts) >= 2:
             parts[-2] = None
-        return P(*parts[:len(shape)])
+        return P(*parts[: len(shape)])
     if len(shape) < 2:
-        return P()          # vectors/scalars (incl. optimizer sentinels)
+        return P()  # vectors/scalars (incl. optimizer sentinels)
     da = data_axes(mesh)
-    lead = (None,) * (len(shape) - 2)       # scanned layer-stack dims
+    lead = (None,) * (len(shape) - 2)  # scanned layer-stack dims
 
     def rule2(row_axes, col_axes):
         if len(shape) < 2:
@@ -105,43 +105,48 @@ def param_spec(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
         return _guard(shape, mesh, lead + (None, "model")) if len(shape) >= 2 else P()
     if re.search(r"(\bw\b|/w)$", name) and len(shape) >= 2:
         return rule2(da, "model")
-    return P()                               # norms, biases, scalars: replicate
+    return P()  # norms, biases, scalars: replicate
 
 
 def _named(path_tuple) -> str:
     return "/".join(
         getattr(p, "name", getattr(p, "key", str(getattr(p, "idx", p))))
-        for p in path_tuple)
+        for p in path_tuple
+    )
 
 
 def tree_shardings(tree: Any, mesh: Mesh, spec_fn) -> Any:
     """Map (path, leaf) -> NamedSharding over any pytree."""
+
     def to_sharding(path, leaf):
         spec = spec_fn(_named(path), tuple(leaf.shape))
         return NamedSharding(mesh, spec)
+
     return jax.tree_util.tree_map_with_path(to_sharding, tree)
 
 
 def params_shardings(params: Any, mesh: Mesh) -> Any:
-    return tree_shardings(params, mesh,
-                          lambda p, s: param_spec(p, s, mesh))
+    return tree_shardings(params, mesh, lambda p, s: param_spec(p, s, mesh))
 
 
 def opt_state_shardings(opt_state: Any, params_like: Any, mesh: Mesh) -> Any:
     """Adam moments follow their parameter's spec; scalars replicate.
     Works because mu/nu mirror the param tree structure."""
+
     def spec_fn(path, shape):
         # strip the leading 'mu/' or 'nu/' or '.mu' naming from NamedTuple
         cleaned = re.sub(r"^\.?(mu|nu)[/.]?", "", path)
         if not shape:
             return P()
         return param_spec(cleaned, shape, mesh)
+
     return tree_shardings(opt_state, mesh, spec_fn)
 
 
 # ---------------------------------------------------------------------------
 # batch / serve-state rules
 # ---------------------------------------------------------------------------
+
 
 def batch_specs(batch: Any, mesh: Mesh) -> Any:
     """Leading dim = global batch -> ('pod','data'); rest unsharded."""
@@ -153,6 +158,7 @@ def batch_specs(batch: Any, mesh: Mesh) -> Any:
         if _fits(shape[0], mesh, da):
             return P(da)
         return P()
+
     return tree_shardings(batch, mesh, spec_fn)
 
 
@@ -170,8 +176,7 @@ def serve_state_specs(state: Any, mesh: Mesh) -> Any:
             if is_kv:
                 if _fits(b, mesh, da) and b > 1:
                     return _guard(shape, mesh, (None, da, "model", None, None))
-                return _guard(shape, mesh,
-                              (None, None, da + ("model",), None, None))
+                return _guard(shape, mesh, (None, None, da + ("model",), None, None))
             # ssm state [L, B, H, P, N]
             if _fits(b, mesh, da) and b > 1:
                 return _guard(shape, mesh, (None, da, "model", None, None))
@@ -185,6 +190,7 @@ def serve_state_specs(state: Any, mesh: Mesh) -> Any:
         if len(shape) >= 1:
             return _guard(shape, mesh, (da,) + (None,) * (len(shape) - 1))
         return P()
+
     return tree_shardings(state, mesh, spec_fn)
 
 
@@ -192,7 +198,9 @@ def abstract_with_shardings(tree: Any, shardings: Any) -> Any:
     """Attach shardings to ShapeDtypeStructs (dry-run input building)."""
     return jax.tree.map(
         lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s),
-        tree, shardings)
+        tree,
+        shardings,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -202,7 +210,7 @@ def abstract_with_shardings(tree: Any, shardings: Any) -> Any:
 _LOGICAL = {
     "batch": ("pod", "data"),
     "seq": ("model",),
-    "tp": ("model",),       # tensor-parallel feature dims (d_ff, heads)
+    "tp": ("model",),  # tensor-parallel feature dims (d_ff, heads)
     None: None,
 }
 

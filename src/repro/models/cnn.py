@@ -678,6 +678,63 @@ def apply_graph(
 # ==========================================================================
 
 
+def resolve_stage_devices(placement, n_stages: int, partition=None):
+    """Normalize a ``placement`` option to a per-stage device tuple.
+
+    Accepted forms (``None``/``False`` mean single-host execution —
+    no transfers, exactly the pre-placement behavior):
+
+    * ``True`` — the partition's recorded ``placement`` ordinals
+      (``GraphStagePlan.placement``, e.g. from ``plan_graph(...,
+      n_devices=)``) when present, else round-robin over every local
+      device: stage ``s`` on ``jax.devices()[s % n_devices]``.
+    * an ``int`` n — round-robin over the first ``min(n, available)``
+      local devices.
+    * a sequence of device *ordinals* — indices into ``jax.devices()``,
+      folded modulo the live device count (the fewer-devices-than-
+      stages / smaller-host fallback: placement degrades to co-resident
+      stages, never to an error).
+    * a sequence of ``jax.Device`` objects — used round-robin.
+    """
+    if placement is None or placement is False:
+        return None
+    devs = jax.devices()
+    if placement is True:
+        recorded = getattr(partition, "placement", None)
+        placement = recorded if recorded is not None else len(devs)
+    if isinstance(placement, int):
+        if placement < 1:
+            raise GraphExecutionError(
+                f"placement needs >= 1 device, got {placement}"
+            )
+        pool = devs[: min(placement, len(devs))]
+        return tuple(pool[s % len(pool)] for s in range(n_stages))
+    seq = list(placement)
+    if not seq:
+        raise GraphExecutionError("placement sequence is empty")
+    if all(isinstance(p, int) for p in seq):
+        return tuple(
+            devs[seq[s % len(seq)] % len(devs)] for s in range(n_stages)
+        )
+    return tuple(seq[s % len(seq)] for s in range(n_stages))
+
+
+def _pipeline_cache_get(cache, refs, knobs):
+    """Identity-keyed memo lookup for compiled ``StagePipeline``s.
+
+    ``refs`` are compared by object identity (graphs, partitions, impl
+    tables and plans are not hashable); the entry stores strong
+    references to them, and a hit additionally verifies every ref with
+    ``is`` — so id() reuse after garbage collection can only produce a
+    miss, never a stale pipeline.  Returns ``(key, hit_or_None)``.
+    """
+    key = (tuple(map(id, refs)), knobs)
+    ent = cache.get(key)
+    if ent is not None and all(a is b for a, b in zip(ent[0], refs)):
+        return key, ent[1]
+    return key, None
+
+
 def _stage_io(
     graph: LayerGraph, partition, out_name: str
 ) -> tuple:
@@ -714,6 +771,8 @@ def stage_functions(
     check: bool = True,
     jit: bool = True,
     link_quant=None,
+    placement=None,
+    cache: Optional[dict] = None,
 ) -> "StagePipeline":
     """Compile the per-stage callables of a stage partition — the unit
     the streaming serving engine (``serving/cnn_stream.py``) pipelines.
@@ -738,8 +797,36 @@ def stage_functions(
     plan's ``link_dtype``), a dtype str, a per-producer {src: dtype}, or
     an edge-keyed {(src, dst): dtype} map.  The graph output is never
     encoded (it crosses no cut).
+
+    ``placement`` turns on multi-device execution (see
+    ``resolve_stage_devices`` for the accepted forms): each stage's
+    params live resident on its device, every call moves the stage's
+    imported boundary tensors there (``jax.device_put``, donating the
+    source buffer when no later stage imports it), and JAX's committed-
+    input rule makes each stage's jitted fn compute on its own device —
+    so a driver that dispatches stages without blocking
+    (``distributed.device_pipeline.DevicePipeline``) genuinely overlaps
+    micro-batches on silicon.  With ``link_quant`` the transfers carry
+    the int8 wire payloads, so device-to-device traffic shrinks exactly
+    as the priced links predict.
+
+    ``cache`` (a plain dict the caller owns) memoizes the compiled
+    pipeline on the identity of (graph, partition, plan, impls,
+    overrides, link_quant, placement) plus the interpret/check/jit
+    knobs, so repeated one-shot calls (``apply_staged`` via
+    ``registry.CNNApi``) hit the per-stage jit cache instead of
+    retracing every stage per call.  Skipped when ``executed`` is given
+    — a memoized pipeline cannot re-fill a caller's out-param.
     """
     out_name = _check_single_stream(graph)
+    cache_key = cache_refs = None
+    if cache is not None and executed is None:
+        cache_refs = (graph, partition, plan, impls, overrides, link_quant, placement)
+        cache_key, hit = _pipeline_cache_get(
+            cache, cache_refs, (interpret, check, jit)
+        )
+        if hit is not None:
+            return hit
     if hasattr(partition, "stage_plan"):  # a GraphPlan from n_stages=
         if partition.stage_plan is None:
             raise GraphExecutionError(
@@ -804,14 +891,18 @@ def stage_functions(
 
         stage_fns.append(jax.jit(run_stage) if jit else run_stage)
 
-    return StagePipeline(
+    pipeline = StagePipeline(
         partition=partition,
         stage_fns=stage_fns,
         imports=imports,
         exports=exports,
         out_name=out_name,
         link_quant_edges=qmap,
+        devices=resolve_stage_devices(placement, partition.n_stages, partition),
     )
+    if cache_key is not None:
+        cache[cache_key] = (cache_refs, pipeline)
+    return pipeline
 
 
 class StagePipeline:
@@ -821,6 +912,15 @@ class StagePipeline:
     per-batch ``boundary`` dict (imported tensors in, exported tensors
     merged back in) — the serving engine calls this as micro-batches
     advance; ``staged_forward``'s returned callable is just the s-loop.
+
+    With ``devices`` (a per-stage device tuple from
+    ``resolve_stage_devices``) the pipeline is *placed*: stage params
+    are moved to their stage's device once and kept resident, and every
+    ``run_stage`` first moves the stage's imported boundary tensors
+    there (``prefetch``), donating each source buffer on its last
+    consuming stage.  Because the moved operands are committed, each
+    stage's jitted fn computes on its own device — drivers that
+    dispatch without blocking get genuine multi-device overlap.
     """
 
     def __init__(
@@ -832,6 +932,7 @@ class StagePipeline:
         exports,
         out_name,
         link_quant_edges=None,
+        devices=None,
     ):
         self.partition = partition
         self.stage_fns = stage_fns
@@ -842,6 +943,14 @@ class StagePipeline:
         # boundary values for encoded producers are wire payloads, not
         # activations — decode with ``decode_boundary`` before comparing.
         self.link_quant_edges = dict(link_quant_edges or {})
+        self.devices = tuple(devices) if devices else None
+        # imports only stage s consumes: their transfer may donate the
+        # source buffer (double-buffering frees the producer-side copy)
+        self._donate = []
+        for s in range(len(imports)):
+            later = set().union(*imports[s + 1 :]) if imports[s + 1 :] else set()
+            self._donate.append({u for u in imports[s] if u not in later})
+        self._placed_params: Dict[int, tuple] = {}
 
     @property
     def n_stages(self) -> int:
@@ -851,6 +960,52 @@ class StagePipeline:
         nodes = self.partition.stage_nodes(s)
         return {n: params[n] for n in nodes if n in params}
 
+    def stage_device(self, s: int):
+        """The device stage ``s`` is placed on (None when unplaced)."""
+        return None if self.devices is None else self.devices[s]
+
+    def keep_after(self) -> List[set]:
+        """``keep_after()[s]``: the boundary keys still live once stage
+        ``s`` has run — what later stages import, plus the graph output
+        after the final stage.  Pipelining drivers (the serving engine,
+        ``DevicePipeline``) prune everything else per batch."""
+        keep: set = set()
+        out: List[set] = [set() for _ in range(self.n_stages)]
+        for s in range(self.n_stages - 1, -1, -1):
+            if s == self.n_stages - 1:
+                keep = {self.out_name}
+            else:
+                keep = keep | set(self.imports[s + 1])
+            out[s] = set(keep)
+        return out
+
+    def _placed_stage_params(self, s: int, params: Params) -> Params:
+        ent = self._placed_params.get(s)
+        if ent is not None and ent[0] is params:
+            return ent[1]
+        sp = jax.device_put(self.stage_params(s, params), self.devices[s])
+        self._placed_params[s] = (params, sp)
+        return sp
+
+    def prefetch(self, s: int, boundary: Dict[str, jax.Array]) -> None:
+        """Move stage ``s``'s imports onto its device *now*.
+
+        The double-buffered half of a crossing: issued right after the
+        producing stage dispatches, the (async) copy overlaps other
+        stages' compute, and ``run_stage(s, ...)`` later finds its
+        operands already resident.  The moved value replaces the
+        boundary entry; when no later stage imports the key the
+        transfer donates the source buffer.  No-op when unplaced.
+        """
+        if self.devices is None:
+            return
+        dev = self.devices[s]
+        for u in self.imports[s]:
+            if u in boundary:
+                boundary[u] = jax.device_put(
+                    boundary[u], dev, donate=(u in self._donate[s])
+                )
+
     def run_stage(
         self,
         s: int,
@@ -858,10 +1013,15 @@ class StagePipeline:
         boundary: Dict[str, jax.Array],
         x: Optional[jax.Array] = None,
     ) -> Dict[str, jax.Array]:
+        if self.devices is None:
+            sp = self.stage_params(s, params)
+        else:
+            self.prefetch(s, boundary)
+            sp = self._placed_stage_params(s, params)
+            if s == 0 and x is not None:
+                x = jax.device_put(x, self.devices[0])
         bnd_in = {u: boundary[u] for u in self.imports[s]}
-        out = self.stage_fns[s](
-            self.stage_params(s, params), bnd_in, x if s == 0 else None
-        )
+        out = self.stage_fns[s](sp, bnd_in, x if s == 0 else None)
         boundary.update(out)
         return boundary
 
@@ -891,6 +1051,8 @@ def staged_forward(
     check: bool = True,
     jit: bool = True,
     link_quant=None,
+    placement=None,
+    cache: Optional[dict] = None,
 ) -> Callable[[Params, jax.Array], Dict[str, jax.Array]]:
     """Compile the staged pipeline ONCE; returns ``fn(params, x)``.
 
@@ -906,6 +1068,8 @@ def staged_forward(
     With ``link_quant`` (see ``stage_functions``) the wire payloads are
     decoded before the boundary is returned — the caller sees
     activations as quantized crossings actually delivered them.
+    ``placement`` / ``cache`` thread through to ``stage_functions``
+    (multi-device stage placement; compiled-pipeline memoization).
     """
     pipeline = stage_functions(
         graph,
@@ -918,6 +1082,8 @@ def staged_forward(
         check=check,
         jit=jit,
         link_quant=link_quant,
+        placement=placement,
+        cache=cache,
     )
 
     def forward(params: Params, x: jax.Array) -> Dict[str, jax.Array]:
@@ -946,6 +1112,8 @@ def apply_staged(
     jit: bool = True,
     check_monolithic: bool = False,
     link_quant=None,
+    placement=None,
+    cache: Optional[dict] = None,
 ) -> jax.Array:
     """Multi-chip forward pass: execute ``graph`` stage by stage.
 
@@ -961,10 +1129,13 @@ def apply_staged(
     in ``apply_graph``; the per-node shape/MAC and executed-tile
     assertions run inside each stage's trace.
 
-    This is the one-shot form: it builds (and jits) the stage pipeline
-    per call.  For repeated inference build the pipeline once with
-    ``staged_forward`` and reuse the returned callable — that is the
-    path whose per-stage jit cache amortizes.
+    This is the one-shot form: without ``cache`` it builds (and jits)
+    the stage pipeline per call.  Pass ``cache`` (a dict the caller
+    owns — ``registry.CNNApi`` does this automatically) to memoize the
+    compiled pipeline across calls, or build it once yourself with
+    ``staged_forward`` and reuse the returned callable — either way the
+    per-stage jit cache amortizes.  ``placement`` places stage ``s`` on
+    its own device (see ``stage_functions``).
 
     ``check_monolithic=True`` additionally runs the monolithic
     ``apply_graph`` on the same inputs and asserts every cut-crossing
@@ -974,6 +1145,7 @@ def apply_staged(
     edges, so the contract holds for quantized crossings too.
     """
     out_name = _check_single_stream(graph)
+    user_executed = executed is not None
     if executed is None:
         executed = {}
     forward = staged_forward(
@@ -983,11 +1155,13 @@ def apply_staged(
         plan=plan,
         overrides=overrides,
         interpret=interpret,
-        executed=executed,
+        executed=executed if user_executed else None,
         dtype=dtype,
         check=check,
         jit=jit,
         link_quant=link_quant,
+        placement=placement,
+        cache=cache,
     )
     boundary = forward(params, x)
 

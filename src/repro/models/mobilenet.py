@@ -278,16 +278,21 @@ def apply_staged(
     jit: bool = True,
     check_monolithic: bool = False,
     link_quant=None,
+    placement=None,
+    cache=None,
+    graph=None,
 ) -> jax.Array:
     """Multi-chip forward pass over a stage partition (a
     ``GraphStagePlan`` or a ``GraphPlan`` planned with ``n_stages=``):
     each stage jitted separately, cut-crossing activations — including
     the skew-buffered residual shortcuts — threaded across the
-    boundaries.  See ``cnn.apply_staged``."""
+    boundaries.  ``graph`` defaults to ``cfg.graph()`` (pass a cached
+    instance so ``cache`` can memoize the compiled pipeline across
+    calls).  See ``cnn.apply_staged``."""
     return cnn.apply_staged(
         params,
         x,
-        cfg.graph(),
+        cfg.graph() if graph is None else graph,
         partition=partition,
         impls=conv_impls,
         plan=plan,
@@ -298,6 +303,8 @@ def apply_staged(
         jit=jit,
         check_monolithic=check_monolithic,
         link_quant=link_quant,
+        placement=placement,
+        cache=cache,
     )
 
 

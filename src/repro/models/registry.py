@@ -163,6 +163,15 @@ class CNNApi:
     frames to the batch-pinned kernel tiles, and pump them through the
     per-stage pipeline with BestRate admission control and bounded
     inter-stage queues.  Returns ``(outputs, ServeReport)``.
+    ``serve(..., execute="devices")`` places each stage on its own
+    device (round-robin over ``jax.devices()``) so the engine pumps
+    genuinely overlapped stages — wall-clock, not only ticks.
+
+    Every ``CNNApi`` owns a set of memo ``caches`` (graphs per config,
+    DSE plans per (config, rate, stages), compiled ``StagePipeline``s
+    per identity key): repeated ``apply_staged``/``serve`` calls hit
+    the per-stage jit cache instead of rebuilding and retracing every
+    stage per call.
     """
 
     family: str
@@ -176,73 +185,110 @@ class CNNApi:
     partition: Callable              # (cfg, input_rate, n_stages, **kw) -> GraphPlan
     apply_staged: Callable           # (params, x, cfg, *, partition, ...)
     serve: Callable                  # (params, frames, cfg, **kw) -> (out, report)
+    caches: Any = None               # {"graphs", "plans", "pipelines"} memo dicts
 
 
-def _serve(params, frames, cfg, **kwargs):
-    """Streaming serving for one family config — the request-level
-    continuous-flow engine (``serving.cnn_stream.serve_frames``).
+def _cnn_api(family: str, make_config: Callable, mod) -> CNNApi:
+    """Build one family's ``CNNApi`` with its private memo caches.
 
-    Accepts the full ``serve_frames`` surface: ``config=`` (the unified
-    ``serving.ServeConfig`` — arrival scenarios, ``flush_after_ticks``,
-    SLA/overload policy) and/or the individual keyword overrides.  The
-    model config's dtype is the default compute dtype unless the caller
-    pins one (kwarg or ``config.dtype``)."""
-    from repro.serving.cnn_stream import serve_frames
+    ``graphs`` memoizes ``cfg.graph()`` per (hashable, frozen) config so
+    repeated calls see the *same* ``LayerGraph`` object — the identity
+    the pipeline cache keys on.  ``plans`` memoizes the DSE per
+    (config, rate, stages, kwargs) when the kwargs are hashable.
+    ``pipelines`` is handed to ``models.cnn.stage_functions(cache=...)``
+    (and, via ``ServeConfig.pipeline_cache``, to the serving engine), so
+    the compiled per-stage jit functions are reused across calls.
+    """
+    graphs: Dict[Any, Any] = {}
+    plans: Dict[Any, Any] = {}
+    pipelines: Dict[Any, Any] = {}
 
-    config = kwargs.get("config")
-    if "dtype" not in kwargs and (config is None or config.dtype is None):
-        kwargs["dtype"] = cfg.dtype
-    return serve_frames(cfg.graph(), params, frames, **kwargs)
+    def graph(cfg):
+        try:
+            hit = graphs.get(cfg)
+        except TypeError:  # unhashable config: build fresh, skip the memo
+            return cfg.graph()
+        if hit is None:
+            hit = cfg.graph()
+            graphs[cfg] = hit
+        return hit
 
+    def _planned(cfg, input_rate, n_stages, dse_kwargs):
+        from fractions import Fraction
 
-def _kernel_plan(cfg, input_rate, **dse_kwargs):
-    """DSE + lowering for one family config: graph -> GraphPlan -> the
-    per-node ImplPlan table the executor dispatches on."""
-    from repro.core.graph import plan_graph
+        from repro.core.graph import plan_graph
 
-    return plan_graph(cfg.graph(), input_rate, **dse_kwargs).kernel_plan()
+        g = graph(cfg)
+        try:
+            key = (cfg, Fraction(input_rate), n_stages,
+                   tuple(sorted(dse_kwargs.items())))
+            hit = plans.get(key)
+        except TypeError:  # unhashable rate/kwargs: plan fresh
+            key, hit = None, None
+        if hit is None:
+            if n_stages is None:
+                hit = plan_graph(g, input_rate, **dse_kwargs)
+            else:
+                hit = plan_graph(g, input_rate, n_stages=n_stages, **dse_kwargs)
+            if key is not None:
+                plans[key] = hit
+        return hit
 
+    def plan(cfg, input_rate, **dse_kwargs):
+        return _planned(cfg, input_rate, None, dse_kwargs).kernel_plan()
 
-def _stage_partition(cfg, input_rate, n_stages, **dse_kwargs):
-    """Stage-aware DSE for one family config: the DAG cut into
-    ``n_stages`` chips, with cut-crossing stream buffers sized —
-    the GraphPlan ``models.cnn.apply_staged`` consumes."""
-    from repro.core.graph import plan_graph
+    def partition(cfg, input_rate, n_stages, **dse_kwargs):
+        return _planned(cfg, input_rate, n_stages, dse_kwargs)
 
-    return plan_graph(cfg.graph(), input_rate, n_stages=n_stages,
-                      **dse_kwargs)
+    def apply_staged(params, x, cfg, **kwargs):
+        kwargs.setdefault("cache", pipelines)
+        kwargs.setdefault("graph", graph(cfg))
+        return mod.apply_staged(params, x, cfg, **kwargs)
+
+    def serve(params, frames, cfg, **kwargs):
+        from repro.serving.cnn_stream import serve_frames
+        from repro.serving.config import ServeConfig
+
+        config = kwargs.pop("config", None)
+        if "dtype" not in kwargs and (config is None or config.dtype is None):
+            kwargs["dtype"] = cfg.dtype
+        if config is None:
+            config = ServeConfig()
+        if config.pipeline_cache is None:
+            config = config.with_(pipeline_cache=pipelines)
+        kwargs["config"] = config
+        kwargs.setdefault("plan_cache", plans)
+        return serve_frames(graph(cfg), params, frames, **kwargs)
+
+    return CNNApi(
+        family=family,
+        make_config=make_config,
+        init=mod.init_params,
+        apply=mod.apply,
+        quantize=mod.quantize_params,
+        apply_int8=mod.apply_int8,
+        graph=graph,
+        plan=plan,
+        partition=partition,
+        apply_staged=apply_staged,
+        serve=serve,
+        caches={"graphs": graphs, "plans": plans, "pipelines": pipelines},
+    )
 
 
 def _mobilenet_api(version: int) -> CNNApi:
-    return CNNApi(
-        family=f"mobilenet_v{version}",
-        make_config=functools.partial(mobilenet.MobileNetConfig,
-                                      version=version),
-        init=mobilenet.init_params,
-        apply=mobilenet.apply,
-        quantize=mobilenet.quantize_params,
-        apply_int8=mobilenet.apply_int8,
-        graph=lambda cfg: cfg.graph(),
-        plan=_kernel_plan,
-        partition=_stage_partition,
-        apply_staged=mobilenet.apply_staged,
-        serve=_serve,
+    return _cnn_api(
+        f"mobilenet_v{version}",
+        functools.partial(mobilenet.MobileNetConfig, version=version),
+        mobilenet,
     )
 
 
 def _resnet_api(depth: int) -> CNNApi:
-    return CNNApi(
-        family=f"resnet{depth}",
-        make_config=functools.partial(resnet.ResNetConfig, depth=depth),
-        init=resnet.init_params,
-        apply=resnet.apply,
-        quantize=resnet.quantize_params,
-        apply_int8=resnet.apply_int8,
-        graph=lambda cfg: cfg.graph(),
-        plan=_kernel_plan,
-        partition=_stage_partition,
-        apply_staged=resnet.apply_staged,
-        serve=_serve,
+    return _cnn_api(
+        f"resnet{depth}",
+        functools.partial(resnet.ResNetConfig, depth=depth),
+        resnet,
     )
 
 

@@ -562,17 +562,15 @@ class _Rung:
                 check=config.check,
                 jit=config.jit,
                 link_quant=config.link_quant,
+                # "devices": stage s committed to jax.devices()[s % n] so
+                # the engine's interleaved stage pumping overlaps on real
+                # silicon (async dispatch per device queue).
+                placement=(True if config.execute == "devices" else None),
+                cache=config.pipeline_cache,
             )
             # after stage s, a batch only needs the tensors later stages
             # import (plus the graph output once the last stage ran)
-            keep = set()
-            self._keep_after = [set() for _ in range(self.n_stages)]
-            for s in range(self.n_stages - 1, -1, -1):
-                if s == self.n_stages - 1:
-                    keep = {self.pipeline.out_name}
-                else:
-                    keep = keep | set(self.pipeline.imports[s + 1])
-                self._keep_after[s] = set(keep)
+            self._keep_after = self.pipeline.keep_after()
 
 
 # ==========================================================================
@@ -691,6 +689,11 @@ class CNNStreamEngine:
         self.plan = plan
         self.microbatch = config.microbatch
         self.dtype = config.dtype if config.dtype is not None else jnp.float32
+        if config.execute not in (True, False, "devices"):
+            raise ServingError(
+                f"execute={config.execute!r} — expected True, False, or "
+                '"devices" (per-stage device placement)'
+            )
         self.execute = config.execute
         self.slot = slot_cycles(plan)
         self._shed, self._switch = self._resolve_policy(config.overload)
@@ -1300,9 +1303,10 @@ def serve_frames(
     dtype=None,
     check: Optional[bool] = None,
     jit: Optional[bool] = None,
-    execute: Optional[bool] = None,
+    execute=None,
     max_ticks: Optional[int] = None,
     flush_after_ticks=_UNSET,
+    plan_cache: Optional[dict] = None,
     **dse_kwargs,
 ):
     """Plan, stream, and serve ``frames`` through a staged pipeline.
@@ -1321,6 +1325,12 @@ def serve_frames(
     memory-efficient streams: narrow-wire buffer pricing and
     buffer-aware cuts); pair them with ``config.link_quant`` to make
     the executed boundaries match the priced wire format.
+
+    ``execute="devices"`` places each stage on its own device
+    (round-robin over ``jax.devices()``).  ``plan_cache`` memoizes the
+    DSE result per (graph identity, rate, stages, kwargs) so repeated
+    calls — e.g. through ``CNNApi.serve`` — skip re-planning; pair with
+    ``config.pipeline_cache`` to also skip re-jitting the stages.
     """
     from repro.core.graph import plan_graph
 
@@ -1341,7 +1351,21 @@ def serve_frames(
     if overrides:
         cfg = cfg.with_(**overrides)
 
-    plan = plan_graph(graph, input_rate, n_stages=n_stages, **dse_kwargs)
+    plan = plan_key = plan_refs = None
+    if plan_cache is not None:
+        try:
+            knobs = (Fraction(input_rate), n_stages,
+                     tuple(sorted(dse_kwargs.items())))
+        except TypeError:  # unhashable rate / kwargs: plan fresh
+            knobs = None
+        if knobs is not None:
+            plan_refs = (graph,)
+            plan_key, plan = cnn._pipeline_cache_get(
+                plan_cache, plan_refs, knobs)
+    if plan is None:
+        plan = plan_graph(graph, input_rate, n_stages=n_stages, **dse_kwargs)
+        if plan_key is not None:
+            plan_cache[plan_key] = (plan_refs, plan)
     if plan.replications:
         graph = plan.graph
         params = replicate_params(params, plan.replications)

@@ -52,11 +52,20 @@ class ServeConfig:
     dtype: Any = None
     check: bool = True
     jit: bool = True
-    execute: bool = True
+    # False = plan/validate only; True = run stages (host placement);
+    # "devices" = place stage s on jax.devices()[s % n] so the engine's
+    # interleaved stage pumping overlaps on real silicon (see
+    # distributed.device_pipeline for the wall-clock harness).
+    execute: Any = True
     # Quantized cut crossings (models.cnn.stage_functions link_quant):
     # None = full-precision boundaries (the default), True = the plan's
     # link_dtype, or a dtype str / per-producer / per-edge mapping.
     link_quant: Any = None
+    # Memo dict for compiled StagePipelines (models.cnn.stage_functions
+    # cache=).  CNNApi.serve injects the per-family cache automatically;
+    # standalone engines may share one dict across runs to skip
+    # re-tracing every stage per call.
+    pipeline_cache: Optional[dict] = None
     # -- arrival source ----------------------------------------------------
     arrival: Any = Fraction(1)
     max_ticks: int = 1_000_000

@@ -254,10 +254,37 @@ def test_compressed_psum_error_feedback_converges():
 
 
 # ---------------------------------------------------------------------------
-# pipeline parallelism (CPU 1-device 'stage' mesh is meaningless; simulate
-# with a 1-stage mesh + utilization math, full ring logic covered in the
-# multi-device dry-run test)
+# pipeline parallelism (single-CPU host: a 1-stage 'stage' mesh exercises
+# the full ring schedule — scan, ppermute, banking — degenerately; the
+# genuine 4-stage overlap runs in examples/pipeline_demo.py's forced
+# 4-device child)
 # ---------------------------------------------------------------------------
+
+def test_pipeline_forward_matches_unpipelined_stack():
+    from jax.sharding import Mesh
+    from repro.distributed.pipeline_parallel import (pipeline_forward,
+                                                     plan_stages_for_layers,
+                                                     stack_stage_params)
+
+    layers, d, m, mb = 3, 4, 4, 2
+    key = jax.random.key(0)
+    kw, kx = jax.random.split(key)
+    params = {"w": jax.random.normal(kw, (layers, d, d)) * 0.3}
+    x_micro = jax.random.normal(kx, (m, mb, d))
+
+    def block_fn(p, x):
+        for i in range(p["w"].shape[0]):
+            x = jnp.tanh(x @ p["w"][i])
+        return x
+
+    plan = plan_stages_for_layers([1.0] * layers, 1)
+    stacked = stack_stage_params(params, plan)   # [S=1, L, d, d]
+    mesh = Mesh(np.array(jax.devices()[:1]), ("stage",))
+    out = pipeline_forward(block_fn, stacked, x_micro, mesh)
+    ref = jax.vmap(lambda x: block_fn(params, x))(x_micro)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
 
 def test_pipeline_utilization_math():
     from repro.distributed.pipeline_parallel import microbatch_utilization

@@ -1,0 +1,95 @@
+"""Compiled-pipeline memoization: repeated apply_staged/serve calls
+must reuse the same StagePipeline (and therefore its per-stage jit
+cache) instead of rebuilding and retracing every stage per call —
+the per-call recompilation fix behind registry.CNNApi's caches."""
+
+from fractions import Fraction as F
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import cnn
+from repro.models.registry import get_cnn_api
+from repro.serving.config import ServeConfig
+
+
+@pytest.fixture(scope="module")
+def api_setup():
+    api = get_cnn_api("mobilenet_v1")
+    cfg = api.make_config(input_hw=(16, 16), num_classes=7)
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    x = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(1), (4, 16, 16, 3)),
+        dtype=np.float32,
+    )
+    return api, cfg, params, x
+
+
+def test_stage_functions_cache_identity(api_setup):
+    api, cfg, _, _ = api_setup
+    graph = api.graph(cfg)
+    plan = api.partition(cfg, F(1), 2)
+    cache = {}
+    p1 = cnn.stage_functions(graph, partition=plan, cache=cache)
+    p2 = cnn.stage_functions(graph, partition=plan, cache=cache)
+    assert p1 is p2
+    assert len(cache) == 1
+    # a different knob is a different entry, not a false hit
+    p3 = cnn.stage_functions(graph, partition=plan, cache=cache, jit=False)
+    assert p3 is not p1
+    assert len(cache) == 2
+    # identity keying: a fresh (equal-topology) graph misses
+    p4 = cnn.stage_functions(cfg.graph(), partition=plan, cache=cache)
+    assert p4 is not p1
+
+
+def test_stage_functions_cache_skipped_for_executed(api_setup):
+    api, cfg, _, _ = api_setup
+    graph = api.graph(cfg)
+    plan = api.partition(cfg, F(1), 2)
+    cache = {}
+    executed = {}
+    cnn.stage_functions(graph, partition=plan, cache=cache, executed=executed)
+    assert cache == {}  # out-param introspection cannot be memoized
+
+
+def test_registry_apply_staged_hits_cache(api_setup):
+    api, cfg, params, x = api_setup
+    plan = api.partition(cfg, F(1), 2)
+    before = len(api.caches["pipelines"])
+    y1 = np.asarray(api.apply_staged(params, x, cfg, partition=plan))
+    after_first = len(api.caches["pipelines"])
+    y2 = np.asarray(api.apply_staged(params, x, cfg, partition=plan))
+    assert len(api.caches["pipelines"]) == after_first > before
+    np.testing.assert_array_equal(y1, y2)
+
+
+def test_registry_graph_and_plan_memoized(api_setup):
+    api, cfg, _, _ = api_setup
+    assert api.graph(cfg) is api.graph(cfg)
+    assert api.partition(cfg, F(1), 2) is api.partition(cfg, F(1), 2)
+    # different DSE knobs are distinct plans
+    assert api.partition(cfg, F(1), 2) is not api.partition(cfg, F(1), 3)
+
+
+def test_serve_reuses_pipeline_cache(api_setup):
+    api, cfg, params, x = api_setup
+    config = ServeConfig(microbatch=2)
+    out1, _ = api.serve(params, x, cfg, input_rate=F(1), n_stages=2,
+                        config=config)
+    n = len(api.caches["pipelines"])
+    out2, _ = api.serve(params, x, cfg, input_rate=F(1), n_stages=2,
+                        config=config)
+    assert len(api.caches["pipelines"]) == n  # second serve: no rebuild
+    np.testing.assert_array_equal(out1, out2)
+
+
+def test_caller_config_cache_wins(api_setup):
+    # a caller-supplied pipeline_cache is respected, not overwritten
+    api, cfg, params, x = api_setup
+    mine = {}
+    out, _ = api.serve(params, x, cfg, input_rate=F(1), n_stages=2,
+                       config=ServeConfig(microbatch=2, pipeline_cache=mine))
+    assert len(mine) == 1
+    assert out is not None
