@@ -30,6 +30,13 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
                           GPipe placement ordinals + utilization bounds
                           (pinned) and measured fps / overlap speedup
                           (excluded from gating — timing, not structure)
+  table11_observability — rate-calculus observability: the drift
+                          auditor reproduces the engine's occupancy/
+                          queue/stall verdicts from the recorded trace
+                          alone, localizes the first stall tick of the
+                          table8 adversarial overload, and the trace-off
+                          run stays byte-identical (deterministic tick
+                          model — all rows pinned)
   rate_aware_serving    — the technique applied to LM serving (DESIGN §3)
   kernel_bench          — Pallas kernels vs oracles + tile stats
   roofline              — 40-cell roofline summary (needs dry-run JSONs)
@@ -62,6 +69,7 @@ MODULES = [
     ("table8", "benchmarks.table8_overload"),
     ("table9", "benchmarks.table9_memory"),
     ("table10", "benchmarks.table10_wallclock"),
+    ("table11", "benchmarks.table11_observability"),
     ("rate_aware", "benchmarks.rate_aware_serving"),
     ("kernels", "benchmarks.kernel_bench"),
     ("roofline", "benchmarks.roofline"),

@@ -19,11 +19,19 @@ dependent and ignored by the regression gate as always):
 * ``fleet`` — the multi-tenant serving loop on that pool: both tenants
   pumped on one shared deterministic clock, per-tenant BestRate
   admission, zero stalls at <= the target rate, per-chip occupancy.
+* ``fleet/wallclock`` — the same pool executed for real (execute=True
+  with the shared ``obs.Tracer`` on): per-tenant measured fps from the
+  host-clock ``exec`` spans, next to the tick-domain throughput.
+  Measured rows match check_regression's ``/wallclock`` default
+  exclude — timing noise is not a regression.
 """
 from __future__ import annotations
 
 import time
 from fractions import Fraction as F
+
+import jax
+import numpy as np
 
 from repro.core.graph import plan_graph
 from repro.core.replicate import best_replication
@@ -135,11 +143,45 @@ def _fleet_rows(pp) -> list:
     return rows
 
 
+def _fleet_wallclock_rows(pp) -> list:
+    """Measured per-tenant fps: the fleet executed on live devices with
+    the shared tracer recording host-clock ``exec`` spans.  A handful
+    of frames per tenant keeps the CI budget honest; every value here
+    is wall-clock (unpinned by the ``/wallclock`` exclude)."""
+    rows = []
+    sched = FleetScheduler(
+        pp, config=ServeConfig(execute=True, trace=True))
+    for i, t in enumerate(TENANTS):
+        sched.init_params(t.name, jax.random.PRNGKey(i))
+    frames = {"alpha": 6, "beta": 4}
+    workloads = [
+        TenantWorkload(
+            t.name,
+            np.random.RandomState(i)
+            .randn(frames[t.name], *t.input_hw, 3)
+            .astype("float32"))
+        for i, t in enumerate(TENANTS)]
+    t0 = time.perf_counter()
+    rep = sched.serve(workloads)
+    dt = (time.perf_counter() - t0) * 1e6
+    summaries = rep.summaries()
+    for w in workloads:
+        s = summaries[w.tenant]
+        rows.append((
+            f"table7/fleet/wallclock/{w.tenant}",
+            dt if w is workloads[0] else 0.0,
+            f"measured {rep.measured_fps(w.tenant):.1f} fps over "
+            f"{rep.tenant_wall_s[w.tenant]:.3f}s host wall "
+            f"({s.completed} frames; tick thr {s.throughput:.3f} f/tick)"))
+    return rows
+
+
 def run() -> list:
     rows = _replicate_rows()
     pool_rows, pp = _pool_rows()
     rows += pool_rows
     rows += _fleet_rows(pp)
+    rows += _fleet_wallclock_rows(pp)
     return rows
 
 

@@ -41,6 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from fractions import Fraction
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -48,6 +49,7 @@ import jax.numpy as jnp
 
 from repro.distributed.pipeline_parallel import microbatch_utilization
 from repro.models import cnn
+from repro.obs.trace import resolve_tracer
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,7 +106,7 @@ class DevicePipeline:
     fp32 (stage order never changes the per-node computation).
     """
 
-    def __init__(self, pipeline, params, *, placement=True):
+    def __init__(self, pipeline, params, *, placement=True, tracer=None):
         if pipeline.devices is None:
             pipeline.devices = cnn.resolve_stage_devices(
                 placement, pipeline.n_stages, pipeline.partition
@@ -117,9 +119,23 @@ class DevicePipeline:
         self.pipeline = pipeline
         self.params = params
         self._keep = pipeline.keep_after()
+        # opt-in obs.Tracer: host wall-clock spans around every
+        # dispatch / cut transfer / block_until_ready, one pid per
+        # device ordinal, one tid per stage (docs/observability.md).
+        # None/False = off (no timing perturbation), True = fresh.
+        self.tracer = resolve_tracer(tracer)
 
     @classmethod
-    def build(cls, graph, params, *, partition, placement=True, **stage_kwargs):
+    def build(
+        cls,
+        graph,
+        params,
+        *,
+        partition,
+        placement=True,
+        tracer=None,
+        **stage_kwargs,
+    ):
         """One-call constructor: compile the per-stage functions with
         ``placement`` and wrap them.  ``stage_kwargs`` flow through to
         ``models.cnn.stage_functions`` (impls/plan/overrides/link_quant/
@@ -127,7 +143,7 @@ class DevicePipeline:
         pipeline = cnn.stage_functions(
             graph, partition=partition, placement=placement, **stage_kwargs
         )
-        return cls(pipeline, params)
+        return cls(pipeline, params, tracer=tracer)
 
     # -- placement introspection ------------------------------------------
 
@@ -160,6 +176,8 @@ class DevicePipeline:
         device queue receives its next kernel before new work enters
         stage 0.  Returns the per-micro-batch logits (async)."""
         pipe, S, M = self.pipeline, self.pipeline.n_stages, len(splits)
+        tr = self.tracer
+        ords = self.placement_ordinals() if tr is not None else ()
         bnds: List[Dict[str, jax.Array]] = [{} for _ in range(M)]
         outs: List[Optional[jax.Array]] = [None] * M
         for t in range(M + S - 1):
@@ -167,7 +185,19 @@ class DevicePipeline:
                 m = t - s
                 if not 0 <= m < M:
                     continue
+                if tr is not None:
+                    t0 = time.perf_counter()
                 pipe.run_stage(s, self.params, bnds[m], splits[m] if s == 0 else None)
+                if tr is not None:
+                    tr.span(
+                        "dispatch",
+                        Fraction(t0),
+                        Fraction(time.perf_counter()),
+                        pid=f"dev{ords[s]}",
+                        tid=f"stage{s}",
+                        clock="host",
+                        micro=m,
+                    )
                 keep = self._keep[s]
                 for k in list(bnds[m]):
                     if k not in keep:
@@ -177,7 +207,19 @@ class DevicePipeline:
                 else:
                     # double-buffer: start the cut crossing toward stage
                     # s+1 now, overlapping every other stage's compute
+                    if tr is not None:
+                        t0 = time.perf_counter()
                     pipe.prefetch(s + 1, bnds[m])
+                    if tr is not None:
+                        tr.span(
+                            "transfer",
+                            Fraction(t0),
+                            Fraction(time.perf_counter()),
+                            pid=f"dev{ords[s]}",
+                            tid=f"stage{s}",
+                            clock="host",
+                            micro=m,
+                        )
         return outs
 
     def run(self, x, *, microbatch: Optional[int] = None) -> jax.Array:
@@ -236,10 +278,24 @@ class DevicePipeline:
             jax.block_until_ready(self._schedule(splits))
             self._run_sequential(splits)
 
-        overlap_s = min(
-            self._timed(lambda: jax.block_until_ready(self._schedule(splits)))
-            for _ in range(max(1, repeats))
-        )
+        def _overlap_once():
+            outs = self._schedule(splits)
+            if self.tracer is None:
+                jax.block_until_ready(outs)
+                return
+            t0 = time.perf_counter()
+            jax.block_until_ready(outs)
+            self.tracer.span(
+                "block_until_ready",
+                Fraction(t0),
+                Fraction(time.perf_counter()),
+                pid="host",
+                tid="measure",
+                clock="host",
+                frames=frames,
+            )
+
+        overlap_s = min(self._timed(_overlap_once) for _ in range(max(1, repeats)))
         sequential_s = min(
             self._timed(lambda: self._run_sequential(splits))
             for _ in range(max(1, repeats))

@@ -47,6 +47,7 @@ import numpy as np
 
 from repro.core.replicate import replicate_params
 from repro.fleet.pool import PoolPlan
+from repro.obs.trace import Tracer, resolve_tracer
 from repro.serving.cnn_stream import CNNStreamEngine, ServeReport, ServingError
 from repro.serving.config import ServeConfig
 from repro.serving.telemetry import ServeSummary
@@ -97,6 +98,12 @@ class FleetReport:
     outputs: Dict[str, Optional[np.ndarray]]
     makespan_cycles: Fraction  # latest tenant finish, shared clock
     chip_occupancy: Dict[str, float]  # busy cycles / fleet makespan
+    # host wall-clock per tenant (seconds first dispatch -> last), from
+    # the shared obs.Tracer's "exec" spans; empty unless the fleet ran
+    # with tracing on AND execute (see docs/observability.md)
+    tenant_wall_s: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # the shared obs.Tracer the engines recorded into (None when off)
+    trace: Optional[object] = None
 
     @property
     def all_stall_free(self) -> bool:
@@ -111,6 +118,17 @@ class FleetReport:
 
     def p99_latency(self, tenant: str) -> float:
         return self.reports[tenant].p99_latency()
+
+    def measured_fps(self, tenant: str) -> float:
+        """Served frames over host wall-clock (tracing + execute only):
+        the measured twin of the tick-domain throughput column."""
+        wall = self.tenant_wall_s.get(tenant, 0.0)
+        if wall <= 0.0:
+            raise FleetError(
+                f"no wall-clock span for {tenant!r} — fleet must run with "
+                "tracing on and execute=True for measured fps"
+            )
+        return self.reports[tenant].completed / wall
 
     def summaries(self) -> Dict[str, ServeSummary]:
         """Per-tenant views in the unified telemetry schema."""
@@ -196,6 +214,10 @@ class FleetScheduler:
         self.pool = pool
         self.params = dict(params or {})
         self.config = config
+        # one shared tracer for the whole fleet: every tenant's engine
+        # records under its own pid (the tenant name), stage spans
+        # tagged with the pool's chip assignment
+        self.tracer = resolve_tracer(config.trace)
 
     @property
     def execute(self) -> bool:
@@ -223,6 +245,20 @@ class FleetScheduler:
             dtype = getattr(cand.cfg, "dtype", None)
             if dtype is not None:
                 cfg = cfg.with_(dtype=dtype)
+        if self.tracer is not None and not isinstance(cfg.trace, Tracer):
+            # fleet tracing on: every tenant records into the SHARED
+            # tracer under its own pid (tenant name), stage spans tagged
+            # with the pool's chip assignment — unless the tenant's own
+            # config carries an explicit Tracer of its own
+            cfg = cfg.with_(
+                trace=self.tracer,
+                trace_pid=w.tenant,
+                trace_chips={
+                    a.stage: a.chip
+                    for a in self.pool.assignments
+                    if a.tenant == w.tenant
+                },
+            )
         return cfg
 
     def _engine(self, w: TenantWorkload) -> CNNStreamEngine:
@@ -324,9 +360,19 @@ class FleetScheduler:
                 Fraction(0),
             )
             occupancy[a.chip] = float(busy / makespan)
+        wall: Dict[str, float] = {}
+        if self.tracer is not None:
+            for name in reports:
+                spans = self.tracer.spans("exec", pid=name, clock="host")
+                if spans:
+                    wall[name] = float(
+                        max(s.end for s in spans) - min(s.start for s in spans)
+                    )
         return FleetReport(
             reports=reports,
             outputs=outputs,
             makespan_cycles=makespan,
             chip_occupancy=occupancy,
+            tenant_wall_s=wall,
+            trace=self.tracer,
         )

@@ -951,6 +951,7 @@ class StagePipeline:
             later = set().union(*imports[s + 1 :]) if imports[s + 1 :] else set()
             self._donate.append({u for u in imports[s] if u not in later})
         self._placed_params: Dict[int, tuple] = {}
+        self._observer = None
 
     @property
     def n_stages(self) -> int:
@@ -963,6 +964,16 @@ class StagePipeline:
     def stage_device(self, s: int):
         """The device stage ``s`` is placed on (None when unplaced)."""
         return None if self.devices is None else self.devices[s]
+
+    def observe(self, hook) -> None:
+        """Register ``hook(stage=, name=, nbytes=, dtype=, donated=)``,
+        called on every placed cut transfer ``prefetch`` issues — the
+        measured twin of the plan's priced ``StreamBuffer`` wire widths
+        (the serving engine folds it into ``transfer_bytes{edge,dtype}``;
+        see docs/observability.md).  Pass ``None`` to detach.  Attach
+        only to a pipeline you own: pipelines served from a shared
+        ``stage_functions`` cache are reused across engines."""
+        self._observer = hook
 
     def keep_after(self) -> List[set]:
         """``keep_after()[s]``: the boundary keys still live once stage
@@ -1002,9 +1013,16 @@ class StagePipeline:
         dev = self.devices[s]
         for u in self.imports[s]:
             if u in boundary:
-                boundary[u] = jax.device_put(
-                    boundary[u], dev, donate=(u in self._donate[s])
-                )
+                v = boundary[u]
+                if self._observer is not None:
+                    self._observer(
+                        stage=s,
+                        name=u,
+                        nbytes=int(v.nbytes),
+                        dtype=str(v.dtype),
+                        donated=(u in self._donate[s]),
+                    )
+                boundary[u] = jax.device_put(v, dev, donate=(u in self._donate[s]))
 
     def run_stage(
         self,

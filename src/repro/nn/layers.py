@@ -12,12 +12,15 @@ def _dense_init(rng, shape, dtype, scale=None):
     return (jax.random.normal(rng, shape, jnp.float32) * scale).astype(dtype)
 
 
-def init_ffn(rng, d_model: int, d_ff: int, *, kind: str = "swiglu",
-             dtype=jnp.float32) -> dict:
+def init_ffn(
+    rng, d_model: int, d_ff: int, *, kind: str = "swiglu", dtype=jnp.float32
+) -> dict:
     """kind: swiglu | geglu (gated, 3 matrices) or gelu (plain, 2)."""
     k1, k2, k3 = jax.random.split(rng, 3)
-    p = {"w_up": _dense_init(k1, (d_model, d_ff), dtype),
-         "w_down": _dense_init(k2, (d_ff, d_model), dtype)}
+    p = {
+        "w_up": _dense_init(k1, (d_model, d_ff), dtype),
+        "w_down": _dense_init(k2, (d_ff, d_model), dtype),
+    }
     if kind in ("swiglu", "geglu"):
         p["w_gate"] = _dense_init(k3, (d_model, d_ff), dtype)
     return p

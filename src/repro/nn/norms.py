@@ -5,8 +5,9 @@ import jax
 import jax.numpy as jnp
 
 
-def rms_norm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6,
-             zero_centered: bool = False) -> jax.Array:
+def rms_norm(
+    x: jax.Array, scale: jax.Array, *, eps: float = 1e-6, zero_centered: bool = False
+) -> jax.Array:
     """RMSNorm; ``zero_centered`` uses (1+scale) (gemma convention)."""
     dtype = x.dtype
     x = x.astype(jnp.float32)
@@ -18,8 +19,9 @@ def rms_norm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6,
     return (y * g).astype(dtype)
 
 
-def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
-               *, eps: float = 1e-5) -> jax.Array:
+def layer_norm(
+    x: jax.Array, scale: jax.Array, bias: jax.Array, *, eps: float = 1e-5
+) -> jax.Array:
     dtype = x.dtype
     x = x.astype(jnp.float32)
     mu = jnp.mean(x, axis=-1, keepdims=True)

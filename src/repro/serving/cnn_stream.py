@@ -89,6 +89,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 import warnings
 from collections import deque
 from fractions import Fraction
@@ -100,6 +101,8 @@ import numpy as np
 from repro.core.replicate import lane_multiplicity, replicate_params
 from repro.core.stage_partition import LINK_DTYPE_BITS
 from repro.models import cnn
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import resolve_tracer
 from repro.serving.config import ServeConfig
 from repro.serving.overload import ShedPolicy, SwitchPolicy
 from repro.serving.scenarios import ArrivalProcess
@@ -108,6 +111,12 @@ from repro.serving.telemetry import ServeSummary
 
 class ServingError(ValueError):
     """Misconfigured or inconsistent streaming-serving setup."""
+
+
+def _fstr(f) -> str:
+    """Exact-Fraction string ("a/b") for the trace metadata blob."""
+    f = Fraction(f)
+    return f"{f.numerator}/{f.denominator}"
 
 
 # ==========================================================================
@@ -505,6 +514,9 @@ class ServeReport:
                 or self.shed > 0
                 or bool(self.switches)
             ),
+            metrics=(
+                self.metrics.snapshot() if self.metrics is not None else None
+            ),
         )
 
     def to_rows(self, prefix: str = "") -> List[Tuple[str, str]]:
@@ -514,6 +526,15 @@ class ServeReport:
     # filled by the engine (not part of the dataclass repr/eq surface)
     _stage_intervals: List[List[Tuple[Fraction, Fraction]]] = dataclasses.field(
         default_factory=list, repr=False, compare=False
+    )
+    # observability artifacts (None unless the run traced): the
+    # obs.Tracer the engine recorded into and the run's
+    # obs.MetricsRegistry (see docs/observability.md)
+    trace: Optional[object] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+    metrics: Optional[object] = dataclasses.field(
+        default=None, repr=False, compare=False
     )
 
 
@@ -700,6 +721,24 @@ class CNNStreamEngine:
         self._rungs = self._build_rungs()
         self._active = 0
         self._requests: List[FrameRequest] = []
+        # observability (docs/observability.md): None when off — every
+        # emission below is guarded on it, so an untraced run touches
+        # no obs code at all (event-identical to pre-obs engines)
+        self._tracer = resolve_tracer(config.trace)
+        self._trace_pid = config.trace_pid
+        self._trace_chips = dict(config.trace_chips or {})
+        self.metrics: Optional[MetricsRegistry] = None
+        if (
+            self._tracer is not None
+            and config.execute
+            and config.pipeline_cache is None
+        ):
+            # transfer_bytes{edge,dtype}: observe the placed cut
+            # crossings — only on pipelines this engine owns (cached
+            # pipelines are shared across engines, never instrumented)
+            for rung in self._rungs:
+                if rung.pipeline is not None:
+                    rung.pipeline.observe(self._on_transfer)
 
     def _resolve_policy(self, overload):
         if overload is None:
@@ -803,6 +842,7 @@ class CNNStreamEngine:
     def _start_batch_exec(self, s: int, batch: _Batch) -> None:
         if not self.execute:
             return
+        t0 = time.perf_counter() if self._tracer is not None else None
         rung = self._rungs[batch.rung]
         if s == 0:
             xs = [f.x for f in batch.frames]
@@ -818,6 +858,19 @@ class CNNStreamEngine:
         for k in list(batch.boundary):
             if k not in keep:
                 del batch.boundary[k]
+        if t0 is not None:
+            # host wall-clock around the (async) stage dispatch — the
+            # measured twin of the tick-domain stage span
+            self._tracer.span(
+                "exec",
+                Fraction(t0),
+                Fraction(time.perf_counter()),
+                pid=self._trace_pid,
+                tid=f"stage{s}",
+                clock="host",
+                bid=batch.bid,
+                frames=len(batch.frames),
+            )
 
     def _finish_batch(self, batch: _Batch, t: Fraction) -> None:
         out = None
@@ -829,6 +882,128 @@ class CNNStreamEngine:
             f.rung = batch.rung
             if out is not None:
                 f.out = out[i]
+
+    # -- observability (opt-in; every call guarded on self._tracer) --------
+    #
+    # The tracer only ever APPENDS: nothing here reads back into the
+    # event loop, so a traced run is event-identical to an untraced one
+    # (tests/obs/test_audit.py pins this).  All tick-domain
+    # timestamps are emitted in ticks (cycles / slot) on the exact
+    # rational clock; pid is the engine label (tenant name in a fleet),
+    # tid is "stage{s}".
+
+    def _begin_trace(self, offered: Fraction, n: int) -> None:
+        """Fresh run: new metrics registry, plan metadata (the analytic
+        model ``obs.audit`` replays the trace against), submit instants."""
+        tr, pid = self._tracer, self._trace_pid
+        self.metrics = MetricsRegistry()
+        tr.metadata(
+            pid,
+            {
+                "slot_cycles": _fstr(self.slot),
+                "arrival_rate": _fstr(offered),
+                "microbatch": self.microbatch,
+                "frames": n,
+                "rungs": [
+                    {
+                        "best_rate": _fstr(r.best_rate),
+                        "caps": [int(c) for c in r.caps],
+                        "utilization": [_fstr(sr.utilization) for sr in r.rates],
+                        "bottleneck": max(
+                            range(r.n_stages),
+                            key=lambda s: r.rates[s].utilization,
+                        ),
+                    }
+                    for r in self._rungs
+                ],
+            },
+        )
+        self.metrics.counter("frames_submitted").inc(n)
+        for r in self._requests:
+            tr.instant("submit", r.t_submit / self.slot, pid=pid, rid=r.rid)
+
+    def _trace_queue(self, s: int, depth: int, now, seg: int) -> None:
+        self._tracer.counter(
+            "queue_depth",
+            depth,
+            now / self.slot,
+            pid=self._trace_pid,
+            tid=f"stage{s}",
+            seg=seg,
+        )
+        self.metrics.gauge("queue_depth", stage=s).set(depth)
+
+    def _trace_start(self, s: int, batch: _Batch, now, svc, seg: int) -> None:
+        """One busy span per batch start — both ends at once: the tick
+        model is deterministic, so the end (now + svc) is known here."""
+        slot = self.slot
+        args = dict(
+            bid=batch.bid,
+            seg=seg,
+            rung=batch.rung,
+            frames=len(batch.frames),
+            rids=tuple(f.rid for f in batch.frames),
+        )
+        chip = self._trace_chips.get(s)
+        if chip is not None:
+            args["chip"] = chip
+        self._tracer.span(
+            "stage",
+            now / slot,
+            (now + svc) / slot,
+            pid=self._trace_pid,
+            tid=f"stage{s}",
+            **args,
+        )
+        self.metrics.counter("stage_busy_ticks", stage=s).inc(svc / slot)
+
+    def _trace_blocked(self, s: int, st: _StageState, now, seg: int) -> None:
+        """Departure was held past service end (downstream full)."""
+        slot = self.slot
+        self._tracer.span(
+            "blocked",
+            st.busy_until / slot,
+            now / slot,
+            pid=self._trace_pid,
+            tid=f"stage{s}",
+            bid=st.batch.bid,
+            seg=seg,
+        )
+        self.metrics.counter("stage_stall_ticks", stage=s).inc(
+            (now - st.busy_until) / slot
+        )
+
+    def _trace_done(self, batch: _Batch, now, seg: int) -> None:
+        tr, pid, slot = self._tracer, self._trace_pid, self.slot
+        t = now / slot
+        tr.instant("merge", t, pid=pid, bid=batch.bid, seg=seg)
+        m = self.metrics
+        m.counter("frames_completed").inc(len(batch.frames))
+        lat = m.histogram("latency_ticks")
+        svc_lat = m.histogram("service_latency_ticks")
+        for f in batch.frames:
+            tr.instant("done", t, pid=pid, rid=f.rid, seg=seg)
+            lat.observe((now - f.t_submit) / slot)
+            svc_lat.observe((now - f.t_admit) / slot)
+
+    def _trace_admit(self, req: FrameRequest, now, seg: int) -> None:
+        self._tracer.instant(
+            "admit", now / self.slot, pid=self._trace_pid, rid=req.rid, seg=seg
+        )
+        self.metrics.counter("frames_admitted").inc()
+
+    def _trace_shed(self, req: FrameRequest, now) -> None:
+        self._tracer.instant("shed", now / self.slot, pid=self._trace_pid, rid=req.rid)
+        self.metrics.counter("shed_total").inc()
+
+    def _on_transfer(self, *, stage, name, nbytes, dtype, donated) -> None:
+        """StagePipeline.observe hook: bytes crossing a placed cut —
+        the measured twin of the plan's priced StreamBuffer widths."""
+        if self.metrics is None:
+            return  # transfer outside a run (warmup)
+        self.metrics.counter(
+            "transfer_bytes", edge=f"{name}->s{stage}", dtype=dtype
+        ).inc(nbytes)
 
     # -- the event loop ----------------------------------------------------
     #
@@ -910,6 +1085,8 @@ class CNNStreamEngine:
             pending=deque(),
             forming=[],
         )
+        if self._tracer is not None:
+            self._begin_trace(offered, n)
         return self._rt
 
     @property
@@ -1009,6 +1186,16 @@ class CNNStreamEngine:
             )
         )
         rt.switches.append((now, self._active, to))
+        if self._tracer is not None:
+            self._tracer.instant(
+                "switch",
+                now / self.slot,
+                pid=self._trace_pid,
+                from_rung=self._active,
+                to_rung=to,
+                seg=len(rt.history),
+            )
+            self.metrics.counter("plan_switches").inc()
         self._active = to
         rung = self._rungs[to]
         if not rung.plan.continuous_flow:
@@ -1026,15 +1213,20 @@ class CNNStreamEngine:
     def _settle(self, now: Fraction) -> None:
         rt = self._rt
         reqs = self._requests
+        tr = self._tracer
 
         def enqueue(s: int, batch: _Batch) -> None:
             rt.queues[s].append(batch)
             rt.qev[s].append((now / self.slot, len(rt.queues[s])))
             rt.max_q[s] = max(rt.max_q[s], len(rt.queues[s]))
+            if tr is not None:
+                self._trace_queue(s, len(rt.queues[s]), now, len(rt.history))
 
         def dequeue(s: int) -> _Batch:
             batch = rt.queues[s].popleft()
             rt.qev[s].append((now / self.slot, len(rt.queues[s])))
+            if tr is not None:
+                self._trace_queue(s, len(rt.queues[s]), now, len(rt.history))
             return batch
 
         progress = True
@@ -1049,10 +1241,14 @@ class CNNStreamEngine:
                 if s == n_stages - 1:
                     self._finish_batch(st.batch, now)
                     rt.completed += len(st.batch.frames)
+                    if tr is not None:
+                        self._trace_done(st.batch, now, len(rt.history))
                 elif len(rt.queues[s + 1]) < self.caps[s + 1]:
                     enqueue(s + 1, st.batch)
                 else:
                     continue  # blocked: downstream full (stall)
+                if tr is not None and now > st.busy_until:
+                    self._trace_blocked(s, st, now, len(rt.history))
                 st.stall_cycles += now - st.busy_until
                 st.last_done = now
                 st.batch = None
@@ -1070,6 +1266,8 @@ class CNNStreamEngine:
                 st.busy_until = now + svc
                 st.busy_cycles += svc
                 st.intervals.append((now, now + svc))
+                if tr is not None:
+                    self._trace_start(s, batch, now, svc, len(rt.history))
                 if st.first_start is None:
                     st.first_start = now
                 st.batches_served += 1
@@ -1091,6 +1289,8 @@ class CNNStreamEngine:
                     req = rt.pending.popleft()
                     req.t_shed = now
                     rt.shed_rids.append(req.rid)
+                    if tr is not None:
+                        self._trace_shed(req, now)
                     progress = True
             # 3b. plan switching: pick the ladder rung for the observed
             # arrival rate; a decided switch first drains the pipeline
@@ -1119,6 +1319,8 @@ class CNNStreamEngine:
                     req = rt.pending.popleft()
                     req.t_admit = now
                     rt.forming.append(req)
+                    if tr is not None:
+                        self._trace_admit(req, now, len(rt.history))
                     progress = True
                 else:
                     break
@@ -1135,6 +1337,14 @@ class CNNStreamEngine:
                 and len(rt.queues[0]) < self.caps[0]
                 and (flush_due or (rt.arr_idx == rt.n and not rt.pending))
             ):
+                if tr is not None:
+                    self._tracer.instant(
+                        "flush",
+                        now / self.slot,
+                        pid=self._trace_pid,
+                        frames=len(rt.forming),
+                        reason="straggler" if flush_due else "stream_end",
+                    )
                 enqueue(0, _Batch(rt.next_bid, rt.forming, self._active))
                 rt.next_bid += 1
                 rt.forming = []
@@ -1257,6 +1467,8 @@ class CNNStreamEngine:
             ),
         )
         report._stage_intervals = intervals
+        report.trace = self._tracer
+        report.metrics = self.metrics
         return report
 
     # -- results -----------------------------------------------------------

@@ -15,7 +15,10 @@ groups:
   bound ``max_ticks``;
 * **flush / SLA / overload policy** — ``flush_after_ticks`` (straggler
   bound on partial micro-batches) and ``overload`` (``None``,
-  ``serving.overload.ShedPolicy``, or ``serving.overload.SwitchPolicy``).
+  ``serving.overload.ShedPolicy``, or ``serving.overload.SwitchPolicy``);
+* **observability** — ``trace`` / ``trace_pid`` / ``trace_chips``: the
+  opt-in ``obs.Tracer`` hookup (off by default and event-identical when
+  off; see ``docs/observability.md``).
 
 ``CNNStreamEngine(graph, params, plan, config)``, ``CNNApi.serve(...,
 config=...)``, ``serve_frames(..., config=...)``, and
@@ -66,6 +69,20 @@ class ServeConfig:
     # standalone engines may share one dict across runs to skip
     # re-tracing every stage per call.
     pipeline_cache: Optional[dict] = None
+    # -- observability (obs.trace / obs.metrics; docs/observability.md) ----
+    # None/False = off (the default — event-identical, zero-overhead),
+    # True = record into a fresh private obs.Tracer, or an obs.Tracer
+    # instance to share one trace across engines (what FleetScheduler
+    # does: every tenant writes into the fleet's tracer under its own
+    # pid).  When on, the engine also keeps an obs.MetricsRegistry per
+    # run (folded into ServeSummary.metrics).
+    trace: Any = None
+    # pid label this engine's trace events are recorded under;
+    # FleetScheduler overrides it with the tenant name.
+    trace_pid: str = "engine"
+    # optional {stage: chip label} tags stamped onto stage spans
+    # (FleetScheduler sets the pool assignment here).
+    trace_chips: Optional[Mapping[int, str]] = None
     # -- arrival source ----------------------------------------------------
     arrival: Any = Fraction(1)
     max_ticks: int = 1_000_000

@@ -58,6 +58,10 @@ class ServeSummary:
     # mean offered rate above BestRate: stalls are backpressure and
     # occupancy may idle below the mean-rate bound, not bugs
     overloaded: bool = False
+    # obs.MetricsRegistry.snapshot() of the run, when the engine ran
+    # with tracing on (None otherwise).  Excluded from compare/repr so
+    # the pinned row renderings above stay byte-identical.
+    metrics: object = dataclasses.field(default=None, compare=False, repr=False)
 
     @property
     def shed_fraction(self) -> float:

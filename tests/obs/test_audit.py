@@ -1,0 +1,183 @@
+"""Drift auditor + engine integration (obs/audit.py).
+
+The acceptance surface: with tracing ON the auditor reproduces every
+run-level verdict of the engine's ``ServeSummary`` from the trace
+alone; with tracing OFF the run is event-identical to an untraced one;
+and a deliberately tampered service time is flagged with a localized
+first-drift window.
+"""
+from fractions import Fraction as F
+
+import pytest
+
+from repro.core.graph import plan_graph
+from repro.models.registry import get_cnn_api
+from repro.obs import AuditError, Tracer, audit, audit_fleet
+from repro.serving import PlanLadder, ServeConfig, ShedPolicy, adversarial
+from repro.serving.cnn_stream import CNNStreamEngine, best_rate_frames
+
+FAMILIES = ("mobilenet_v2", "resnet18")
+
+
+def _run(family, n_stages, *, arrival_frac=F(1), n_frames=24, microbatch=4,
+         rate=F(3), trace=True, overload=None, scenario=None):
+    api = get_cnn_api(family)
+    cfg = api.make_config(input_hw=(32, 32), num_classes=10)
+    graph = cfg.graph()
+    plan = plan_graph(graph, rate, n_stages=n_stages)
+    arrival = (scenario if scenario is not None
+               else arrival_frac * best_rate_frames(plan))
+    eng = CNNStreamEngine(graph, None, plan, ServeConfig(
+        microbatch=microbatch, execute=False, arrival=arrival,
+        trace=trace, overload=overload))
+    for _ in range(n_frames):
+        eng.submit(None)
+    return eng.run(), graph, plan
+
+
+# ---------------------------------------------------------------------------
+# row reproduction + verdict agreement
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", FAMILIES)
+@pytest.mark.parametrize("arrival_frac", (F(1, 2), F(1), F(2)))
+def test_audit_reproduces_summary_verdicts(family, arrival_frac):
+    rep, _, _ = _run(family, 2, arrival_frac=arrival_frac)
+    ar = audit(rep.trace)
+    summary = rep.summary()
+    assert ar.matches(summary)
+    # bottleneck occupancy recomputed from spans is float-equal (both
+    # sides divide exact Fractions before the one float conversion)
+    assert (ar.rows[ar.bottleneck_row].measured_occupancy
+            == summary.bottleneck_occupancy)
+    assert [r.max_queue for r in ar.rows] == list(summary.max_queue)
+    assert ar.clean
+
+
+def test_audit_under_shed_policy_matches():
+    rep, _, _ = _run(
+        "resnet18", 2, arrival_frac=F(2), n_frames=48,
+        overload=ShedPolicy(deadline_ticks=F(24)))
+    ar = audit(rep.trace)
+    assert ar.shed > 0
+    assert ar.matches(rep.summary())
+
+
+def test_audit_localizes_backpressure_stall():
+    """The table8 adversarial overload: arrivals just above BestRate
+    back-pressure the upstream stage; the auditor names the exact
+    first stall tick from the blocked spans."""
+    api = get_cnn_api("resnet18")
+    graph = api.graph(api.make_config())
+    ladder = PlanLadder.build(
+        graph, F(5, 2), n_stages=2, rate_factors=(1, 2),
+        try_replicate=True)
+    plan = ladder.rungs[0].plan
+    eng = CNNStreamEngine(graph, None, plan, ServeConfig(
+        microbatch=4, execute=False,
+        arrival=adversarial(best_rate_frames(plan)), trace=True))
+    for _ in range(768):
+        eng.submit(None)
+    rep = eng.run()
+    summary = rep.summary()
+    assert not summary.stall_free and summary.overloaded
+    ar = audit(rep.trace)
+    assert ar.matches(summary)
+    assert ar.first_stall is not None
+    assert "stalled at tick" in ar.localization()
+    # the trace's summed blocked time equals the engine's stall ticks
+    total = sum((s.dur_ticks for s in ar.stalls), F(0))
+    assert float(total) == pytest.approx(summary.stall_ticks)
+
+
+def test_audit_needs_metadata_and_pid():
+    with pytest.raises(AuditError):
+        audit(Tracer())
+    rep, _, _ = _run("resnet18", 1)
+    with pytest.raises(AuditError):
+        audit(rep.trace, pid="nope")
+
+
+# ---------------------------------------------------------------------------
+# zero overhead when off
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_tracing_off_is_event_identical(family):
+    on, _, _ = _run(family, 3, arrival_frac=F(2), n_frames=48)
+    off, _, _ = _run(family, 3, arrival_frac=F(2), n_frames=48, trace=None)
+    assert off.trace is None and off.metrics is None
+    assert off.summary().metrics is None
+    assert off.summary().line() == on.summary().line()
+    assert off.summary().to_rows() == on.summary().to_rows()
+    # the full event timeline, not just the rendering
+    assert [(s.stage, s.rung, s.busy_cycles, s.stall_cycles)
+            for s in off.stages] == [
+        (s.stage, s.rung, s.busy_cycles, s.stall_cycles)
+        for s in on.stages]
+
+
+# ---------------------------------------------------------------------------
+# tamper detection
+# ---------------------------------------------------------------------------
+
+def _tamper_last_stage_end(trace, delta_ticks=1):
+    data = trace.to_chrome()
+    stage_e = [ev for ev in data["traceEvents"]
+               if ev.get("name") == "stage" and ev.get("ph") == "E"]
+    last = max(stage_e, key=lambda ev: F(ev["args"]["__t__"]))
+    t = F(last["args"]["__t__"]) + delta_ticks
+    last["args"]["__t__"] = f"{t.numerator}/{t.denominator}"
+    last["ts"] += float(delta_ticks)
+    return Tracer.from_chrome(data)
+
+
+def test_audit_flags_tampered_service_time():
+    rep, _, _ = _run("resnet18", 3, n_frames=48)
+    assert audit(rep.trace).clean
+    ar = audit(_tamper_last_stage_end(rep.trace))
+    assert not ar.clean
+    drift = ar.first_drift
+    assert drift is not None
+    assert "service" in drift.reason or "overlap" in drift.reason
+    assert "drifted at tick" in ar.localization()
+
+
+def test_audit_survives_chrome_roundtrip():
+    rep, _, _ = _run("mobilenet_v2", 2, arrival_frac=F(2), n_frames=48)
+    ar = audit(rep.trace)
+    ar_rt = audit(Tracer.from_chrome(rep.trace.dumps()))
+    assert ar_rt.verdict_line() == ar.verdict_line()
+    assert ar_rt.matches(rep.summary())
+
+
+# ---------------------------------------------------------------------------
+# fleet: shared tracer, per-tenant timelines
+# ---------------------------------------------------------------------------
+
+def test_fleet_shared_tracer_audits_every_tenant():
+    from repro.fleet import (
+        Chip, FleetScheduler, Tenant, TenantWorkload, chip_pool, plan_pool)
+
+    tenants = (
+        Tenant("alpha", "resnet18", F(1, 2), input_hw=(32, 32),
+               num_classes=10),
+        Tenant("beta", "mobilenet_v2", F(1, 2), input_hw=(32, 32),
+               num_classes=10),
+    )
+    pp = plan_pool(tenants, (Chip("big0", bram36=4096),) + chip_pool(4),
+                   s_options=(1, 2), try_replicate=True)
+    sched = FleetScheduler(pp, config=ServeConfig(execute=False, trace=True))
+    rep = sched.serve([
+        TenantWorkload("alpha", 24, arrival_rate=F(1)),
+        TenantWorkload("beta", 16, arrival_rate=F(1, 2))])
+    assert rep.trace is sched.tracer
+    assert sorted(rep.trace.meta) == ["alpha", "beta"]
+    audits = audit_fleet(rep.trace)
+    for name, ar in audits.items():
+        assert ar.matches(rep.reports[name].summary(label=name))
+    # stage spans carry the pool's chip assignment
+    chips = {s.arg("chip") for s in rep.trace.spans("stage", pid="alpha")}
+    assert chips == {a.chip for a in pp.assignments if a.tenant == "alpha"}
+    # tick model: no host-clock spans, so no measured fps
+    assert rep.tenant_wall_s == {}

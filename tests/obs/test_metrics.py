@@ -1,0 +1,74 @@
+"""Metrics registry unit tests (obs/metrics.py)."""
+from fractions import Fraction as F
+
+import pytest
+
+from repro.obs import MetricsError, MetricsRegistry, metric_key
+
+
+def test_metric_key_sorts_labels():
+    assert metric_key("q", {"stage": 1, "edge": "a->b"}) == (
+        "q{edge=a->b,stage=1}")
+    assert metric_key("q", {}) == "q"
+
+
+def test_counter_is_exact_and_monotonic():
+    reg = MetricsRegistry()
+    c = reg.counter("busy_ticks", stage=0)
+    c.inc(F(5, 3))
+    c.inc(F(1, 3))
+    assert reg.value("busy_ticks", stage=0) == F(2)  # exact, not float
+    with pytest.raises(MetricsError):
+        c.inc(-1)
+
+
+def test_counter_identity_per_label_set():
+    reg = MetricsRegistry()
+    a = reg.counter("frames", tenant="alpha")
+    b = reg.counter("frames", tenant="beta")
+    assert a is reg.counter("frames", tenant="alpha")
+    a.inc()
+    assert b.get() == 0
+
+
+def test_gauge_tracks_high_water():
+    reg = MetricsRegistry()
+    g = reg.gauge("queue_depth", stage=1)
+    g.set(3)
+    g.set(1)
+    assert g.get() == 1
+    assert g.max_value == 3
+    snap = reg.snapshot()
+    assert snap["queue_depth{stage=1}"] == 1
+    assert snap["queue_depth{stage=1}:max"] == 3
+
+
+def test_histogram_percentiles_are_nearest_rank():
+    reg = MetricsRegistry()
+    h = reg.histogram("latency_ticks")
+    for v in range(1, 101):
+        h.observe(float(v))
+    # nearest-rank: matches ServeReport._pct exactly
+    assert h.percentile(0.5) == 50.0
+    assert h.percentile(0.99) == 99.0
+    stats = h.get()
+    assert stats["count"] == 100
+    assert stats["min"] == 1.0 and stats["max"] == 100.0
+    assert stats["p50"] == 50.0 and stats["p99"] == 99.0
+
+
+def test_kind_clash_raises():
+    reg = MetricsRegistry()
+    reg.counter("frames")
+    with pytest.raises(MetricsError):
+        reg.gauge("frames")
+
+
+def test_snapshot_is_sorted_and_plain():
+    reg = MetricsRegistry()
+    reg.counter("b").inc()
+    reg.counter("a").inc(2)
+    snap = reg.snapshot()
+    assert list(snap)[:2] == sorted(list(snap)[:2])
+    assert "a" in reg and "zzz" not in reg
+    assert reg.value("nope") is None

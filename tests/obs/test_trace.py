@@ -1,0 +1,156 @@
+"""Span tracer invariants (obs/trace.py).
+
+The tracer's contract: every begin has an end (FIFO-paired per
+(pid, tid, name) track), exact rational timestamps survive the Chrome
+trace-event JSON round trip, and the per-frame lifecycle view over a
+real engine run shows exactly one stage span per pipeline stage the
+frame crossed.
+"""
+from fractions import Fraction as F
+
+import pytest
+
+from repro.core.graph import plan_graph
+from repro.models.registry import get_cnn_api
+from repro.obs import TraceError, Tracer, resolve_tracer
+from repro.serving import ServeConfig
+from repro.serving.cnn_stream import CNNStreamEngine, best_rate_frames
+
+FAMILIES = ("mobilenet_v2", "resnet18")
+
+
+def _traced_run(family, n_stages, *, n_frames=24, microbatch=4,
+                arrival=None, rate=F(3)):
+    api = get_cnn_api(family)
+    cfg = api.make_config(input_hw=(32, 32), num_classes=10)
+    graph = cfg.graph()
+    plan = plan_graph(graph, rate, n_stages=n_stages)
+    arrival = best_rate_frames(plan) if arrival is None else arrival
+    eng = CNNStreamEngine(graph, None, plan, ServeConfig(
+        microbatch=microbatch, execute=False, arrival=arrival, trace=True))
+    for _ in range(n_frames):
+        eng.submit(None)
+    return eng.run(), plan
+
+
+# ---------------------------------------------------------------------------
+# emission + query primitives
+# ---------------------------------------------------------------------------
+
+def test_span_pairing_is_fifo_per_track():
+    tr = Tracer()
+    tr.begin("work", F(0), pid="p", tid="t", bid=0)
+    tr.begin("work", F(1), pid="p", tid="t", bid=1)
+    tr.end("work", F(2), pid="p", tid="t")
+    tr.end("work", F(5), pid="p", tid="t")
+    spans = tr.spans("work")
+    assert [(s.start, s.end) for s in spans] == [(F(0), F(2)), (F(1), F(5))]
+    assert [s.arg("bid") for s in spans] == [0, 1]
+
+
+def test_unbalanced_spans_raise():
+    tr = Tracer()
+    tr.begin("work", F(0))
+    with pytest.raises(TraceError):
+        tr.spans()
+    with pytest.raises(TraceError):
+        tr.check_balanced()
+
+
+def test_resolve_tracer_contract():
+    assert resolve_tracer(None) is None
+    assert resolve_tracer(False) is None
+    fresh = resolve_tracer(True)
+    assert isinstance(fresh, Tracer)
+    shared = Tracer()
+    assert resolve_tracer(shared) is shared
+    with pytest.raises(TraceError):
+        resolve_tracer("yes")
+
+
+def test_counter_series_keeps_emit_order():
+    tr = Tracer()
+    tr.counter("depth", 2, F(3), pid="p", tid="t")
+    tr.counter("depth", 1, F(1), pid="p", tid="t")
+    assert tr.counter_series("depth", pid="p", tid="t") == [
+        (F(3), 2.0), (F(1), 1.0)]
+
+
+# ---------------------------------------------------------------------------
+# Chrome trace-event JSON round trip
+# ---------------------------------------------------------------------------
+
+def test_chrome_roundtrip_is_exact():
+    tr = Tracer()
+    tr.metadata("p", {"slot_cycles": "7/3"})
+    tr.span("stage", F(1, 3), F(7, 3), pid="p", tid="stage0",
+            frames=4, rids=(0, 1, 2, 3), ratio=F(5, 2))
+    tr.instant("done", F(7, 3), pid="p", rid=3)
+    tr.counter("queue_depth", 2, F(2), pid="p", tid="stage0")
+    back = Tracer.from_chrome(tr.to_chrome())
+    assert back.meta == tr.meta
+    assert len(back.events) == len(tr.events)
+    for a, b in zip(tr.events, back.events):
+        assert (a.name, a.ph, a.pid, a.tid, a.clock) == (
+            b.name, b.ph, b.pid, b.tid, b.clock)
+        assert a.t == b.t  # exact Fraction, not float ts
+        assert a.value == b.value
+    sp = back.spans("stage")[0]
+    assert sp.duration == F(2)
+    assert sp.arg("ratio") == F(5, 2)  # Fractions survive encoding
+    assert list(sp.arg("rids")) == [0, 1, 2, 3]
+
+
+def test_dumps_write_parse(tmp_path):
+    tr = Tracer()
+    tr.span("s", F(0), F(1), pid="p", tid="t")
+    path = tmp_path / "trace.json"
+    tr.write(str(path))
+    back = Tracer.from_chrome(path.read_text())
+    assert len(back.spans()) == 1
+
+
+# ---------------------------------------------------------------------------
+# engine-emitted traces
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", FAMILIES)
+@pytest.mark.parametrize("n_stages", (1, 2, 3))
+def test_engine_trace_is_balanced(family, n_stages):
+    rep, _ = _traced_run(family, n_stages)
+    rep.trace.check_balanced()
+    spans = rep.trace.spans("stage", clock="ticks")
+    assert spans, "engine emitted no stage spans"
+    assert all(s.duration > 0 for s in spans)
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+@pytest.mark.parametrize("n_stages", (1, 2, 3))
+def test_frame_span_count_equals_stages_crossed(family, n_stages):
+    """Every served frame's lifecycle shows exactly one stage span per
+    pipeline stage (single segment: no plan switch mid-run)."""
+    rep, _ = _traced_run(family, n_stages)
+    tr = rep.trace
+    n_frames = len(tr.select("submit", ph="i"))
+    assert n_frames == 24
+    for rid in range(n_frames):
+        spans = tr.frame_spans(rid)
+        assert len(spans) == n_stages
+        assert sorted(s.tid for s in spans) == [
+            f"stage{s}" for s in range(n_stages)]
+        # lifecycle ordering: admit <= first stage start < done
+        instants = {e.name: e.t for e in tr.frame_instants(rid)}
+        assert instants["admit"] <= spans[0].start
+        assert instants["done"] >= max(s.end for s in spans)
+
+
+def test_stage_span_service_is_frames_times_utilization():
+    """The deterministic tick model's sharpest invariant: a batch of n
+    frames occupies stage s for exactly n * utilization_s ticks."""
+    rep, plan = _traced_run("resnet18", 2)
+    tr = rep.trace
+    meta = tr.meta["engine"]
+    utils = [F(u) for u in meta["rungs"][0]["utilization"]]
+    for sp in tr.spans("stage", clock="ticks"):
+        s = int(sp.tid[len("stage"):])
+        assert sp.duration == sp.arg("frames") * utils[s]
